@@ -1,0 +1,130 @@
+"""Roofline analysis (assignment deliverable (g)): read the dry-run JSON
+records and derive the three-term roofline per (arch x shape x mesh).
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = ICI_bytes_per_chip / (links x link_bw)  [+ DCN term]
+
+Hardware constants are assignment-fixed (TPU v5e): 197 TFLOP/s bf16,
+819 GB/s HBM, 4 links x 50 GB/s ICI, 25 GB/s DCN per chip-pair row.
+HLO terms come from the loop-aware walker (launch/hlo_cost.py) recorded by
+launch/dryrun.py; MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference) with
+N = active non-embedding params.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9 * 4  # 4 links/chip participating
+DCN_BW = 25e9
+
+RESULTS = pathlib.Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = "single", tag: str = "") -> list[dict]:
+    d = RESULTS / mesh
+    if not d.exists():
+        return []
+    out = []
+    for p in sorted(d.glob("*.json")):
+        rec = json.loads(p.read_text())
+        if rec.get("tag", "") != tag:
+            continue
+        out.append(rec)
+    return out
+
+
+def roofline_row(rec: dict) -> dict | None:
+    """Three terms (seconds), dominant bottleneck, usefulness ratio."""
+    if rec.get("status") != "ok":
+        return {
+            "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+            "status": rec.get("status"), "reason": rec.get("reason",
+                                                           rec.get("error")),
+        }
+    hc = rec["hlo_cost"]
+    chips = rec["chips"]
+    t_comp = hc["flops"] / PEAK_FLOPS
+    # memory term from the fusion-optimistic byte count (hbm_min): the
+    # CPU-lowered HLO leaves elementwise ops unfused that TPU fuses, so the
+    # raw walker bytes overstate traffic 10-50x; both are recorded.
+    t_mem = hc.get("hbm_min", hc["hbm_bytes"]) / HBM_BW
+    t_mem_ub = hc["hbm_bytes"] / HBM_BW
+    # collective bytes in the walker are whole-program; per-chip wire bytes
+    # for ring collectives ~= payload_per_chip, and the walker already sees
+    # the per-chip partitioned module -> use directly
+    t_ici = hc["collective_bytes_ici"] / ICI_BW
+    t_dcn = hc["collective_bytes_dcn"] / DCN_BW
+    t_coll = t_ici + t_dcn
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    useful = rec["model_flops"] / max(hc["flops"] * chips, 1e-30)
+    # roofline fraction: useful model FLOP/s achieved vs fleet peak,
+    # at the overlap-optimistic step time
+    mfu = rec["model_flops"] / max(step_s * chips * PEAK_FLOPS, 1e-30)
+    mem = rec.get("memory") or {}
+    hbm_gb = (mem.get("argument_size_in_bytes", 0)
+              + mem.get("temp_size_in_bytes", 0)) / 2**30
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "status": "ok",
+        "t_compute_s": t_comp, "t_memory_s": t_mem,
+        "t_memory_ub_s": t_mem_ub,
+        "t_ici_s": t_ici, "t_dcn_s": t_dcn,
+        "dominant": dominant, "step_s": step_s,
+        "useful_ratio": useful, "mfu": mfu,
+        "hbm_gb_per_chip": hbm_gb,
+        "fits_16gb": hbm_gb <= 16.0,
+        "compile_s": rec.get("compile_s"),
+    }
+
+
+def table(mesh: str = "single", tag: str = "") -> list[dict]:
+    return [r for r in (roofline_row(rec) for rec in load_cells(mesh, tag))
+            if r is not None]
+
+
+def markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | compute s | memory s | ici s | dcn s | "
+           "dominant | useful | MFU | HBM GiB | fits |")
+    sep = "|" + "---|" * 11
+    lines = [hdr, sep]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | — | — | — | — | "
+                f"{r['status']}: {str(r.get('reason'))[:60]} | | | | |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3f} | "
+            f"{r['t_memory_s']:.3f} | {r['t_ici_s']:.3f} | "
+            f"{r['t_dcn_s']:.3f} | {r['dominant']} | "
+            f"{r['useful_ratio']:.2f} | {r['mfu']:.3f} | "
+            f"{r['hbm_gb_per_chip']:.1f} | "
+            f"{'yes' if r['fits_16gb'] else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    for mesh in ("single", "multi"):
+        rows = table(mesh)
+        if not rows:
+            print(f"[roofline] no dry-run records for mesh={mesh}")
+            continue
+        print(f"\n== Roofline ({mesh}-pod) ==")
+        print(markdown(rows))
+        ok = [r for r in rows if r["status"] == "ok"]
+        if ok:
+            worst = min(ok, key=lambda r: r["mfu"])
+            print(f"\nworst MFU: {worst['arch']} x {worst['shape']} "
+                  f"({worst['mfu']:.4f})")
+            coll = max(ok, key=lambda r: r["t_ici_s"] + r["t_dcn_s"])
+            print(f"most collective-bound: {coll['arch']} x {coll['shape']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""XaaS multi-provider deployment example: ONE container recipe deployed to
+two different provider profiles (the paper's core portability story).
+
+The same traced program (the shipped "IR container") is specialized per
+target: hook bindings differ (portable jnp vs blocked tier), and the
+deployment compiler caches both stages — a warm re-deploy is ~instant.
+
+    PYTHONPATH=src python examples/xaas_deploy.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.core import container as xc
+from repro.core import hooks, recompile
+from repro.models import transformer
+
+
+def lm_container(cfg):
+    """A performance-portable container for one assigned arch's forward."""
+    b, s = 2, 64
+
+    def fwd(params, tokens):
+        logits, _ = transformer.forward(params, cfg, tokens)
+        return logits
+
+    def make_args(mesh):
+        params = jax.eval_shape(
+            lambda: transformer.init_model(jax.random.key(0), cfg))
+        toks = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        return (params, toks), {}, {}
+
+    return xc.XContainer(name=f"lm-{cfg.name}",
+                         entrypoints={"forward": (fwd, make_args)})
+
+
+def main():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    cont = lm_container(cfg)
+
+    # provider A: the portability floor (pure jnp reference everywhere)
+    floor = recompile.PORTABLE_CPU
+    # provider B: a "system-optimized" site advertising the blocked tier
+    optimized = dataclasses.replace(
+        floor, name="cpu-blocked-site", providers=("xla-blocked",))
+
+    deployments = {}
+    for prof in (floor, optimized):
+        t0 = time.perf_counter()
+        dep = cont.deploy(prof)
+        dt = time.perf_counter() - t0
+        deployments[prof.name] = dep
+        art = dep.artifact("forward")
+        print(f"deployed {cont.name} -> {prof.name} in {dt:.2f}s | "
+              f"hooks: attention={dep.providers()['attention']} | "
+              f"flops={art.flops:.3g}")
+
+    # warm re-deploy: the compiled artifact is cached per (IR, profile)
+    t0 = time.perf_counter()
+    cont.deploy(floor)
+    print(f"warm re-deploy: {time.perf_counter() - t0:.4f}s (cache hit)")
+
+    # same numerics across providers (the hook ABI contract)
+    params = transformer.init_model(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab_size)
+    outs = {name: np.asarray(dep("forward", params, toks))
+            for name, dep in deployments.items()}
+    a, b = outs.values()
+    print(f"cross-provider max |Δlogits| = {np.max(np.abs(a - b)):.2e}")
+    assert np.max(np.abs(a - b)) < 1e-3
+    print("xaas_deploy OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: XaaS — Acceleration as a Service — as a JAX/TPU framework."""
+from repro.kernels import ref as _ref  # noqa: F401  (registers portable hook impls)
+
+__version__ = "1.0.0"

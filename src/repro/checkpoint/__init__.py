@@ -1,0 +1,2 @@
+"""Checkpoint substrate: async sharded store with elastic restore."""
+from repro.checkpoint.store import CheckpointStore  # noqa: F401

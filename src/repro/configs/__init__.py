@@ -1,0 +1,47 @@
+"""Architecture config registry: the 10 assigned archs by --arch id."""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (  # noqa: F401
+    SHAPES,
+    ArchConfig,
+    LayerSpec,
+    MLAConfig,
+    MoEConfig,
+    RGLRUConfig,
+    ShapeSpec,
+    XLSTMConfig,
+    shape_applicable,
+    smoke_variant,
+)
+
+_ARCH_MODULES: dict[str, str] = {
+    "llava-next-34b": "llava_next_34b",
+    "xlstm-1.3b": "xlstm_1_3b",
+    "granite-34b": "granite_34b",
+    "qwen2.5-14b": "qwen2_5_14b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "command-r-plus-104b": "command_r_plus_104b",
+    "moonshot-v1-16b-a3b": "moonshot_v1_16b_a3b",
+    "deepseek-v3-671b": "deepseek_v3_671b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "musicgen-medium": "musicgen_medium",
+}
+
+ARCH_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch_id: str) -> ArchConfig:
+    if arch_id.endswith("-smoke"):
+        return smoke_variant(get_config(arch_id[: -len("-smoke")]))
+    if arch_id not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(f"repro.configs.{_ARCH_MODULES[arch_id]}")
+    return mod.CONFIG
+
+
+def get_shape(shape_id: str) -> ShapeSpec:
+    if shape_id not in SHAPES:
+        raise KeyError(f"unknown shape {shape_id!r}; known: {sorted(SHAPES)}")
+    return SHAPES[shape_id]

@@ -1,0 +1,206 @@
+"""Architecture config system.
+
+An ArchConfig fully determines the model: layer pattern (mixers + FFNs),
+dimensions, positional scheme, and family-specific sub-configs (MoE, MLA,
+RG-LRU, xLSTM, frontend stubs). Layer layout = `prefix` (unrolled,
+heterogeneous head) followed by `pattern` repeated `scan_repeats` times
+(stacked + lax.scan for flat HLO at any depth):
+
+    num_layers == len(prefix) + len(pattern) * scan_repeats
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+MIXERS = ("global_attn", "local_attn", "mla", "rglru", "mlstm", "slstm")
+FFNS = ("swiglu", "geglu", "gelu_mlp", "moe", "none")
+
+
+@dataclass(frozen=True)
+class LayerSpec:
+    mixer: str
+    ffn: str
+
+    def __post_init__(self):
+        assert self.mixer in MIXERS, self.mixer
+        assert self.ffn in FFNS, self.ffn
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_expert: int
+    num_shared_experts: int = 0
+    d_shared: int = 0  # per shared expert ff dim
+    capacity_factor: float = 1.25
+    aux_loss_coef: float = 0.001
+    # DeepSeek-V3 auxiliary-loss-free load balancing (bias on router logits)
+    bias_routing: bool = False
+
+
+@dataclass(frozen=True)
+class MLAConfig:
+    q_lora_rank: int
+    kv_lora_rank: int
+    qk_nope_head_dim: int
+    qk_rope_head_dim: int
+    v_head_dim: int
+
+
+@dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int  # recurrent state width
+    conv_width: int = 4
+    c: float = 8.0  # Griffin's fixed recurrence exponent scale
+
+
+@dataclass(frozen=True)
+class XLSTMConfig:
+    mlstm_proj_factor: float = 2.0
+    slstm_proj_factor: float = 4.0 / 3.0
+    conv_width: int = 4
+    chunk_size: int = 256
+    # official xLSTM qkv_proj_blocksize: q/k/v are block-diagonal (near-banded)
+    # projections — this is what makes the 1.3B config actually 1.3B.
+    qkv_block_size: int = 4
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | ssm | hybrid | vlm | audio
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0  # 0 -> d_model // num_heads
+    dense_d_ff: int = 0  # ff dim of *dense* layers in MoE archs (0 -> d_ff)
+    # layer layout
+    prefix: tuple[LayerSpec, ...] = ()
+    pattern: tuple[LayerSpec, ...] = (LayerSpec("global_attn", "swiglu"),)
+    # attention details
+    qkv_bias: bool = False
+    tie_embeddings: bool = False
+    parallel_residual: bool = False  # cohere-style attn || ffn
+    pos: str = "rope"  # rope | sinusoidal | none
+    rope_theta: float = 10000.0
+    local_window: int = 2048
+    logit_softcap: float | None = None
+    norm: str = "rmsnorm"  # rmsnorm | layernorm
+    embed_scale: bool = False  # gemma-style sqrt(d) input scaling
+    # family sub-configs
+    moe: MoEConfig | None = None
+    mla: MLAConfig | None = None
+    rglru: RGLRUConfig | None = None
+    xlstm: XLSTMConfig | None = None
+    # modality frontend stub: None | "vlm" | "audio"
+    frontend: str | None = None
+    num_image_tokens: int = 2928  # llava-next anyres: base 576 + 4 tiles + sep
+    num_codebooks: int = 1  # musicgen EnCodec codebooks
+    # sub-quadratic? (drives long_500k applicability)
+    subquadratic: bool = False
+    # numerics
+    param_dtype: str = "bfloat16"
+    activ_dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        scanned = self.num_layers - len(self.prefix)
+        assert scanned >= 0 and len(self.pattern) > 0
+        assert scanned % len(self.pattern) == 0, (
+            f"{self.name}: {scanned} scanned layers not divisible by "
+            f"pattern period {len(self.pattern)}"
+        )
+        assert self.num_heads % self.num_kv_heads == 0
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def scan_repeats(self) -> int:
+        return (self.num_layers - len(self.prefix)) // len(self.pattern)
+
+    def layer_specs(self) -> list[LayerSpec]:
+        return list(self.prefix) + list(self.pattern) * self.scan_repeats
+
+    # ---- parameter counting (for MODEL_FLOPS and accounting) ----
+    def param_counts(self) -> dict[str, int]:
+        """Analytic parameter counts: total and active-per-token."""
+        from repro.models import transformer  # local import to avoid cycle
+
+        return transformer.param_counts(self)
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+    @property
+    def is_serving(self) -> bool:
+        return self.kind in ("prefill", "decode")
+
+
+SHAPES: dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: ShapeSpec) -> tuple[bool, str]:
+    """Is this (arch, shape) cell runnable? Returns (ok, reason_if_not)."""
+    if shape.name == "long_500k" and not cfg.subquadratic:
+        return False, (
+            "pure full-attention arch: 524k dense KV cache is out of scope; "
+            "long_500k runs only for SSM/hybrid archs (see DESIGN.md §3)"
+        )
+    return True, ""
+
+
+def smoke_variant(cfg: ArchConfig) -> ArchConfig:
+    """Reduced same-family config for CPU smoke tests: keeps every structural
+    feature (pattern, MoE/MLA/RG-LRU/xLSTM, frontends) at toy width/depth."""
+    period = len(cfg.pattern)
+    n_prefix = len(cfg.prefix)
+    layers = n_prefix + period * min(2, cfg.scan_repeats)
+    hd = 16
+    kv = min(cfg.num_kv_heads, 2)
+    heads = kv * min(4, cfg.num_heads // cfg.num_kv_heads)
+    d = 64
+    changes: dict = dict(
+        name=cfg.name + "-smoke",
+        num_layers=layers,
+        d_model=d,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=hd,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=256,
+        local_window=16,
+        num_image_tokens=8,
+        param_dtype="float32",
+        activ_dtype="float32",
+    )
+    if cfg.dense_d_ff:
+        changes["dense_d_ff"] = 128
+    if cfg.moe:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=8, top_k=min(cfg.moe.top_k, 2), d_expert=32,
+            d_shared=32 if cfg.moe.num_shared_experts else 0)
+    if cfg.mla:
+        changes["mla"] = MLAConfig(
+            q_lora_rank=32, kv_lora_rank=32, qk_nope_head_dim=hd,
+            qk_rope_head_dim=8, v_head_dim=hd)
+    if cfg.rglru:
+        changes["rglru"] = dataclasses.replace(cfg.rglru, lru_width=d)
+    if cfg.xlstm:
+        changes["xlstm"] = dataclasses.replace(cfg.xlstm, chunk_size=8)
+    return dataclasses.replace(cfg, **changes)

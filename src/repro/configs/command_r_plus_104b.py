@@ -1,0 +1,23 @@
+"""command-r-plus-104b [dense] — cohere-style parallel attn||FFN, no biases.
+
+64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000
+[hf:CohereForAI/c4ai-command-r-v01; unverified]
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    num_layers=64,
+    d_model=12288,
+    num_heads=96,
+    num_kv_heads=8,
+    d_ff=33792,
+    vocab_size=256000,
+    pattern=(LayerSpec("global_attn", "swiglu"),),
+    qkv_bias=False,
+    parallel_residual=True,
+    pos="rope",
+    rope_theta=75_000_000.0,
+    norm="layernorm",
+)

@@ -1,0 +1,44 @@
+"""deepseek-v3-671b [moe] — MLA + 1 shared + 256 routed top-8 experts.
+
+61L d_model=7168 128H d_ff=2048(expert) vocab=129280  [arXiv:2412.19437; hf]
+
+The assignment's "GQA kv=128" is MLA with 128 heads (no KV grouping) —
+implemented as true MLA (q_lora 1536, kv_lora 512, nope 128 + rope 64,
+v 128). First 3 layers are dense SwiGLU with d_ff=18432. Routing is
+aux-loss-free (bias on router logits, nudged outside the gradient). The
+MTP-1 head is available via training.mtp (optional, off in the dry-run).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MLAConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="deepseek-v3-671b",
+    family="moe",
+    num_layers=61,
+    d_model=7168,
+    num_heads=128,
+    num_kv_heads=128,
+    d_ff=2048,
+    dense_d_ff=18432,
+    vocab_size=129280,
+    prefix=tuple([LayerSpec("mla", "swiglu")] * 3),
+    pattern=(LayerSpec("mla", "moe"),),
+    qkv_bias=False,
+    pos="rope",
+    rope_theta=10_000.0,
+    norm="rmsnorm",
+    moe=MoEConfig(
+        num_experts=256,
+        top_k=8,
+        d_expert=2048,
+        num_shared_experts=1,
+        d_shared=2048,
+        bias_routing=True,
+    ),
+    mla=MLAConfig(
+        q_lora_rank=1536,
+        kv_lora_rank=512,
+        qk_nope_head_dim=128,
+        qk_rope_head_dim=64,
+        v_head_dim=128,
+    ),
+)

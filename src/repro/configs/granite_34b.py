@@ -1,0 +1,25 @@
+"""granite-34b [dense] — Granite Code 34B, GPT-BigCode lineage, MQA.
+
+88L d_model=6144 48H (GQA kv=1) d_ff=24576 vocab=49152  [arXiv:2405.04324; hf]
+
+Deepest assigned arch (88 layers) — scan-over-layers keeps HLO size flat.
+FFN is the non-gated GELU MLP of the GPT-BigCode family: that is what makes
+this config 34B (a gated SwiGLU at d_ff=24576 would be 47B).
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="granite-34b",
+    family="dense",
+    num_layers=88,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=1,
+    d_ff=24576,
+    vocab_size=49152,
+    pattern=(LayerSpec("global_attn", "gelu_mlp"),),
+    qkv_bias=False,
+    pos="rope",
+    rope_theta=10_000_000.0,
+    norm="rmsnorm",
+)

@@ -1,0 +1,28 @@
+"""llava-next-34b [vlm] — Yi-34B LM backbone + anyres vision STUB.
+
+60L d_model=7168 56H (GQA kv=8) d_ff=20480 vocab=64000
+[hf:llava-hf/llava-v1.6-mistral-7b-hf; unverified]
+
+The anyres vision tower is a stub: `input_specs()` supplies precomputed
+patch features (B, 2928, 1024); this config owns the mlp2x_gelu projector
+and the backbone. 2928 = 576 (base 24x24) + 4x576 (anyres tiles) + 48 (sep).
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="llava-next-34b",
+    family="vlm",
+    num_layers=60,
+    d_model=7168,
+    num_heads=56,
+    num_kv_heads=8,
+    d_ff=20480,
+    vocab_size=64000,
+    pattern=(LayerSpec("global_attn", "swiglu"),),
+    qkv_bias=False,
+    pos="rope",
+    rope_theta=5_000_000.0,
+    norm="rmsnorm",
+    frontend="vlm",
+    num_image_tokens=2928,
+)

@@ -1,0 +1,27 @@
+"""moonshot-v1-16b-a3b [moe] — kimi/moonlight-style, 64 experts top-6.
+
+48L d_model=2048 16H (GQA kv=16) d_ff=1408 vocab=163840, MoE 64e top-6
+[hf:moonshotai/Moonlight-16B-A3B; hf]
+
+Per the assignment spec all 48 layers are MoE (upstream Moonlight has a
+dense layer 0 + 2 shared experts; the assignment's config takes precedence —
+noted in DESIGN.md §Arch-applicability).
+"""
+from repro.configs.base import ArchConfig, LayerSpec, MoEConfig
+
+CONFIG = ArchConfig(
+    name="moonshot-v1-16b-a3b",
+    family="moe",
+    num_layers=48,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=1408,
+    vocab_size=163840,
+    pattern=(LayerSpec("global_attn", "moe"),),
+    qkv_bias=False,
+    pos="rope",
+    rope_theta=50_000.0,
+    norm="rmsnorm",
+    moe=MoEConfig(num_experts=64, top_k=6, d_expert=1408),
+)

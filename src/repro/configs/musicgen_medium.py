@@ -1,0 +1,27 @@
+"""musicgen-medium [audio] — decoder-only over EnCodec tokens.
+
+48L d_model=1536 24H (GQA kv=24) d_ff=6144 vocab=2048  [arXiv:2306.05284; hf]
+
+K=4 EnCodec codebooks: summed input embeddings, 4 parallel LM heads
+(vocab 2048 each). EnCodec itself is a STUB; the delay-pattern interleave is
+applied in the data pipeline. Sinusoidal positions, LayerNorm, GELU MLP
+(audiocraft decoder conventions).
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="musicgen-medium",
+    family="audio",
+    num_layers=48,
+    d_model=1536,
+    num_heads=24,
+    num_kv_heads=24,
+    d_ff=6144,
+    vocab_size=2048,
+    pattern=(LayerSpec("global_attn", "gelu_mlp"),),
+    qkv_bias=False,
+    pos="sinusoidal",
+    norm="layernorm",
+    frontend="audio",
+    num_codebooks=4,
+)

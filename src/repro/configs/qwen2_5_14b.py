@@ -1,0 +1,21 @@
+"""qwen2.5-14b [dense] — GQA with QKV bias.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=13824 vocab=152064  [hf:Qwen/Qwen2.5]
+"""
+from repro.configs.base import ArchConfig, LayerSpec
+
+CONFIG = ArchConfig(
+    name="qwen2.5-14b",
+    family="dense",
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=13824,
+    vocab_size=152064,
+    pattern=(LayerSpec("global_attn", "swiglu"),),
+    qkv_bias=True,
+    pos="rope",
+    rope_theta=1_000_000.0,
+    norm="rmsnorm",
+)

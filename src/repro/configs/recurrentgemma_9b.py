@@ -1,0 +1,38 @@
+"""recurrentgemma-9b [hybrid] — Griffin: RG-LRU + local attention, 1:2.
+
+38L d_model=4096 16H (GQA kv=1) d_ff=12288 vocab=256000  [arXiv:2402.19427]
+
+Layout: 2 recurrent blocks then (recurrent, recurrent, local_attn) x 12 —
+the Griffin 1:2 cycle (38 = 2 + 3*12; the repeating period starts two blocks
+in, which preserves the published ratio). GeGLU FFN, gemma embed scaling,
+local window 2048, MQA attention with 256-dim heads. RG-LRU state is O(1)
+=> runs long_500k.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, RGLRUConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    num_layers=38,
+    d_model=4096,
+    num_heads=16,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab_size=256000,
+    prefix=(LayerSpec("rglru", "geglu"), LayerSpec("rglru", "geglu")),
+    pattern=(
+        LayerSpec("rglru", "geglu"),
+        LayerSpec("rglru", "geglu"),
+        LayerSpec("local_attn", "geglu"),
+    ),
+    qkv_bias=False,
+    pos="rope",
+    rope_theta=10_000.0,
+    local_window=2048,
+    norm="rmsnorm",
+    embed_scale=True,
+    tie_embeddings=True,
+    rglru=RGLRUConfig(lru_width=4096),
+    subquadratic=True,
+)

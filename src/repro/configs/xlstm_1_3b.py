@@ -1,0 +1,26 @@
+"""xlstm-1.3b [ssm] — sLSTM + mLSTM blocks, xLSTM[7:1].
+
+48L d_model=2048 4H (GQA kv=4) d_ff=0 vocab=50304  [arXiv:2405.04517]
+
+d_ff=0: projection factors live inside the blocks (mLSTM pf=2, sLSTM ffn
+pf=4/3*2). Every 8th block is sLSTM. Pure recurrent state => runs long_500k.
+"""
+from repro.configs.base import ArchConfig, LayerSpec, XLSTMConfig
+
+_PERIOD = tuple([LayerSpec("mlstm", "none")] * 7 + [LayerSpec("slstm", "none")])
+
+CONFIG = ArchConfig(
+    name="xlstm-1.3b",
+    family="ssm",
+    num_layers=48,
+    d_model=2048,
+    num_heads=4,
+    num_kv_heads=4,
+    d_ff=0,
+    vocab_size=50304,
+    pattern=_PERIOD,
+    pos="none",
+    norm="rmsnorm",
+    xlstm=XLSTMConfig(),
+    subquadratic=True,
+)

@@ -1,0 +1,15 @@
+"""XaaS core — the paper's contribution as a composable JAX layer.
+
+Three Is (DESIGN.md §1):
+  Infrastructure — hooks.py (flexible hooked libraries), container.py
+      (performance-portable containers), recompile.py (deployment
+      recompilation: ship IR, specialize at the target).
+  Input/Output   — realized in distributed/ (ICI collectives) and
+      checkpoint/ (sharded async I/O); core consumes their artifacts.
+  Invocation     — scheduler.py (EASY backfill, interactive/batch/service
+      coexistence), invocation.py (rFaaS-style leases), accounting.py
+      (FaaS-grade fine-grained metering from compiled artifacts).
+"""
+from repro.core import hooks  # noqa: F401
+
+__all__ = ["hooks"]

@@ -1,0 +1,198 @@
+"""Accelerated-API hook registry — the XaaS 'flexible hooked libraries'.
+
+The paper's Infrastructure principle: a portable container exposes *named
+accelerated APIs* (BLAS, DNN, MPI, ...) whose concrete implementation is bound
+by the provider at deploy time, without the application being rewritten.
+
+Here every model compute hot-spot calls ``hooks.call("<api>", ...)``. Each API
+has:
+  * a fixed signature contract (the "ABI" the paper asks to standardize),
+  * a *portable* reference implementation (pure jnp — the paper's
+    lowest-common-denominator binary, always correct, runs anywhere XLA runs),
+  * zero or more *system-optimized* implementations (Pallas TPU kernels),
+    registered by provider tag and bound when a deployment's SystemProfile
+    says the target supports them.
+
+Binding is explicit and scoped (``with hooks.use(binding):``) so one process
+can hold deployments for several target systems — exactly the multi-provider
+story of the paper.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Any, Callable, Mapping
+
+__all__ = [
+    "AcceleratedAPI",
+    "Binding",
+    "HookError",
+    "register_api",
+    "register_impl",
+    "available_impls",
+    "bind",
+    "use",
+    "call",
+    "current_binding",
+    "get_api",
+    "list_apis",
+]
+
+
+class HookError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass(frozen=True)
+class Implementation:
+    provider: str
+    fn: Callable[..., Any]
+    # availability predicate over a SystemProfile (core.recompile.SystemProfile)
+    supports: Callable[[Any], bool]
+    priority: int = 0  # higher wins when several impls support a profile
+
+
+@dataclasses.dataclass
+class AcceleratedAPI:
+    name: str
+    signature: str  # human-readable ABI contract
+    reference: Callable[..., Any]
+    impls: dict[str, Implementation] = dataclasses.field(default_factory=dict)
+
+
+_REGISTRY: dict[str, AcceleratedAPI] = {}
+_LOCK = threading.Lock()
+
+
+class Binding(Mapping[str, Callable[..., Any]]):
+    """Immutable api-name -> implementation mapping for one deployment."""
+
+    def __init__(self, mapping: dict[str, Callable[..., Any]], label: str = "portable"):
+        self._mapping = dict(mapping)
+        self.label = label
+
+    def __getitem__(self, k: str) -> Callable[..., Any]:
+        return self._mapping[k]
+
+    def __iter__(self):
+        return iter(self._mapping)
+
+    def __len__(self):
+        return len(self._mapping)
+
+    def providers(self) -> dict[str, str]:
+        return {k: getattr(v, "__xaas_provider__", "portable") for k, v in self._mapping.items()}
+
+    def __repr__(self):
+        return f"Binding({self.label}: {self.providers()})"
+
+
+class _State(threading.local):
+    def __init__(self):
+        self.stack: list[Binding] = []
+
+
+_STATE = _State()
+
+
+def register_api(name: str, signature: str, reference: Callable[..., Any]) -> AcceleratedAPI:
+    with _LOCK:
+        if name in _REGISTRY:
+            raise HookError(f"accelerated API {name!r} already registered")
+        api = AcceleratedAPI(name=name, signature=signature, reference=reference)
+        _REGISTRY[name] = api
+        return api
+
+
+def register_impl(
+    api_name: str,
+    provider: str,
+    fn: Callable[..., Any],
+    *,
+    supports: Callable[[Any], bool] | None = None,
+    priority: int = 0,
+) -> None:
+    with _LOCK:
+        api = _REGISTRY.get(api_name)
+        if api is None:
+            raise HookError(f"unknown accelerated API {api_name!r}")
+        fn.__xaas_provider__ = provider  # type: ignore[attr-defined]
+        api.impls[provider] = Implementation(
+            provider=provider, fn=fn, supports=supports or (lambda profile: True), priority=priority
+        )
+
+
+def get_api(name: str) -> AcceleratedAPI:
+    api = _REGISTRY.get(name)
+    if api is None:
+        raise HookError(f"unknown accelerated API {name!r}")
+    return api
+
+
+def list_apis() -> list[str]:
+    return sorted(_REGISTRY)
+
+
+def available_impls(api_name: str, profile: Any = None) -> list[str]:
+    api = get_api(api_name)
+    out = ["portable"]
+    for impl in sorted(api.impls.values(), key=lambda i: -i.priority):
+        if profile is None or impl.supports(profile):
+            out.append(impl.provider)
+    return out
+
+
+def bind(profile: Any = None, *, overrides: Mapping[str, str] | None = None) -> Binding:
+    """Build a deployment binding: best available impl per API for `profile`.
+
+    `overrides` pins an API to a provider tag ("portable" or a registered
+    provider), mirroring the paper's per-site library pinning.
+    """
+    overrides = dict(overrides or {})
+    mapping: dict[str, Callable[..., Any]] = {}
+    label = getattr(profile, "name", "portable") if profile is not None else "portable"
+    for name, api in _REGISTRY.items():
+        choice = overrides.pop(name, None)
+        if choice == "portable":
+            mapping[name] = api.reference
+            continue
+        if choice is not None:
+            if choice not in api.impls:
+                raise HookError(f"no implementation {choice!r} for API {name!r}")
+            mapping[name] = api.impls[choice].fn
+            continue
+        best: Implementation | None = None
+        if profile is not None:
+            for impl in api.impls.values():
+                if impl.supports(profile) and (best is None or impl.priority > best.priority):
+                    best = impl
+        mapping[name] = best.fn if best is not None else api.reference
+    if overrides:
+        raise HookError(f"overrides for unknown APIs: {sorted(overrides)}")
+    return Binding(mapping, label=label)
+
+
+def current_binding() -> Binding | None:
+    return _STATE.stack[-1] if _STATE.stack else None
+
+
+@contextlib.contextmanager
+def use(binding: Binding):
+    _STATE.stack.append(binding)
+    try:
+        yield binding
+    finally:
+        _STATE.stack.pop()
+
+
+def call(api_name: str, *args, **kwargs):
+    """Invoke an accelerated API through the current deployment binding.
+
+    Outside any ``use()`` scope the portable reference runs — a container is
+    always runnable, just not specialized (the paper's portability floor).
+    """
+    binding = current_binding()
+    if binding is not None and api_name in binding:
+        return binding[api_name](*args, **kwargs)
+    return get_api(api_name).reference(*args, **kwargs)

@@ -1,0 +1,366 @@
+"""High-performance allocation & scheduling — the XaaS Invocation principle.
+
+The paper asks for allocation systems that (a) reduce waiting time, (b) let
+interactive and batch jobs coexist, (c) support "potentially large requests
+that need to launch thousands of container instances", (d) support run-forever
+services, and (e) are "decentralized or at least parallelized".
+
+This module implements a deterministic discrete-event cluster scheduler:
+
+  * resource model: a fleet of `chips` (TPU chips); jobs request a chip
+    count and a max runtime (walltime limit).
+  * job classes: INTERACTIVE (latency-sensitive, FaaS-style — jump the
+    queue, small), BATCH (run-to-completion, backfillable), SERVICE
+    (run-forever; holds chips until cancelled — the paper's "committing
+    some resources forever").
+  * policy: priority FCFS + **EASY backfilling** — the head-of-queue job
+    gets a reservation (earliest time enough chips free); any later job may
+    start now iff it fits in the free chips *and* does not delay that
+    reservation. This is the classic HPC utilization/fairness tradeoff the
+    paper references ("backfilling a gap that a waiting larger job may
+    cause").
+  * elasticity: jobs may declare ``min_chips``; under pressure the scheduler
+    starts them shrunk (elastic scale-down), growing at the next event — the
+    FaaS "scale to zero / scale out" behavior lifted to parallel jobs.
+  * the state machine is event-driven with no global clock sweep — event
+    handlers touch only per-job + free-pool state, which is what makes the
+    design "parallelizable" (shardable by pool) per the paper.
+
+It is a *simulator by construction* (virtual clock), but the same object
+drives the real launcher: `launch/train.py` submits itself as a job and the
+FT manager feeds real failure events in — one scheduler, simulated or live.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import heapq
+import itertools
+from typing import Callable, Iterator
+
+__all__ = ["JobClass", "JobState", "Job", "Cluster", "Event"]
+
+
+class JobClass(enum.IntEnum):
+    # ordering = queue priority (lower value served first)
+    INTERACTIVE = 0
+    SERVICE = 1
+    BATCH = 2
+
+
+class JobState(enum.Enum):
+    PENDING = "pending"
+    RUNNING = "running"
+    DONE = "done"
+    FAILED = "failed"
+    CANCELLED = "cancelled"
+
+
+@dataclasses.dataclass
+class Job:
+    job_id: int
+    tenant: str
+    klass: JobClass
+    chips: int  # requested
+    runtime_s: float  # estimated/declared runtime (walltime limit)
+    submit_s: float
+    min_chips: int = 0  # 0 -> rigid (min == requested)
+    state: JobState = JobState.PENDING
+    start_s: float | None = None
+    end_s: float | None = None
+    granted_chips: int = 0
+    preemptions: int = 0
+
+    def __post_init__(self):
+        if self.min_chips <= 0:
+            self.min_chips = self.chips
+
+    @property
+    def wait_s(self) -> float:
+        return (self.start_s if self.start_s is not None else 0.0) - self.submit_s
+
+    @property
+    def is_service(self) -> bool:
+        return self.klass == JobClass.SERVICE
+
+
+@dataclasses.dataclass(order=True)
+class Event:
+    time: float
+    seq: int
+    kind: str = dataclasses.field(compare=False)  # submit | finish | cancel | fail
+    job_id: int = dataclasses.field(compare=False)
+
+
+class Cluster:
+    """Discrete-event scheduler over a homogeneous chip fleet."""
+
+    def __init__(self, chips: int, *, backfill: bool = True):
+        self.total_chips = chips
+        self.free_chips = chips
+        self.backfill = backfill
+        self.now = 0.0
+        self.jobs: dict[int, Job] = {}
+        self.pending: list[int] = []  # queue order maintained on insert
+        self.running: set[int] = set()
+        self._events: list[Event] = []
+        self._seq = itertools.count()
+        self._id = itertools.count(1)
+        # metrics
+        self.utilization_chip_s = 0.0
+        self._last_util_t = 0.0
+        self.listeners: list[Callable[[str, Job], None]] = []
+
+    # ------------------------------------------------------------------
+    # submission API
+    # ------------------------------------------------------------------
+    def submit(
+        self,
+        *,
+        tenant: str,
+        chips: int,
+        runtime_s: float,
+        klass: JobClass = JobClass.BATCH,
+        min_chips: int = 0,
+        at: float | None = None,
+    ) -> Job:
+        if chips > self.total_chips:
+            raise ValueError(
+                f"job wants {chips} chips; cluster has {self.total_chips}")
+        job = Job(
+            job_id=next(self._id),
+            tenant=tenant,
+            klass=klass,
+            chips=chips,
+            runtime_s=runtime_s,
+            submit_s=self.now if at is None else at,
+            min_chips=min_chips,
+        )
+        self.jobs[job.job_id] = job
+        self._push(Event(job.submit_s, next(self._seq), "submit", job.job_id))
+        return job
+
+    def cancel(self, job_id: int, at: float | None = None) -> None:
+        self._push(Event(self.now if at is None else at, next(self._seq), "cancel", job_id))
+
+    def fail(self, job_id: int, at: float | None = None) -> None:
+        """External failure event (node crash) — consumed by ft/manager."""
+        self._push(Event(self.now if at is None else at, next(self._seq), "fail", job_id))
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
+    def _push(self, ev: Event) -> None:
+        heapq.heappush(self._events, ev)
+
+    def step(self) -> Event | None:
+        """Process one event; returns it (None if queue empty)."""
+        if not self._events:
+            return None
+        ev = heapq.heappop(self._events)
+        self._advance_clock(ev.time)
+        handler = getattr(self, f"_on_{ev.kind}")
+        handler(ev)
+        self._schedule_pass()
+        return ev
+
+    def run(self, until: float | None = None) -> None:
+        while self._events:
+            if until is not None and self._events[0].time > until:
+                self._advance_clock(until)
+                return
+            self.step()
+
+    def events_pending(self) -> bool:
+        return bool(self._events)
+
+    def _advance_clock(self, t: float) -> None:
+        if t < self.now:
+            t = self.now  # never go backwards (late-submitted events)
+        busy = self.total_chips - self.free_chips
+        self.utilization_chip_s += busy * (t - self.now)
+        self.now = t
+
+    # ------------------------------------------------------------------
+    # handlers
+    # ------------------------------------------------------------------
+    def _on_submit(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state != JobState.PENDING:
+            return
+        # insertion keeping class priority then FCFS
+        idx = len(self.pending)
+        for i, jid in enumerate(self.pending):
+            if self.jobs[jid].klass > job.klass:
+                idx = i
+                break
+        self.pending.insert(idx, job.job_id)
+
+    def _on_finish(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state != JobState.RUNNING:
+            return
+        self._release(job, JobState.DONE)
+
+    def _on_cancel(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state == JobState.PENDING:
+            self.pending.remove(job.job_id)
+            job.state = JobState.CANCELLED
+        elif job.state == JobState.RUNNING:
+            self._release(job, JobState.CANCELLED)
+
+    def _on_fail(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state == JobState.RUNNING:
+            self._release(job, JobState.FAILED)
+            for fn in self.listeners:
+                fn("fail", job)
+
+    def _release(self, job: Job, state: JobState) -> None:
+        self.free_chips += job.granted_chips
+        self.running.discard(job.job_id)
+        job.state = state
+        job.end_s = self.now
+        job.granted_chips = 0
+        for fn in self.listeners:
+            fn("release", job)
+
+    # ------------------------------------------------------------------
+    # scheduling pass: priority FCFS + EASY backfill + elastic shrink
+    # ------------------------------------------------------------------
+    def _start(self, job: Job, chips: int) -> None:
+        job.state = JobState.RUNNING
+        job.start_s = self.now
+        job.granted_chips = chips
+        self.free_chips -= chips
+        self.running.add(job.job_id)
+        self.pending.remove(job.job_id)
+        if not job.is_service:  # services run until cancelled
+            self._push(Event(self.now + job.runtime_s, next(self._seq), "finish", job.job_id))
+        for fn in self.listeners:
+            fn("start", job)
+
+    def _grow_elastic(self) -> None:
+        """Give spare chips to shrunk elastic running jobs (largest deficit
+        first) — scale-up half of elasticity."""
+        if self.free_chips == 0:
+            return
+        grows = sorted(
+            (j for j in (self.jobs[i] for i in self.running) if j.granted_chips < j.chips),
+            key=lambda j: j.granted_chips - j.chips,
+        )
+        for job in grows:
+            take = min(job.chips - job.granted_chips, self.free_chips)
+            if take > 0:
+                job.granted_chips += take
+                self.free_chips -= take
+                for fn in self.listeners:
+                    fn("grow", job)
+            if self.free_chips == 0:
+                return
+
+    def _earliest_free(self, need: int) -> float:
+        """Earliest virtual time at which `need` chips are simultaneously
+        free, assuming running jobs end at their walltime limits."""
+        if need <= self.free_chips:
+            return self.now
+        ends = sorted(
+            (
+                (j.start_s + j.runtime_s if not j.is_service else float("inf"), j.granted_chips)
+                for j in (self.jobs[i] for i in self.running)
+            ),
+        )
+        free = self.free_chips
+        for t, chips in ends:
+            free += chips
+            if free >= need:
+                return t
+        return float("inf")
+
+    def _schedule_pass(self) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            if not self.pending:
+                break
+            head = self.jobs[self.pending[0]]
+            if head.chips <= self.free_chips:
+                self._start(head, head.chips)
+                progressed = True
+                continue
+            if head.min_chips <= self.free_chips:
+                # elastic scale-down start
+                self._start(head, self.free_chips)
+                progressed = True
+                continue
+            if not self.backfill:
+                break
+            # EASY backfill: reserve for head; start any later job that
+            # fits now and ends before the reservation (or uses chips the
+            # reservation doesn't need).
+            t_res = self._earliest_free(head.chips)
+            # chips guaranteed free at t_res beyond head's need
+            for jid in list(self.pending[1:]):
+                job = self.jobs[jid]
+                fits_now = job.chips <= self.free_chips
+                if not fits_now:
+                    continue
+                ends_before = self.now + job.runtime_s <= t_res
+                spare_at_res = (
+                    self._free_at(t_res, excluding=None) - head.chips >= job.chips
+                )
+                if ends_before or spare_at_res or job.is_service and spare_at_res:
+                    self._start(job, job.chips)
+                    progressed = True
+                    break
+        self._grow_elastic()
+
+    def _free_at(self, t: float, excluding=None) -> int:
+        free = self.free_chips
+        for j in (self.jobs[i] for i in self.running):
+            if j is excluding or j.is_service:
+                continue
+            if j.start_s + j.runtime_s <= t:
+                free += j.granted_chips
+        return free
+
+    # ------------------------------------------------------------------
+    # metrics & invariants
+    # ------------------------------------------------------------------
+    @property
+    def busy_chips(self) -> int:
+        return self.total_chips - self.free_chips
+
+    def utilization(self) -> float:
+        if self.now <= 0:
+            return 0.0
+        return self.utilization_chip_s / (self.total_chips * self.now)
+
+    def mean_wait(self, klass: JobClass | None = None) -> float:
+        waits = [
+            j.wait_s
+            for j in self.jobs.values()
+            if j.start_s is not None and (klass is None or j.klass == klass)
+        ]
+        return sum(waits) / len(waits) if waits else 0.0
+
+    def check_invariants(self) -> None:
+        granted = sum(self.jobs[i].granted_chips for i in self.running)
+        assert granted + self.free_chips == self.total_chips, (
+            f"chip leak: {granted} granted + {self.free_chips} free "
+            f"!= {self.total_chips}")
+        assert 0 <= self.free_chips <= self.total_chips
+        for i in self.running:
+            j = self.jobs[i]
+            assert j.state == JobState.RUNNING
+            assert j.min_chips <= j.granted_chips <= j.chips
+        for i in self.pending:
+            assert self.jobs[i].state == JobState.PENDING
+        # priority order within queue
+        ks = [self.jobs[i].klass for i in self.pending]
+        assert ks == sorted(ks), f"queue priority violated: {ks}"
+
+    def drain(self) -> Iterator[Event]:
+        while self._events:
+            yield self.step()

@@ -1,0 +1,2 @@
+"""Data substrate: synthetic LM pipeline, host sharding, prefetch."""
+from repro.data import pipeline  # noqa: F401

@@ -1,0 +1,171 @@
+"""Data pipeline: deterministic synthetic LM streams, host-sharded loading,
+and background prefetch.
+
+Synthetic-but-structured data (zipf-distributed tokens with a first-order
+Markov mixture) gives the training loop a learnable signal without external
+datasets (the container is offline). The pipeline is *seeded by (stream,
+step, host)*, so:
+
+  * restart determinism: resuming from step k reproduces batch k exactly —
+    checkpoint/restart never replays or skips data (the FT invariant
+    tests/test_checkpoint.py asserts);
+  * host sharding: each host materializes only its slice of the global
+    batch (`host_slice`), the multi-host pattern on a real pod;
+  * elastic re-shard: the global batch for step k is independent of host
+    count, so a restart on fewer hosts sees the same token stream.
+
+Audio archs get (B, K, S) codebook tokens with the MusicGen delay pattern
+applied; VLM archs get a synthetic patch-embedding tensor alongside text.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+from typing import Iterator
+
+import numpy as np
+
+from repro.models import frontends
+
+__all__ = ["DataConfig", "SyntheticLM", "Prefetcher", "make_batch_specs"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    global_batch: int
+    seq_len: int
+    vocab_size: int
+    seed: int = 0
+    zipf_a: float = 1.3
+    markov_k: int = 8  # periodic copy structure: token[t] depends on t-k
+    # modality
+    num_codebooks: int = 0  # >0 -> audio (B, K, S)
+    num_image_tokens: int = 0  # >0 -> vlm patch embeds supplied
+    vis_dim: int = frontends.VIS_DIM
+
+
+class SyntheticLM:
+    """Deterministic per-step synthetic batches."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        # zipf over vocab, renormalized (static, shared by all steps)
+        c = self.cfg
+        ranks = np.arange(1, c.vocab_size + 1, dtype=np.float64)
+        p = ranks ** (-c.zipf_a)
+        self._p = p / p.sum()
+
+    def _rng(self, step: int, lane: int = 0) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.cfg.seed, step, lane]))
+
+    def _tokens(self, step: int, rows: int, lane: int = 0) -> np.ndarray:
+        """(rows, S+1): zipf draws with every k-th position copied from t-k
+        (learnable structure: a model that discovers the copy rule beats the
+        unigram entropy floor)."""
+        c = self.cfg
+        rng = self._rng(step, lane)
+        toks = rng.choice(c.vocab_size, size=(rows, c.seq_len + 1), p=self._p)
+        k = c.markov_k
+        if k > 0 and c.seq_len + 1 > k:
+            idx = np.arange(k, c.seq_len + 1)
+            copy_mask = (idx % k) == 0
+            toks[:, idx[copy_mask]] = toks[:, idx[copy_mask] - k]
+        return toks.astype(np.int32)
+
+    def batch(self, step: int, *, host_id: int = 0, num_hosts: int = 1) -> dict:
+        """Materialize this host's slice of global batch `step`."""
+        c = self.cfg
+        assert c.global_batch % num_hosts == 0
+        rows = c.global_batch // num_hosts
+        if c.num_codebooks:
+            planes = [
+                self._tokens(step, rows, lane=host_id * c.num_codebooks + j)
+                for j in range(c.num_codebooks)
+            ]
+            t = np.stack(planes, axis=1)  # (rows, K, S+1)
+            t = _delay_pattern(t)
+            return {"tokens": t[..., :-1], "labels": t[..., 1:]}
+        t = self._tokens(step, rows, lane=host_id)
+        out = {"tokens": t[:, :-1], "labels": t[:, 1:]}
+        if c.num_image_tokens:
+            rng = self._rng(step, lane=10_000 + host_id)
+            out["patch_embeds"] = rng.standard_normal(
+                (rows, c.num_image_tokens, c.vis_dim), dtype=np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+def _delay_pattern(t: np.ndarray) -> np.ndarray:
+    """MusicGen delay pattern: codebook j is shifted right by j steps so the
+    model predicts codebook j at time t given codebooks < j at time t.
+    t: (B, K, S). Pad slots get 0 (treated as a special token)."""
+    b, k, s = t.shape
+    out = np.zeros_like(t)
+    for j in range(k):
+        out[:, j, j:] = t[:, j, : s - j]
+    return out
+
+
+class Prefetcher:
+    """Background-thread prefetch: hides host data-gen under device compute
+    (the I/O half of the paper's communication/compute overlap, on the data
+    path into the container)."""
+
+    def __init__(self, source: SyntheticLM, *, start_step: int = 0, depth: int = 2,
+                 host_id: int = 0, num_hosts: int = 1):
+        self._src = source
+        self._q: queue.Queue = queue.Queue(maxsize=depth)
+        self._step = start_step
+        self._stop = threading.Event()
+        self._host = (host_id, num_hosts)
+        self._thread = threading.Thread(target=self._work, daemon=True)
+        self._thread.start()
+
+    def _work(self):
+        step = self._step
+        hid, nh = self._host
+        while not self._stop.is_set():
+            b = self._src.batch(step, host_id=hid, num_hosts=nh)
+            while not self._stop.is_set():
+                try:
+                    self._q.put((step, b), timeout=0.1)
+                    break
+                except queue.Full:
+                    continue
+            step += 1
+
+    def next(self) -> tuple[int, dict]:
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=2.0)
+
+
+def make_batch_specs(cfg, shape, *, dtype="int32"):
+    """ShapeDtypeStructs for a train batch of `shape` (dry-run stand-ins)."""
+    import jax
+    import jax.numpy as jnp
+
+    b, s = shape.global_batch, shape.seq_len
+    tok_shape = (b, cfg.num_codebooks, s) if cfg.frontend == "audio" else (b, s)
+    out = {
+        "tokens": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+        "labels": jax.ShapeDtypeStruct(tok_shape, jnp.int32),
+    }
+    if cfg.frontend == "vlm":
+        out["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_image_tokens, frontends.VIS_DIM), jnp.bfloat16)
+    return out

@@ -1,0 +1,2 @@
+"""Fault tolerance: failure injection, elastic restart, straggler policy."""
+from repro.ft.manager import FailureInjector, FTManager, StragglerPolicy  # noqa: F401

@@ -1,0 +1,175 @@
+"""Fault tolerance: failure detection/injection, elastic restart, straggler
+mitigation — the runtime half of the paper's reliability story.
+
+Paper context: HPC tolerates failures via checkpoint/restart; cloud engineers
+for availability. XaaS needs both: long-running parallel jobs (HPC mode) on
+infrastructure whose per-node failure rate at 1000+ nodes makes faults
+routine, serving users who expect availability (cloud mode).
+
+Components:
+
+  * ``FailureInjector`` — deterministic simulated fault source (this
+    container has one real device; the *control flow* is what we exercise).
+    Poisson node failures + heavy-tailed straggler step times, seeded.
+  * ``StragglerPolicy`` — step-time watchdog: an EWMA baseline; steps slower
+    than `threshold ×` baseline mark the step's slowest replica; `grace`
+    consecutive marks trigger mitigation (drop-replica = shrink, or
+    re-dispatch). This models the bulk-synchronous straggler problem the
+    paper's AI-training convergence case hits.
+  * ``FTManager`` — wraps a train loop: catches failure events, consults the
+    scheduler for the surviving allocation, re-meshes (possibly smaller),
+    restores the last committed checkpoint onto the new topology (elastic),
+    and resumes from the exact data step (pipeline determinism guarantees
+    no sample loss/replay).
+
+The same FTManager drives real deployments: `inject=None` and real exceptions
+(XLA device errors) become the failure events.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import numpy as np
+
+__all__ = ["FailureInjector", "FailureEvent", "StragglerPolicy", "FTManager",
+           "RunReport"]
+
+
+@dataclasses.dataclass(frozen=True)
+class FailureEvent:
+    step: int
+    kind: str  # "node_loss" | "straggler"
+    detail: str = ""
+
+
+class FailureInjector:
+    """Seeded fault model: per-step node-loss probability + lognormal
+    straggler tail on step time."""
+
+    def __init__(self, *, seed: int = 0, p_node_loss: float = 0.0,
+                 straggler_p: float = 0.0, straggler_mult: float = 4.0,
+                 base_step_s: float = 1.0):
+        self.rng = np.random.default_rng(seed)
+        self.p_node_loss = p_node_loss
+        self.straggler_p = straggler_p
+        self.straggler_mult = straggler_mult
+        self.base_step_s = base_step_s
+
+    def step_time(self, step: int) -> tuple[float, bool]:
+        """-> (simulated step seconds, is_straggler)."""
+        t = self.base_step_s * float(self.rng.lognormal(0.0, 0.05))
+        if self.rng.random() < self.straggler_p:
+            return t * self.straggler_mult, True
+        return t, False
+
+    def node_fails(self, step: int) -> bool:
+        return self.rng.random() < self.p_node_loss
+
+
+@dataclasses.dataclass
+class StragglerPolicy:
+    threshold: float = 2.0  # × EWMA baseline
+    grace: int = 2  # consecutive slow steps before mitigation
+    ewma: float = 0.1
+
+    _baseline: float = dataclasses.field(default=0.0, init=False)
+    _slow_run: int = dataclasses.field(default=0, init=False)
+
+    def observe(self, step_s: float) -> str | None:
+        """Feed one step time; returns a mitigation action or None."""
+        if self._baseline == 0.0:
+            self._baseline = step_s
+            return None
+        slow = step_s > self.threshold * self._baseline
+        # baseline learns only from non-outlier steps (else stragglers
+        # poison the reference)
+        if not slow:
+            self._baseline = (1 - self.ewma) * self._baseline + self.ewma * step_s
+            self._slow_run = 0
+            return None
+        self._slow_run += 1
+        if self._slow_run >= self.grace:
+            self._slow_run = 0
+            return "mitigate"
+        return None
+
+
+@dataclasses.dataclass
+class RunReport:
+    steps_done: int
+    restarts: int
+    mitigations: int
+    sim_time_s: float
+    events: list[FailureEvent]
+    final_metrics: dict
+
+
+class FTManager:
+    """Drives a fault-tolerant training run.
+
+    Collaborators (all injected, so tests can fake any of them):
+      make_step(mesh_size) -> (step_fn, state, start_data_step): builds the
+          (possibly re-meshed) training callables after (re)start, restoring
+          from the checkpoint store;
+      save(state, step): checkpoint hook (called every `ckpt_every`);
+      injector: fault source; policy: straggler watchdog.
+    """
+
+    def __init__(self, *, make_step: Callable, save: Callable,
+                 injector: FailureInjector | None = None,
+                 policy: StragglerPolicy | None = None,
+                 ckpt_every: int = 10,
+                 min_mesh: int = 1):
+        self.make_step = make_step
+        self.save = save
+        self.injector = injector or FailureInjector()
+        self.policy = policy or StragglerPolicy()
+        self.ckpt_every = ckpt_every
+        self.min_mesh = min_mesh
+
+    def run(self, total_steps: int, *, mesh_size: int) -> RunReport:
+        events: list[FailureEvent] = []
+        restarts = mitigations = 0
+        sim_time = 0.0
+        step_fn, state, data_step = self.make_step(mesh_size)
+        metrics: dict = {}
+        while data_step < total_steps:
+            # --- simulated fault plane ---
+            if self.injector.node_fails(data_step):
+                events.append(FailureEvent(data_step, "node_loss"))
+                restarts += 1
+                # elastic shrink: lose one node-equivalent, keep >= min_mesh
+                mesh_size = max(self.min_mesh, mesh_size - 1)
+                sim_time += 30.0  # restart cost (detection+re-mesh+restore)
+                step_fn, state, data_step = self.make_step(mesh_size)
+                continue
+            dt, straggled = self.injector.step_time(data_step)
+            action = self.policy.observe(dt)
+            if straggled:
+                events.append(FailureEvent(data_step, "straggler", f"{dt:.2f}s"))
+            if action == "mitigate":
+                mitigations += 1
+                # drop-slowest-replica: shrink by one, no restore needed for
+                # pure-DP replicas (grads are re-balanced next step); we
+                # model it as a cheap re-mesh.
+                if mesh_size > self.min_mesh:
+                    mesh_size -= 1
+                    sim_time += 5.0
+                    step_fn, state, data_step = self.make_step(mesh_size)
+                    continue
+            # --- real compute plane ---
+            state, metrics = step_fn(state, data_step)
+            sim_time += dt
+            data_step += 1
+            if data_step % self.ckpt_every == 0:
+                self.save(state, data_step)
+        self.save(state, data_step)
+        return RunReport(
+            steps_done=data_step,
+            restarts=restarts,
+            mitigations=mitigations,
+            sim_time_s=sim_time,
+            events=events,
+            final_metrics=metrics,
+        )

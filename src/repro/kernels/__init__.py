@@ -1,0 +1,4 @@
+# Pallas TPU kernels for the XaaS system-optimized hook implementations.
+# ref.py holds the portable (pure-jnp) oracles; ops.py registers the
+# system-optimized tiers (xla-blocked + pallas-tpu).
+from repro.kernels import ops, ref  # noqa: F401

@@ -1,0 +1,272 @@
+"""Dry-run cell construction: (arch x shape x mesh) -> lowerable program.
+
+A *cell* packages everything `jax.jit(...).lower()` needs for one assigned
+(architecture x input-shape) pair on one production mesh:
+
+  * the step function (train_step / prefill serve_step / decode serve_step)
+    with the deployment's hook binding + sharding rules baked in,
+  * ShapeDtypeStruct stand-ins for every input (``input_specs`` — no device
+    allocation; weights/caches never materialize),
+  * in/out shardings from the recipe's rule set,
+  * donation so caches/state update in place.
+
+This module performs NO device-count tricks itself — callers (dryrun.py)
+own XLA_FLAGS; cells are also reused at toy scale by tests/benchmarks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.configs import base as cfgbase
+from repro.core import hooks
+from repro.distributed import sharding as shd
+from repro.launch import mesh as meshlib
+from repro.launch import recipes as rec
+from repro.models import frontends, transformer
+from repro.training import train_step as ts
+
+__all__ = ["Cell", "build_cell", "input_specs", "DRYRUN_HOOKS", "cell_ids"]
+
+# The dry-run hook binding: memory-bounded XLA implementations. Pallas
+# kernels cannot lower for CPU stand-in devices; on TPU metal the deploy
+# profile binds pallas-tpu instead (see kernels/ops.py priorities).
+DRYRUN_HOOKS = {"attention": "xla-blocked", "mlstm": "xla-blocked"}
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: str
+    kind: str  # train | prefill | decode
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: Any
+    out_shardings: Any
+    donate_argnums: tuple[int, ...]
+    rules: shd.Rules
+    meta: dict
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        return self.jitted().lower(*self.args)
+
+
+def cell_ids() -> list[tuple[str, str]]:
+    """All 40 assigned (arch, shape) pairs, applicable or not."""
+    return [(a, s) for a in configs.ARCH_IDS for s in cfgbase.SHAPES]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def _named(mesh, tree):
+    isp = lambda x: isinstance(x, P)
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=isp)
+
+
+# ---------------------------------------------------------------------------
+# input_specs — ShapeDtypeStruct stand-ins for every model input
+# ---------------------------------------------------------------------------
+def input_specs(arch_id: str, shape_id: str) -> dict[str, jax.ShapeDtypeStruct]:
+    """The assignment-mandated entrypoint: weak-type-correct, shardable,
+    allocation-free stand-ins for one (arch, shape) cell's *data* inputs.
+    (Params/optimizer/cache trees are derived separately via eval_shape.)"""
+    cfg = configs.get_config(arch_id)
+    shape = cfgbase.SHAPES[shape_id]
+    b, s = shape.global_batch, shape.seq_len
+    out: dict[str, jax.ShapeDtypeStruct] = {}
+    if shape.kind == "train":
+        tok_shape = (b, cfg.num_codebooks, s) if cfg.frontend == "audio" else (b, s)
+        out["tokens"] = _sds(tok_shape, jnp.int32)
+        out["labels"] = _sds(tok_shape, jnp.int32)
+        if cfg.frontend == "vlm":
+            out["patch_embeds"] = _sds(
+                (b, cfg.num_image_tokens, frontends.VIS_DIM), jnp.bfloat16)
+    elif shape.kind == "prefill":
+        tok_shape = (b, cfg.num_codebooks, s) if cfg.frontend == "audio" else (b, s)
+        out["tokens"] = _sds(tok_shape, jnp.int32)
+        if cfg.frontend == "vlm":
+            out["patch_embeds"] = _sds(
+                (b, cfg.num_image_tokens, frontends.VIS_DIM), jnp.bfloat16)
+    else:  # decode: one new token against a seq_len cache
+        tok_shape = (b, cfg.num_codebooks) if cfg.frontend == "audio" else (b,)
+        out["tokens"] = _sds(tok_shape, jnp.int32)
+        out["lengths"] = _sds((b,), jnp.int32)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell builders
+# ---------------------------------------------------------------------------
+def build_cell(arch_id: str, shape_id: str, mesh: jax.sharding.Mesh,
+               *, hook_overrides: dict | None = None) -> Cell:
+    cfg = configs.get_config(arch_id)
+    shape = cfgbase.SHAPES[shape_id]
+    ok, why = cfgbase.shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch_id} x {shape_id} skipped: {why}")
+    multi_pod = "pod" in mesh.axis_names
+    recipe = rec.recipe_for(arch_id, shape_id)
+    rules = rec.rules_for(recipe, multi_pod=multi_pod,
+                          serving=shape.is_serving)
+    binding = hooks.bind(None, overrides=dict(
+        DRYRUN_HOOKS, **(hook_overrides or {})))
+    if shape.kind == "train":
+        return _train_cell(arch_id, cfg, shape, mesh, recipe, rules, binding,
+                           multi_pod)
+    if shape.kind == "prefill":
+        return _prefill_cell(arch_id, cfg, shape, mesh, recipe, rules, binding)
+    return _decode_cell(arch_id, cfg, shape, mesh, recipe, rules, binding)
+
+
+def _batch_specs(cfg, shape, mesh, rules):
+    """(arg dict of SDS, sharding dict) for the data inputs."""
+    specs = input_specs(cfg.name, shape.name)
+    shardings = {}
+    with shd.use_rules(rules, mesh):
+        for k, v in specs.items():
+            spec = shd.guarded_spec(v.shape, ("batch",) + (None,) * (v.ndim - 1))
+            shardings[k] = NamedSharding(mesh, spec)
+    return specs, shardings
+
+
+def _train_cell(arch_id, cfg, shape, mesh, recipe, rules, binding, multi_pod):
+    tcfg = rec.train_config_for(cfg, recipe, mesh=mesh, multi_pod=multi_pod)
+    step = ts.make_train_step(cfg, tcfg, multi_pod=multi_pod)
+
+    def fn(state, batch):
+        with shd.use_rules(rules, mesh), hooks.use(binding):
+            return step(state, batch)
+
+    state_shapes = jax.eval_shape(
+        lambda: ts.init_train_state(jax.random.key(0), cfg, tcfg))
+    with shd.use_rules(rules, mesh):
+        state_specs = ts.train_state_pspecs(state_shapes, mesh, tcfg)
+    state_shardings = _named(mesh, state_specs)
+    batch_sds, batch_shardings = _batch_specs(cfg, shape, mesh, rules)
+    repl = NamedSharding(mesh, P())
+    return Cell(
+        arch=arch_id, shape=shape.name, kind="train",
+        fn=fn,
+        args=(state_shapes, batch_sds),
+        in_shardings=(state_shardings, batch_shardings),
+        out_shardings=(state_shardings, repl),
+        donate_argnums=(0,),
+        rules=rules,
+        meta={"tcfg": tcfg, "recipe": recipe,
+              "microbatches": tcfg.microbatches},
+    )
+
+
+def _params_specs(cfg, mesh, rules):
+    param_shapes = jax.eval_shape(
+        lambda: transformer.init_model(jax.random.key(0), cfg))
+    with shd.use_rules(rules, mesh):
+        pspecs = shd.param_pspecs(param_shapes)
+    return param_shapes, _named(mesh, pspecs)
+
+
+def _total_seq(cfg, shape):
+    s = shape.seq_len
+    if cfg.frontend == "vlm":
+        s += cfg.num_image_tokens
+    return s
+
+
+def _prefill_cell(arch_id, cfg, shape, mesh, recipe, rules, binding):
+    max_len = _total_seq(cfg, shape)
+
+    def fn(params, batch):
+        with shd.use_rules(rules, mesh), hooks.use(binding):
+            logits, states, lengths = transformer.prefill(
+                params, cfg, batch["tokens"], max_len,
+                patch_embeds=batch.get("patch_embeds"))
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, states, lengths
+
+    param_shapes, param_shardings = _params_specs(cfg, mesh, rules)
+    batch_sds, batch_shardings = _batch_specs(cfg, shape, mesh, rules)
+    state_shapes = jax.eval_shape(
+        lambda: transformer.init_states(
+            cfg, shape.global_batch, max_len, jnp.dtype(cfg.activ_dtype)))
+    with shd.use_rules(rules, mesh):
+        state_specs = shd.state_pspecs(state_shapes)
+    baxes = meshlib.batch_axes(mesh)
+    tok_sh = NamedSharding(mesh, P(baxes))
+    nxt_sh = tok_sh if cfg.frontend != "audio" else NamedSharding(
+        mesh, P(baxes, None))
+    return Cell(
+        arch=arch_id, shape=shape.name, kind="prefill",
+        fn=fn,
+        args=(param_shapes, batch_sds),
+        in_shardings=(param_shardings, batch_shardings),
+        out_shardings=(nxt_sh, _named(mesh, state_specs), tok_sh),
+        donate_argnums=(),
+        rules=rules,
+        meta={"recipe": recipe, "max_len": max_len},
+    )
+
+
+def _decode_cell(arch_id, cfg, shape, mesh, recipe, rules, binding):
+    max_len = _total_seq(cfg, shape)
+    b = shape.global_batch
+
+    def fn(params, tokens, states, lengths):
+        with shd.use_rules(rules, mesh), hooks.use(binding):
+            logits, new_states = transformer.decode_step(
+                params, cfg, tokens, states, lengths)
+            nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            return nxt, new_states
+
+    param_shapes, param_shardings = _params_specs(cfg, mesh, rules)
+    state_shapes = jax.eval_shape(
+        lambda: transformer.init_states(
+            cfg, b, max_len, jnp.dtype(cfg.activ_dtype)))
+    with shd.use_rules(rules, mesh):
+        state_specs = shd.state_pspecs(state_shapes)
+    state_shardings = _named(mesh, state_specs)
+    data_sds = input_specs(arch_id, shape.name)
+    baxes = meshlib.batch_axes(mesh)
+    # long_500k has batch=1: not shardable over data — replicate (honest
+    # waste, recorded in the roofline; see DESIGN.md §3)
+    bentry = baxes if b % _axis_prod(mesh, baxes) == 0 else None
+    tok_sh = NamedSharding(mesh, P(bentry))
+    tok_in_sh = tok_sh if cfg.frontend != "audio" else NamedSharding(
+        mesh, P(bentry, None))
+    return Cell(
+        arch=arch_id, shape=shape.name, kind="decode",
+        fn=fn,
+        args=(param_shapes, data_sds["tokens"], state_shapes,
+              data_sds["lengths"]),
+        in_shardings=(param_shardings, tok_in_sh, state_shardings, tok_sh),
+        out_shardings=(tok_in_sh, state_shardings),
+        donate_argnums=(2,),
+        rules=rules,
+        meta={"recipe": recipe, "max_len": max_len},
+    )
+
+
+def _axis_prod(mesh, axes) -> int:
+    names = axes if isinstance(axes, tuple) else (axes,)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n = 1
+    for a in names:
+        n *= sizes[a]
+    return n

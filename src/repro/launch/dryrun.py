@@ -1,0 +1,183 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# ^ MUST precede every other import (jax locks device count on first init).
+# The 512 stand-in host devices exist ONLY in this process — smoke tests and
+# benches see the real single device.
+#
+# Multi-pod dry-run driver (assignment deliverable (e)):
+#   for every (architecture x input shape) cell and each production mesh,
+#   lower + compile the step program, print memory/cost analysis, parse the
+#   collective schedule out of the optimized HLO, and record everything to
+#   results/dryrun/<mesh>/<arch>__<shape>.json for §Roofline / §Perf.
+#
+# Usage:
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-0.5b \
+#       --shape train_4k --mesh single
+#   PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+
+from repro import configs
+from repro.configs import base as cfgbase
+from repro.launch import cells as cellslib
+from repro.launch import hlo_cost
+from repro.launch import mesh as meshlib
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# Analytic model FLOPs (roofline "useful compute" numerator)
+# ---------------------------------------------------------------------------
+def model_flops(arch_id: str, shape_id: str) -> float:
+    cfg = configs.get_config(arch_id)
+    shape = cfgbase.SHAPES[shape_id]
+    counts = cfg.param_counts()
+    n = counts["active_nonembed"]  # 6*N*D convention: non-embedding, active
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if cfg.frontend == "vlm" and shape.kind != "decode":
+        tokens += shape.global_batch * cfg.num_image_tokens
+    per_token = 6 * n if shape.kind == "train" else 2 * n
+    return float(per_token) * tokens
+
+
+# ---------------------------------------------------------------------------
+# One cell
+# ---------------------------------------------------------------------------
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str,
+             *, out_dir: pathlib.Path = RESULTS, verbose: bool = True,
+             tag: str = "", hook_overrides: dict | None = None) -> dict:
+    multi_pod = mesh_kind == "multi"
+    rec: dict = {
+        "arch": arch_id, "shape": shape_id, "mesh": mesh_kind, "tag": tag,
+        "chips": 512 if multi_pod else 256,
+    }
+    cfg = configs.get_config(arch_id)
+    shape = cfgbase.SHAPES[shape_id]
+    ok, why = cfgbase.shape_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _write(rec, out_dir, tag)
+        if verbose:
+            print(f"[skip] {arch_id} x {shape_id} ({mesh_kind}): {why}")
+        return rec
+
+    try:
+        mesh = meshlib.make_production_mesh(multi_pod=multi_pod)
+        t0 = time.perf_counter()
+        cell = cellslib.build_cell(arch_id, shape_id, mesh,
+                                   hook_overrides=hook_overrides)
+        build_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        lowered = cell.lower()
+        lower_s = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        compiled = lowered.compile()
+        compile_s = time.perf_counter() - t0
+
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        cost = dict(cost)
+        mem = None
+        try:
+            ma = compiled.memory_analysis()
+            if ma is not None:
+                mem = {
+                    k: int(getattr(ma, k))
+                    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                              "temp_size_in_bytes", "generated_code_size_in_bytes",
+                              "alias_size_in_bytes")
+                    if hasattr(ma, k)
+                }
+        except Exception as e:  # CPU backend may not implement it
+            mem = {"error": str(e)}
+        text = compiled.as_text()
+        # loop-aware per-device cost (primary roofline source; raw XLA
+        # cost_analysis under-counts while-loop bodies — see hlo_cost.py)
+        walk = hlo_cost.analyze(text)
+        mf = model_flops(arch_id, shape_id)
+        flops = walk.flops
+        rec.update(
+            status="ok",
+            build_s=round(build_s, 3), lower_s=round(lower_s, 3),
+            compile_s=round(compile_s, 3),
+            hlo_cost=walk.to_dict(),
+            xla_cost={k: float(v) for k, v in cost.items()
+                      if isinstance(v, (int, float)) and k in
+                      ("flops", "bytes accessed", "transcendentals")},
+            memory=mem,
+            model_flops=mf,
+            microbatches=cell.meta.get("microbatches"),
+            recipe=dataclasses.asdict(cell.meta["recipe"]),
+            hlo_bytes=len(text),
+        )
+        if verbose:
+            args_gb = (mem or {}).get("argument_size_in_bytes", 0) / 2**30
+            temp_gb = (mem or {}).get("temp_size_in_bytes", 0) / 2**30
+            useful = mf / max(flops * rec["chips"], 1e-30)
+            print(f"[ok] {arch_id} x {shape_id} ({mesh_kind}): "
+                  f"lower {lower_s:.1f}s compile {compile_s:.1f}s | "
+                  f"flops/dev {flops:.3e} useful {useful:.2f} | "
+                  f"coll ici {walk.collective_bytes('ici') / 2**30:.2f} "
+                  f"dcn {walk.collective_bytes('dcn') / 2**30:.2f} GiB | "
+                  f"mem args {args_gb:.2f} + temps {temp_gb:.2f} GiB/dev")
+    except Exception as e:
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[ERR] {arch_id} x {shape_id} ({mesh_kind}): {e}")
+    _write(rec, out_dir, tag)
+    return rec
+
+
+def _write(rec: dict, out_dir: pathlib.Path, tag: str = "") -> None:
+    d = out_dir / rec["mesh"]
+    d.mkdir(parents=True, exist_ok=True)
+    suffix = f"__{tag}" if tag else ""
+    path = d / f"{rec['arch']}__{rec['shape']}{suffix}.json"
+    path.write_text(json.dumps(rec, indent=1))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--shape", default=None, choices=list(cfgbase.SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true",
+                    help="run every (arch x shape) cell")
+    ap.add_argument("--tag", default="", help="variant tag for §Perf runs")
+    ap.add_argument("--out", default=str(RESULTS))
+    args = ap.parse_args()
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    if args.all:
+        pairs = cellslib.cell_ids()
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        pairs = [(args.arch, args.shape)]
+
+    out_dir = pathlib.Path(args.out)
+    n_ok = n_skip = n_err = 0
+    for mesh_kind in meshes:
+        for arch_id, shape_id in pairs:
+            rec = run_cell(arch_id, shape_id, mesh_kind, out_dir=out_dir,
+                           tag=args.tag)
+            n_ok += rec["status"] == "ok"
+            n_skip += rec["status"] == "skipped"
+            n_err += rec["status"] == "error"
+            jax.clear_caches()  # executables otherwise accumulate over 80 cells
+    print(f"dry-run: {n_ok} ok, {n_skip} documented skips, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,429 @@
+"""Loop-aware HLO cost model — the roofline instrument.
+
+``compiled.cost_analysis()`` counts every while-loop body ONCE (verified
+empirically: a scan of 10 matmuls reports one matmul's FLOPs). Our programs
+are scan-over-layers x scan-over-microbatches x scan-over-kv-blocks, so the
+official numbers under-count by orders of magnitude. This module walks the
+post-optimization HLO text instead and rolls costs up *with loop
+multiplicity*, which XLA conveniently records on each while op as
+``backend_config={"known_trip_count":{"n":...}}``.
+
+Per computation we accumulate:
+  * flops      — dot ops: 2 * |result| * |contracting dims| (from operand
+                 shapes); elementwise arithmetic: 1 flop/element (matmuls
+                 dominate; transcendental weighting is noise at model scale)
+  * hbm_bytes  — operand + result bytes at fusion boundaries (fusion
+                 internals live in registers/VMEM, the standard convention);
+                 gathers/scatters count data moved, not the full table
+  * collectives — result bytes per op kind, split ICI vs DCN by replica
+                 group analysis (pod axis = device-id stride `pod_size`)
+
+Validated in tests/test_hlo_cost.py against cost_analysis() on loop-free
+programs and against hand-computed scan costs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+
+import numpy as np
+
+__all__ = ["CostReport", "analyze", "parse_computations"]
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "e4m3": 1,
+    "e5m2": 1, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# opcodes that move no HBM bytes themselves
+_FREE_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "broadcast",
+    "reshape", "custom-call", "rng-bit-generator", "get-dimension-size",
+    "opt-barrier", "domain",
+}
+# elementwise-ish ops: 1 flop per output element
+_ARITH_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "exponential", "log", "tanh", "rsqrt", "sqrt", "power",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "floor",
+    "ceil", "round-nearest-afz", "round-nearest-even", "sign", "atan2",
+    "remainder", "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "exponential-minus-one", "log-plus-one", "cosine", "sine", "logistic",
+    "cbrt", "erf", "convert", "reduce", "reduce-window", "map",
+}
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    hbm_bytes: float = 0.0
+    # fusion-optimistic lower bound: only ops that MUST move HBM bytes on a
+    # well-fused TPU program count (dots, gathers/scatters, collectives);
+    # elementwise/layout ops are assumed fused into their consumers. The
+    # true traffic lies in [hbm_min, hbm_bytes] — CPU-lowered HLO leaves
+    # many converts/broadcasts unfused that TPU fuses, so hbm_bytes alone
+    # over-states the memory roofline term by ~10-50x.
+    hbm_min: float = 0.0
+    collectives: dict = dataclasses.field(
+        default_factory=lambda: {
+            fab: dict.fromkeys(COLLECTIVE_KINDS, 0.0) for fab in ("ici", "dcn")})
+    unknown_trip_counts: int = 0
+
+    def add(self, other: "CostReport", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.hbm_bytes += other.hbm_bytes * mult
+        self.hbm_min += other.hbm_min * mult
+        for fab in self.collectives:
+            for k in COLLECTIVE_KINDS:
+                self.collectives[fab][k] += other.collectives[fab][k] * mult
+        self.unknown_trip_counts += other.unknown_trip_counts
+
+    def collective_bytes(self, fabric: str | None = None) -> float:
+        if fabric is None:
+            return self.collective_bytes("ici") + self.collective_bytes("dcn")
+        return sum(self.collectives[fabric].values())
+
+    def to_dict(self) -> dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "hbm_min": self.hbm_min,
+            "collectives": self.collectives,
+            "collective_bytes_ici": self.collective_bytes("ici"),
+            "collective_bytes_dcn": self.collective_bytes("dcn"),
+            "unknown_trip_counts": self.unknown_trip_counts,
+        }
+
+
+# ---------------------------------------------------------------------------
+# Shape parsing
+# ---------------------------------------------------------------------------
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,<=\s]*)\]")
+
+
+def _shape_dims(shape: str) -> tuple[str, list[int]]:
+    m = _SHAPE_RE.match(shape.strip())
+    if not m:
+        return "opaque", []
+    dims = [int(d.strip().lstrip("<=")) for d in m.group(2).split(",")
+            if d.strip()]
+    return m.group(1), dims
+
+
+def _shape_bytes(shape: str) -> int:
+    shape = shape.strip()
+    if shape.startswith("("):  # tuple: sum elements
+        return sum(_shape_bytes(p) for p in _split_tuple(shape[1:-1]))
+    dt, dims = _shape_dims(shape)
+    n = 1
+    for d in dims:
+        n *= d
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _shape_elems(shape: str) -> int:
+    if shape.strip().startswith("("):
+        return sum(_shape_elems(p) for p in _split_tuple(shape.strip()[1:-1]))
+    _, dims = _shape_dims(shape)
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+def _split_tuple(s: str) -> list[str]:
+    parts, depth, cur = [], 0, ""
+    for ch in s:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append(cur)
+            cur = ""
+        else:
+            cur += ch
+    if cur.strip():
+        parts.append(cur)
+    return parts
+
+
+def _strip_layout(shape: str) -> str:
+    # f32[512,128]{1,0:T(8,128)} -> f32[512,128]
+    return re.sub(r"\{[^}]*\}", "", shape)
+
+
+# ---------------------------------------------------------------------------
+# HLO text parsing
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    line: str
+
+
+def parse_computations(hlo_text: str) -> dict[str, list[Instruction]]:
+    comps: dict[str, list[Instruction]] = {}
+    cur: list[Instruction] | None = None
+    for raw in hlo_text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("(" in line) and (
+                line.startswith("%") or line.startswith("ENTRY")):
+            name = line.split("(", 1)[0].replace("ENTRY", "").strip()
+            name = name.lstrip("%").split()[0]
+            cur = comps.setdefault(name, [])
+            if line.startswith("ENTRY"):
+                comps["__entry__"] = cur
+            continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None or "=" not in line:
+            continue
+        instr = _parse_instruction(line)
+        if instr is not None:
+            cur.append(instr)
+    return comps
+
+
+def _parse_instruction(line: str) -> Instruction | None:
+    line = line.lstrip()
+    if line.startswith("ROOT "):
+        line = line[5:]
+    if not line.startswith("%"):
+        return None
+    try:
+        name, rest = line.split("=", 1)
+    except ValueError:
+        return None
+    name = name.strip().lstrip("%")
+    rest = rest.strip()
+    # result type: tuple (...) or single shape token
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            depth += ch == "("
+            depth -= ch == ")"
+            if depth == 0:
+                break
+        result_type = rest[: i + 1]
+        rest = rest[i + 1:].strip()
+    else:
+        sp = rest.index(" ")
+        result_type = rest[:sp]
+        rest = rest[sp + 1:].strip()
+    if "(" not in rest:
+        return None
+    opcode = rest[: rest.index("(")].strip()
+    # operand list = first balanced paren group
+    depth = 0
+    start = rest.index("(")
+    for i in range(start, len(rest)):
+        depth += rest[i] == "("
+        depth -= rest[i] == ")"
+        if depth == 0:
+            break
+    opnd_str = rest[start + 1: i]
+    attrs = rest[i + 1:]
+    operands = re.findall(r"%([\w.\-]+)", opnd_str)
+    return Instruction(name, _strip_layout(result_type), opcode, operands,
+                       attrs, line)
+
+
+# ---------------------------------------------------------------------------
+# Cost walk
+# ---------------------------------------------------------------------------
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+# op_name fragments marking regions the pallas-tpu tier fuses into one
+# VMEM-resident kernel (jax.named_scope markers in kernels/ops.py)
+_KERNEL_REGION_RE = re.compile(
+    r"op_name=\"[^\"]*fused_(attention|mlstm)_kernel[^\"]*\"")
+_CALLS_RE = re.compile(r"calls=%([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_GROUPS_RE = re.compile(
+    r"replica_groups=(\{\{[^=]*?\}\}|\[[^]]*\](?:<=\[[^]]*\])?(?:T\([^)]*\))?)")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{\{(.*?)\}\}")
+_LHS_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+
+def _parse_groups(attr: str):
+    if attr.startswith("{{"):
+        return [[int(x) for x in g.split(",") if x.strip()]
+                for g in attr[2:-2].split("},{")]
+    m = re.match(r"\[([\d,]+)\](?:<=\[([\d,]+)\])?(?:T\(([\d,]+)\))?", attr)
+    if not m:
+        return None
+    gshape = [int(x) for x in m.group(1).split(",")]
+    if m.group(2) is None:
+        return [gshape]
+    dims = [int(x) for x in m.group(2).split(",")]
+    ids = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(3):
+        ids = ids.transpose([int(x) for x in m.group(3).split(",")])
+    return ids.reshape(gshape).tolist()
+
+
+def _fabric(instr: Instruction, pod_size: int) -> str:
+    gm = _GROUPS_RE.search(instr.attrs)
+    if gm:
+        groups = _parse_groups(gm.group(1))
+        if groups:
+            for g in groups:
+                if g and (max(g) // pod_size) != (min(g) // pod_size):
+                    return "dcn"
+    pm = _PAIRS_RE.search(instr.attrs)
+    if pm:
+        ids = [int(x) for x in re.findall(r"\d+", pm.group(1))]
+        for a, b in zip(ids[::2], ids[1::2]):
+            if a // pod_size != b // pod_size:
+                return "dcn"
+    return "ici"
+
+
+def analyze(hlo_text: str, *, pod_size: int = 256) -> CostReport:
+    comps = parse_computations(hlo_text)
+    types: dict[str, dict[str, str]] = {
+        cname: {i.name: i.result_type for i in instrs}
+        for cname, instrs in comps.items()
+    }
+    memo: dict[str, CostReport] = {}
+
+    def op_bytes(instr: Instruction, table: dict[str, str]) -> float:
+        return sum(_shape_bytes(table.get(o, "opaque[]")) for o in instr.operands)
+
+    def walk(cname: str) -> CostReport:
+        if cname in memo:
+            return memo[cname]
+        memo[cname] = CostReport()  # cycle guard
+        rep = CostReport()
+        table = types.get(cname, {})
+        for instr in comps.get(cname, ()):
+            oc = instr.opcode
+            if oc == "while":
+                body = _BODY_RE.search(instr.attrs)
+                cond = _COND_RE.search(instr.attrs)
+                tm = _TRIP_RE.search(instr.attrs)
+                trips = int(tm.group(1)) if tm else 1
+                if not tm:
+                    rep.unknown_trip_counts += 1
+                if body:
+                    rep.add(walk(body.group(1)), trips)
+                if cond:
+                    rep.add(walk(cond.group(1)), trips + 1)
+                continue
+            if oc == "conditional":
+                bm = _BRANCHES_RE.search(instr.attrs)
+                if bm:
+                    subs = [walk(b.strip().lstrip("%"))
+                            for b in bm.group(1).split(",")]
+                    if subs:  # upper bound: the costliest branch
+                        rep.add(max(subs, key=lambda r: r.flops))
+                continue
+            if oc in ("fusion", "call", "async-start"):
+                cm = _CALLS_RE.search(instr.attrs)
+                to = re.search(r"to_apply=%([\w.\-]+)", instr.attrs)
+                target = cm or to
+                result_b = _shape_bytes(instr.result_type)
+                boundary_b = op_bytes(instr, table) + result_b
+                if target:
+                    sub = walk(target.group(1))
+                    # flops/collectives roll up; HBM bytes are the smaller
+                    # of the boundary view (operands+result — right for
+                    # fused elementwise chains) and the body view (right
+                    # for gather fusions, which touch O(result), not the
+                    # whole table operand)
+                    rep.add(CostReport(flops=sub.flops, hbm_bytes=0.0,
+                                       hbm_min=sub.hbm_min,
+                                       collectives=sub.collectives))
+                    rep.unknown_trip_counts += sub.unknown_trip_counts
+                    rep.hbm_bytes += min(boundary_b,
+                                         sub.hbm_bytes + result_b)
+                else:
+                    rep.hbm_bytes += boundary_b
+                continue
+            if oc in COLLECTIVE_KINDS or any(
+                    oc == f"{k}-start" for k in COLLECTIVE_KINDS):
+                kind = oc.removesuffix("-start")
+                nbytes = _shape_bytes(instr.result_type)
+                rep.collectives[_fabric(instr, pod_size)][kind] += nbytes
+                rep.hbm_bytes += nbytes + op_bytes(instr, table)
+                rep.hbm_min += nbytes
+                continue
+            if oc.endswith("-done"):
+                continue
+            if oc == "dot":
+                out_elems = _shape_elems(instr.result_type)
+                lhs_type = table.get(instr.operands[0], "f32[]")
+                _, lhs_dims = _shape_dims(lhs_type)
+                cm = _LHS_CONTRACT_RE.search(instr.attrs)
+                contract = 1
+                if cm and cm.group(1):
+                    for d in cm.group(1).split(","):
+                        contract *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+                rep.flops += 2.0 * out_elems * contract
+                dot_b = op_bytes(instr, table) + _shape_bytes(instr.result_type)
+                rep.hbm_bytes += dot_b
+                # dots inside attention/mLSTM regions (identified by op_name
+                # metadata) are VMEM-resident in the deployed pallas-tpu
+                # tier (flash attention / chunked mLSTM): their score-matrix
+                # traffic never reaches HBM, so hbm_min credits the fusion
+                # and charges only the kernel's q/k/v/o boundary (counted
+                # once per region via the first dot's operands).
+                if _KERNEL_REGION_RE.search(instr.line):
+                    rep.hbm_min += op_bytes(instr, table) * 0.5
+                else:
+                    rep.hbm_min += dot_b
+                continue
+            if oc in ("gather", "dynamic-slice"):
+                rep.hbm_bytes += 2 * _shape_bytes(instr.result_type)
+                rep.hbm_min += 2 * _shape_bytes(instr.result_type)
+                continue
+            if oc in ("scatter", "dynamic-update-slice"):
+                upd = instr.operands[-1] if oc == "dynamic-update-slice" else (
+                    instr.operands[len(instr.operands) // 2])
+                rep.hbm_bytes += 2 * _shape_bytes(table.get(upd, "opaque[]"))
+                rep.hbm_min += 2 * _shape_bytes(table.get(upd, "opaque[]"))
+                continue
+            if oc in _FREE_OPS:
+                continue
+            if oc == "copy" or oc == "transpose" or oc == "sort" or oc in (
+                    "pad", "slice", "concatenate", "reverse",
+                    "dynamic-reshape", "select-and-scatter"):
+                rep.hbm_bytes += op_bytes(instr, table) + _shape_bytes(
+                    instr.result_type)
+                continue
+            if oc in _ARITH_OPS:
+                rep.flops += _shape_elems(instr.result_type)
+                rep.hbm_bytes += op_bytes(instr, table) + _shape_bytes(
+                    instr.result_type)
+                continue
+            # unknown op: count bytes conservatively
+            rep.hbm_bytes += op_bytes(instr, table) + _shape_bytes(
+                instr.result_type)
+        memo[cname] = rep
+        return rep
+
+    if "__entry__" not in comps:
+        raise ValueError("no ENTRY computation found in HLO text")
+    # resolve entry's real name (entry aliased under __entry__)
+    entry_rep = CostReport()
+    entry_name = next(
+        (n for n, il in comps.items()
+         if n != "__entry__" and il is comps["__entry__"]), "__entry__")
+    entry_rep.add(walk(entry_name))
+    return entry_rep

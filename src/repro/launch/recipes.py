@@ -1,0 +1,182 @@
+"""Deployment recipes: per-(arch x shape) sharding/optimizer/microbatch knobs.
+
+This is the XaaS provider-side tuning table — the paper's "system-specific
+set of accelerated APIs ... tuned to each target system and maintained by the
+provider" generalized to whole deployment recipes. The container (model
+recipe) is portable; THIS file is what the provider specializes per target.
+
+Every knob is memory-arithmetic-driven for the fixed v5e pod (16 GB/chip,
+256 chips single pod); the reasoning is recorded per arch below and in
+DESIGN.md §4. The dry-run validates the arithmetic via memory_analysis().
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import base as cfgbase
+from repro.distributed import sharding as shd
+
+__all__ = ["Recipe", "recipe_for", "rules_for", "train_config_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Recipe:
+    # params additionally sharded over "data" on their hidden dim (FSDP /
+    # ZeRO-3 style; XLA SPMD inserts the per-layer all-gather)
+    fsdp: bool = False
+    # extend FSDP over the pod (DCN) axis too: required when params+opt
+    # arithmetic exceeds one pod (671B: 5.2 GB/chip params alone at 256-way;
+    # grads+accumulator push past 16 GB — cross-pod ZeRO-3 halves all of it
+    # at the cost of DCN param gathers, which the roofline prices honestly)
+    fsdp_pod: bool = False
+    # MoE experts sharded over (data, model) = full-mesh EP (256-way)
+    ep2d: bool = False
+    # <2B archs in training: treat the whole mesh as a DP farm
+    # (batch over data x model, params replicated). 16-way TP of a 0.5B
+    # model whose 14 heads don't divide the model axis costs ~16x replicated
+    # attention + per-layer resharding all-gathers — measured 41.7 GiB/step
+    # of ICI traffic vs ~2 GiB for the grad all-reduce under DP-only.
+    dp_only: bool = False
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks is sharded over "model" on the sequence dim (saves the
+    # layer-boundary activation carries: 3.5 GB/chip -> 0.22 GB at 671B)
+    seq_parallel: bool = False
+    # pad attention heads to a multiple of the model-axis size so head
+    # counts like 56/40/24 shard 16 ways instead of replicating the whole
+    # attention computation on every model rank (§Perf hillclimb A)
+    pad_heads: bool = False
+    # decode: replicate the tiny per-token activations and keep weights
+    # stationary (contract over the data-sharded param dim + psum) instead
+    # of FSDP-gathering whole layers per token (§Perf hillclimb C)
+    decode_2d_tp: bool = False
+    optimizer: str = "adamw"  # adamw | adafactor
+    accum_dtype: str = "float32"
+    momentum: float = 0.0  # adafactor only
+    # microbatch sizing: sequences per chip per microbatch (grad accumulation
+    # splits the global batch so per-mb global batch = dp_degree * this)
+    mb_seqs_per_chip: int = 2
+    remat: str = "full"
+    # serving: KV-cache sequence axis sharding ("model" = flash-decoding
+    # style sequence split; batch is already on "data")
+    kv_seq_axis: str | None = "model"
+    dcn_compression: str = "mean"  # baseline: plain pjit all-reduce
+    notes: str = ""
+
+
+# ---------------------------------------------------------------------------
+# Per-arch base recipes (training knobs; serving derives from them)
+# ---------------------------------------------------------------------------
+_R = Recipe
+_ARCH_RECIPES: dict[str, Recipe] = {
+    # <2B: whole mesh as DP farm for training (params replicated), AdamW f32
+    "qwen2-0.5b": _R(dp_only=True, mb_seqs_per_chip=1),
+    "xlstm-1.3b": _R(dp_only=True, mb_seqs_per_chip=1,
+                     notes="mLSTM chunk scan carries (C,n,m) f32 per chunk"),
+    "musicgen-medium": _R(dp_only=True, mb_seqs_per_chip=1),
+    # 9-16B: FSDP params (per-layer all-gather), AdamW + ZeRO-1
+    "qwen2.5-14b": _R(fsdp=True, mb_seqs_per_chip=2),
+    "recurrentgemma-9b": _R(fsdp=True, mb_seqs_per_chip=2),
+    "moonshot-v1-16b-a3b": _R(fsdp=True, mb_seqs_per_chip=2,
+                              notes="64 experts on model axis (4/chip)"),
+    # 34B: FSDP, 1 seq/chip microbatches (60-88 layer activation carries)
+    "llava-next-34b": _R(fsdp=True, mb_seqs_per_chip=1,
+                         notes="train seq = 4096 text + 2928 image tokens"),
+    "granite-34b": _R(fsdp=True, mb_seqs_per_chip=1),
+    # 104B: FSDP mandatory (params/16 = 13 GB > budget without it)
+    "command-r-plus-104b": _R(fsdp=True, mb_seqs_per_chip=1),
+    # 671B: full-mesh EP for the 653B routed params (5.1 GB/chip), FSDP for
+    # the dense 18B, Adafactor (AdamW m+v f32 = 21 GB/chip > 16 GB HBM — no
+    # sharding fixes that arithmetic), bf16 grad accumulation
+    # NOTE: seq_parallel=True was tried here and REFUTED — a global
+    # seq->model rule makes XLA reshard at every constraint site (4x flops,
+    # 38 TB ICI). Recorded in EXPERIMENTS.md §Perf.
+    "deepseek-v3-671b": _R(fsdp=True, fsdp_pod=True, ep2d=True,
+                           optimizer="adafactor", accum_dtype="bfloat16",
+                           mb_seqs_per_chip=1,
+                           notes="PaLM-style factored optimizer; see DESIGN §4"),
+}
+
+
+def recipe_for(arch_id: str, shape_id: str) -> Recipe:
+    r = _ARCH_RECIPES[arch_id]
+    shape = cfgbase.SHAPES[shape_id]
+    if shape.kind != "train":
+        # serving: optimizer/microbatch knobs are irrelevant
+        r = dataclasses.replace(
+            r, optimizer="adamw", accum_dtype="float32", mb_seqs_per_chip=1)
+    # §Perf variant overrides (hillclimb harness):
+    #   XAAS_RECIPE_OVERRIDES='{"llava-next-34b": {"pad_heads": true}}'
+    ov = _env_overrides().get(arch_id)
+    if ov:
+        r = dataclasses.replace(r, **ov)
+    return r
+
+
+def _env_overrides() -> dict:
+    import json
+    import os
+
+    raw = os.environ.get("XAAS_RECIPE_OVERRIDES", "")
+    return json.loads(raw) if raw else {}
+
+
+# ---------------------------------------------------------------------------
+# Sharding rules under a recipe
+# ---------------------------------------------------------------------------
+def rules_for(recipe: Recipe, *, multi_pod: bool, serving: bool) -> shd.Rules:
+    rules = dict(shd.RULES_3D if multi_pod else shd.RULES_2D)
+    if recipe.dp_only and not serving:
+        batch = ("pod", "data", "model") if multi_pod else ("data", "model")
+        for k, v in rules.items():
+            if v is not None and k != "batch":
+                rules[k] = None
+        rules["batch"] = batch
+        rules["expert_group"] = batch
+        return rules
+    if recipe.fsdp:
+        rules["p_embed"] = ("pod", "data") if (
+            multi_pod and recipe.fsdp_pod) else "data"
+    if recipe.ep2d:
+        rules["experts"] = ("data", "model")
+        # token dispatch groups stay on the batch axes; the expert_cap dim of
+        # the (E, B*C, D) all-to-all layout is left unsharded (E covers the
+        # full mesh)
+    if recipe.seq_parallel and not serving:
+        rules["seq"] = "model"
+    if recipe.pad_heads:
+        rules["__pad_heads__"] = 16  # model-axis size (assignment-fixed)
+    if serving and recipe.kv_seq_axis:
+        rules["kv_seq"] = recipe.kv_seq_axis
+    if serving and recipe.decode_2d_tp:
+        rules["batch"] = None  # activations replicated; cache keeps
+        # state_batch -> data; params contract over p_embed -> data + psum
+    return rules
+
+
+def train_config_for(cfg, recipe: Recipe, *, mesh, multi_pod: bool):
+    """Build the TrainConfig for one (arch, train shape, mesh) cell."""
+    from repro.training import train_step as ts
+
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    shape = cfgbase.SHAPES["train_4k"]
+    # effective DP = longest prefix of the batch axes that divides the
+    # global batch (mirrors guarded_spec's tuple degrade)
+    axes = ["pod", "data"] if multi_pod else ["data"]
+    if recipe.dp_only:
+        axes.append("model")
+    dp = 1
+    for a in axes:
+        nxt = dp * sizes.get(a, 1)
+        if shape.global_batch % nxt == 0:
+            dp = nxt
+    per_mb = dp * recipe.mb_seqs_per_chip
+    micro = max(1, shape.global_batch // per_mb)
+    return ts.TrainConfig(
+        optimizer=recipe.optimizer,
+        adafactor=dataclasses.replace(
+            ts.opt.AdafactorConfig(), momentum=recipe.momentum),
+        accum_dtype=recipe.accum_dtype,
+        microbatches=micro,
+        remat=recipe.remat,
+        dcn_compression=recipe.dcn_compression if multi_pod else "mean",
+    )

@@ -1,0 +1,12 @@
+"""Functional model zoo: mixers + FFNs + assembly (see transformer.py)."""
+from repro.models import (  # noqa: F401
+    attention,
+    ffn,
+    frontends,
+    layers,
+    mla,
+    moe,
+    rglru,
+    transformer,
+    xlstm,
+)

@@ -1,0 +1,41 @@
+"""Dense FFN variants: SwiGLU (llama lineage) and GELU MLP (classic)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding
+from repro.models import layers
+
+
+def init(key, cfg, *, kind: str):
+    dt = jnp.dtype(cfg.param_dtype)
+    dff = cfg.dense_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": layers.init_linear(ks[0], cfg.d_model, dff, dtype=dt),
+            "w_up": layers.init_linear(ks[1], cfg.d_model, dff, dtype=dt),
+            "w_down": layers.init_linear(ks[2], dff, cfg.d_model, dtype=dt),
+        }
+    if kind == "gelu_mlp":
+        return {
+            "w_up": layers.init_linear(ks[0], cfg.d_model, dff, dtype=dt),
+            "w_down": layers.init_linear(ks[1], dff, cfg.d_model, dtype=dt),
+        }
+    raise ValueError(kind)
+
+
+def apply(p, cfg, x, *, kind: str = "swiglu"):
+    """x: (..., D) pre-normed -> (..., D)."""
+    if "w_gate" in p:
+        act = jax.nn.gelu if kind == "geglu" else jax.nn.silu
+        g = layers.linear(p["w_gate"], x)
+        u = layers.linear(p["w_up"], x)
+        h = (act(g.astype(jnp.float32)) * u.astype(jnp.float32)).astype(x.dtype)
+    else:
+        u = layers.linear(p["w_up"], x)
+        h = jax.nn.gelu(u.astype(jnp.float32)).astype(x.dtype)
+    if x.ndim == 3:
+        h = sharding.constraint(h, "batch", "seq", "ff")
+    return layers.linear(p["w_down"], h)

@@ -1,0 +1,70 @@
+"""Modality frontend STUBS (per the assignment: the transformer backbone is
+real; the modality encoder is not).
+
+vlm  — llava-next anyres: ``input_specs()`` supplies *precomputed* patch
+       features (B, num_image_tokens, vis_dim) as the vision tower's output;
+       here we own only the multimodal projector (2-layer MLP, llava-style)
+       into d_model, prepended to the text embeddings.
+audio — musicgen over EnCodec tokens: K codebook embedding tables summed at
+       the input, K parallel LM heads at the output. EnCodec itself is the
+       stub; the delay-pattern interleave is applied in the data pipeline.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers
+
+VIS_DIM = 1024  # CLIP-L/14 feature width (the stubbed vision tower's output)
+
+
+def init_vlm(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "patch_proj": layers.init_linear(k1, VIS_DIM, cfg.d_model, bias=True, dtype=dt),
+        "patch_proj2": layers.init_linear(k2, cfg.d_model, cfg.d_model, bias=True, dtype=dt),
+    }
+
+
+def project_patches(p, cfg, patch_embeds: jax.Array) -> jax.Array:
+    """(B, I, VIS_DIM) -> (B, I, D): llava mlp2x_gelu projector."""
+    h = layers.linear(p["patch_proj"], patch_embeds.astype(jnp.dtype(cfg.activ_dtype)))
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(h.dtype)
+    return layers.linear(p["patch_proj2"], h)
+
+
+def init_audio_embed(key, cfg):
+    """K codebook embedding tables, stacked (K, V, D)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w": layers.trunc_normal(
+            key, (cfg.num_codebooks, cfg.vocab_size, cfg.d_model), 1.0, dt
+        )
+    }
+
+
+def audio_embed(p, tokens: jax.Array) -> jax.Array:
+    """tokens: (B, K, S) int -> (B, S, D) summed codebook embeddings."""
+    k = tokens.shape[1]
+    embs = [p["w"][i][tokens[:, i]] for i in range(k)]
+    return sum(embs)
+
+
+def init_audio_heads(key, cfg):
+    """K parallel LM heads, stacked (K, D, V)."""
+    dt = jnp.dtype(cfg.param_dtype)
+    return {
+        "w": layers.trunc_normal(
+            key, (cfg.num_codebooks, cfg.d_model, cfg.vocab_size),
+            cfg.d_model**-0.5, dt,
+        )
+    }
+
+
+def audio_logits(p, x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, K, S, V) f32 logits."""
+    return jnp.einsum(
+        "bsd,kdv->bksv", x, p["w"], preferred_element_type=jnp.float32
+    )

@@ -1,0 +1,136 @@
+"""DeepSeek-V2/V3 Multi-head Latent Attention.
+
+Train/prefill uses the naive (decompressed) form; decode uses the *absorbed*
+form: the KV cache stores only the compressed latent (kv_lora_rank) plus the
+shared RoPE key (qk_rope_head_dim) per token — 576 values/token for V3 —
+and attention runs MQA-style in latent space with W_UK/W_UV absorbed into the
+query/output projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hooks
+from repro.distributed import sharding
+from repro.models import layers
+
+
+def init(key, cfg):
+    m = cfg.mla
+    dt = jnp.dtype(cfg.param_dtype)
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "w_dq": layers.init_linear(ks[0], cfg.d_model, m.q_lora_rank, dtype=dt),
+        "q_norm": layers.init_norm(m.q_lora_rank, kind=cfg.norm, dtype=dt),
+        "w_uq": layers.init_linear(ks[1], m.q_lora_rank, cfg.num_heads * qk_head, dtype=dt),
+        "w_dkv": layers.init_linear(
+            ks[2], cfg.d_model, m.kv_lora_rank + m.qk_rope_head_dim, dtype=dt
+        ),
+        "kv_norm": layers.init_norm(m.kv_lora_rank, kind=cfg.norm, dtype=dt),
+        "w_uk": layers.init_linear(ks[3], m.kv_lora_rank, cfg.num_heads * m.qk_nope_head_dim, dtype=dt),
+        "w_uv": layers.init_linear(ks[4], m.kv_lora_rank, cfg.num_heads * m.v_head_dim, dtype=dt),
+        "wo": layers.init_linear(ks[5], cfg.num_heads * m.v_head_dim, cfg.d_model, dtype=dt),
+    }
+
+
+def _queries(p, cfg, x, positions):
+    """-> q_nope (B,*,H,nope), q_rope (B,*,H,rope) with RoPE applied."""
+    m = cfg.mla
+    qk_head = m.qk_nope_head_dim + m.qk_rope_head_dim
+    lead = x.shape[:-1]
+    cq = layers.norm(p["q_norm"], layers.linear(p["w_dq"], x))
+    q = layers.linear(p["w_uq"], cq).reshape(*lead, cfg.num_heads, qk_head)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., m.qk_nope_head_dim :], positions, theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def _latents(p, cfg, x, positions):
+    """-> c_kv (B,*,kv_lora) normed, k_rope (B,*,1,rope) with RoPE."""
+    m = cfg.mla
+    ckv_full = layers.linear(p["w_dkv"], x)
+    c_kv = layers.norm(p["kv_norm"], ckv_full[..., : m.kv_lora_rank])
+    k_rope = ckv_full[..., m.kv_lora_rank :][..., None, :]  # single shared head
+    k_rope = layers.apply_rope(k_rope, positions, theta=cfg.rope_theta)
+    return c_kv, k_rope
+
+
+def apply(p, cfg, x, positions, *, window=None):
+    """Naive decompressed MLA for train/prefill. x: (B, S, D) pre-normed."""
+    del window
+    m = cfg.mla
+    b, s, _ = x.shape
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = layers.linear(p["w_uk"], c_kv).reshape(b, s, cfg.num_heads, m.qk_nope_head_dim)
+    v = layers.linear(p["w_uv"], c_kv).reshape(b, s, cfg.num_heads, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, q_rope.shape)], axis=-1)
+    q = sharding.constraint(q, "batch", "seq", "heads", None)
+    k = sharding.constraint(k, "batch", "seq", "heads", None)
+    v = sharding.constraint(v, "batch", "seq", "heads", None)
+    o = hooks.call("attention", q, k, v, causal=True, scale=scale)
+    return layers.linear(p["wo"], o.reshape(b, s, -1))
+
+
+def prefill(p, cfg, x, positions, max_len: int, *, window=None):
+    """Naive-form prefill + compressed-latent cache build."""
+    del window
+    m = cfg.mla
+    b, s, _ = x.shape
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    k_nope = layers.linear(p["w_uk"], c_kv).reshape(b, s, cfg.num_heads, m.qk_nope_head_dim)
+    v = layers.linear(p["w_uv"], c_kv).reshape(b, s, cfg.num_heads, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, q_rope.shape)], axis=-1)
+    o = hooks.call("attention", q, k, v, causal=True, scale=scale)
+    y = layers.linear(p["wo"], o.reshape(b, s, -1))
+    state = init_state(cfg, b, max_len, c_kv.dtype)
+    ckv = jax.lax.dynamic_update_slice(state["ckv"], c_kv, (0, 0, 0))
+    krope = jax.lax.dynamic_update_slice(state["krope"], k_rope[:, :, 0, :], (0, 0, 0))
+    ckv = sharding.constraint(ckv, "batch", "kv_seq", None)
+    krope = sharding.constraint(krope, "batch", "kv_seq", None)
+    return y, {"ckv": ckv, "krope": krope}
+
+
+def init_state(cfg, batch: int, max_len: int, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+    }
+
+
+def decode(p, cfg, x, state, lengths, *, window=None):
+    """Absorbed-form decode. x: (B, D); cache = latent (576/token for V3)."""
+    del window
+    m = cfg.mla
+    b, _ = x.shape
+    pos = (lengths - 1).astype(jnp.int32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x[:, None, :], pos[:, None])
+    q_nope = q_nope.reshape(b, cfg.num_heads, m.qk_nope_head_dim)
+    q_rope = q_rope.reshape(b, cfg.num_heads, m.qk_rope_head_dim)
+    c_kv_t, k_rope_t = _latents(p, cfg, x[:, None, :], pos[:, None])
+    bidx = jnp.arange(b)
+    ckv = state["ckv"].at[bidx, pos].set(c_kv_t[:, 0].astype(state["ckv"].dtype))
+    krope = state["krope"].at[bidx, pos].set(k_rope_t[:, 0, 0].astype(state["krope"].dtype))
+    ckv = sharding.constraint(ckv, "batch", "kv_seq", None)
+    krope = sharding.constraint(krope, "batch", "kv_seq", None)
+    # absorb W_UK into the query: q_lat[b,h,c] = sum_n q_nope[b,h,n] W_UK[c,(h,n)]
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    q_cat = jnp.concatenate([q_lat.astype(x.dtype), q_rope], axis=-1)  # (B,H,cr+rope)
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]  # (B,S,1,cr+rope)
+    v_lat = ckv[:, :, None, :]  # (B,S,1,cr)
+    o_lat = hooks.call("decode_attention", q_cat, k_cat, v_lat, lengths=lengths, scale=scale)
+    # absorb W_UV into the output: v[b,h,v] = sum_c o_lat[b,h,c] W_UV[c,(h,v)]
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
+    o = jnp.einsum("bhc,chv->bhv", o_lat.astype(jnp.float32), w_uv.astype(jnp.float32))
+    y = layers.linear(p["wo"], o.astype(x.dtype).reshape(b, -1))
+    return y, {"ckv": ckv, "krope": krope}

@@ -1,0 +1,173 @@
+"""Mixture-of-Experts FFN: sort-based capacity dispatch (no one-hot einsums).
+
+Dispatch is the production-style sorted/ragged scheme (MegaBlocks/MaxText
+lineage) rather than GShard one-hot einsums: one-hot dispatch inflates HLO
+FLOPs by O(E) and destroys the roofline compute term. Here routing costs only
+a per-group argsort + scatter (static shapes, vmapped over groups), and the
+expert compute is the `moe_mlp` accelerated hook (Pallas grouped-matmul on
+TPU).
+
+Supports top-k routing with renormalized gates, optional DeepSeek-V3
+aux-loss-free bias routing, shared experts, and a Switch-style load-balance
+auxiliary loss metric.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hooks
+from repro.distributed import sharding
+from repro.models import layers
+
+
+def capacity(cfg, tokens_per_group: int) -> int:
+    m = cfg.moe
+    c = math.ceil(tokens_per_group * m.top_k * m.capacity_factor / m.num_experts)
+    return max(8, int(math.ceil(c / 8) * 8))
+
+
+def init(key, cfg):
+    m = cfg.moe
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": layers.trunc_normal(ks[0], (cfg.d_model, m.num_experts),
+                                            cfg.d_model**-0.5, jnp.float32)},
+        "experts": {
+            "w_gate": layers.trunc_normal(ks[1], (m.num_experts, cfg.d_model, m.d_expert),
+                                          cfg.d_model**-0.5, dt),
+            "w_up": layers.trunc_normal(ks[2], (m.num_experts, cfg.d_model, m.d_expert),
+                                        cfg.d_model**-0.5, dt),
+            "w_down": layers.trunc_normal(ks[3], (m.num_experts, m.d_expert, cfg.d_model),
+                                          m.d_expert**-0.5, dt),
+        },
+    }
+    if m.bias_routing:
+        p["router"]["bias"] = jnp.zeros((m.num_experts,), jnp.float32)
+    if m.num_shared_experts:
+        d_sh = m.d_shared * m.num_shared_experts
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": layers.init_linear(kk[0], cfg.d_model, d_sh, dtype=dt),
+            "w_up": layers.init_linear(kk[1], cfg.d_model, d_sh, dtype=dt),
+            "w_down": layers.init_linear(kk[2], d_sh, cfg.d_model, dtype=dt),
+        }
+    return p
+
+
+def _route_group(flat_ids: jax.Array, num_experts: int, cap: int):
+    """Per-group routing plan. flat_ids: (T*k,) expert assignment per slot.
+
+    Returns (dest, token_slot, keep): dest[i] in [0, E*C] is the bucket index
+    for sorted slot i (E*C = dropped), token_slot[i] = which flat slot it came
+    from."""
+    n = flat_ids.shape[0]
+    order = jnp.argsort(flat_ids, stable=True)
+    sorted_ids = flat_ids[order]
+    seg_start = jnp.searchsorted(sorted_ids, jnp.arange(num_experts), side="left")
+    rank = jnp.arange(n) - seg_start[sorted_ids]
+    keep = rank < cap
+    dest = jnp.where(keep, sorted_ids * cap + rank, num_experts * cap)
+    return dest, order, keep
+
+
+def router(p, cfg, x):
+    """x: (..., D) -> (probs(...,k), ids(...,k), full_probs(...,E))."""
+    m = cfg.moe
+    logits = jnp.einsum("...d,de->...e", x.astype(jnp.float32), p["router"]["w"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    select = probs + p["router"]["bias"] if m.bias_routing else probs
+    _, ids = jax.lax.top_k(select, m.top_k)
+    gates = jnp.take_along_axis(probs, ids, axis=-1)
+    gates = gates / jnp.maximum(jnp.sum(gates, axis=-1, keepdims=True), 1e-9)
+    return gates, ids, probs
+
+
+def apply(p, cfg, x):
+    """x: (B, S, D) pre-normed. Returns (out (B,S,D), metrics dict).
+
+    All bulk data movement is GATHERS over permutation indices (never a
+    (tokens, D) scatter): XLA SPMD partitions gathers on the untouched D dim,
+    so dispatch/combine shard over "model" ("moe_d" rule) instead of
+    replicating + all-reducing — the scatter formulation cost ~1 GiB/chip/
+    layer in replicated u32/f32 dispatch buffers on the 671B dry-run.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    k = m.top_k
+    cap = capacity(cfg, s)
+    e = m.num_experts
+    nslots = e * cap
+    gates, ids, probs = router(p, cfg, x)  # (B,S,k), (B,S,k), (B,S,E)
+
+    flat_ids = ids.reshape(b, s * k)
+    dest, order, keep = jax.vmap(lambda f: _route_group(f, e, cap))(flat_ids)
+    token_slot = order // k  # (B, S*k) token index per sorted slot
+
+    # ---- dispatch: rows in sorted-by-expert order, then bucket order ----
+    dispatched = jnp.take_along_axis(x, token_slot[..., None], axis=1)
+    dispatched = sharding.constraint(dispatched, "expert_group", None, "moe_d")
+    # zero row appended: empty bucket slots gather it via the sentinel index
+    dispatched = jnp.concatenate(
+        [dispatched, jnp.zeros((b, 1, d), dispatched.dtype)], axis=1)
+    # inverse slot map: bucket position -> sorted slot (sentinel = s*k)
+    sorted_idx = jnp.broadcast_to(jnp.arange(s * k, dtype=jnp.int32), (b, s * k))
+    inv = jnp.full((b, nslots + 1), s * k, jnp.int32)
+    inv = jax.vmap(lambda iv, d_, i_: iv.at[d_].set(i_))(inv, dest, sorted_idx)
+    buckets = jnp.take_along_axis(dispatched, inv[:, :nslots, None], axis=1)
+    buckets = buckets.reshape(b, e, cap, d)
+    buckets = sharding.constraint(
+        buckets, "expert_group", "experts", None, "moe_d")
+    # all-to-all: regroup so experts own their buckets (E leading, sharded).
+    inputs = buckets.transpose(1, 0, 2, 3).reshape(e, b * cap, d)
+    inputs = sharding.constraint(inputs, "experts", "expert_cap", "moe_d")
+
+    out_buckets = hooks.call(
+        "moe_mlp", inputs, p["experts"]["w_gate"], p["experts"]["w_up"], p["experts"]["w_down"]
+    )
+    out_buckets = sharding.constraint(out_buckets, "experts", "expert_cap", "moe_d")
+    out_buckets = out_buckets.reshape(e, b, cap, d).transpose(1, 0, 2, 3)
+    out_buckets = sharding.constraint(
+        out_buckets, "expert_group", "experts", None, "moe_d")
+    out_flat = out_buckets.reshape(b, nslots, d)
+
+    # ---- combine: pure gathers -> (B,S,k,D) -> gate-weighted sum over k ----
+    perm_inv = jnp.argsort(order, axis=-1)  # flat slot t*k+j -> sorted pos
+    bucket_of_flat = jnp.take_along_axis(dest, perm_inv, axis=-1)  # (B,S*k)
+    keep_flat = jnp.take_along_axis(keep, perm_inv, axis=-1)
+    vals = jnp.take_along_axis(
+        out_flat, jnp.minimum(bucket_of_flat, nslots - 1)[..., None], axis=1)
+    vals = sharding.constraint(vals, "expert_group", None, "moe_d")
+    w = gates.reshape(b, s * k) * keep_flat  # (B, S*k) f32
+    out = jnp.sum(
+        (vals * w[..., None].astype(vals.dtype)).reshape(b, s, k, d), axis=2)
+
+    # ---- shared experts (dense branch) ----
+    if m.num_shared_experts:
+        sh = p["shared"]
+        g = layers.linear(sh["w_gate"], x)
+        u = layers.linear(sh["w_up"], x)
+        out = out + layers.linear(sh["w_down"], jax.nn.silu(g) * u)
+
+    # ---- metrics: Switch load-balance loss + drop fraction ----
+    assign_frac = jnp.zeros((e,), jnp.float32).at[ids.reshape(-1)].add(1.0) / (
+        b * s * m.top_k
+    )
+    importance = jnp.mean(probs.reshape(-1, e), axis=0)
+    aux_loss = e * jnp.sum(assign_frac * importance) * m.aux_loss_coef
+    metrics = {
+        "moe_aux_loss": aux_loss,
+        "moe_dropped_frac": 1.0 - jnp.mean(keep.astype(jnp.float32)),
+        "moe_load": assign_frac,
+    }
+    return out.astype(x.dtype), metrics
+
+
+def update_router_bias(bias: jax.Array, load: jax.Array, *, rate: float = 1e-3) -> jax.Array:
+    """DeepSeek-V3 aux-loss-free balancing: nudge per-expert selection bias
+    against the observed load imbalance (applied outside the gradient)."""
+    err = jnp.mean(load) - load  # positive for under-loaded experts
+    return bias + rate * jnp.sign(err)

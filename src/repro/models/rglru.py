@@ -1,0 +1,125 @@
+"""Griffin / RecurrentGemma recurrent block: conv1d + RG-LRU with gating.
+
+The RG-LRU cell (Griffin eq. 1-4):
+    r_t = sigmoid(W_a u_t + b_a)          (recurrence gate, block-diagonal)
+    i_t = sigmoid(W_x u_t + b_x)          (input gate, block-diagonal)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * u_t)
+
+The scan itself is the `linear_recurrence` accelerated hook (associative-scan
+portable path; blocked Pallas scan on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hooks
+from repro.models import layers
+
+
+def _init_lambda(key, width: int) -> jax.Array:
+    # init so that a = exp(-c*softplus(lam)) is uniform in [0.9, 0.999]
+    u = jax.random.uniform(key, (width,), jnp.float32, 0.9, 0.999)
+    # softplus(lam) = -log(a)/c  =>  lam = softplus_inv(-log(a)/c)
+    sp = -jnp.log(u) / 8.0
+    return jnp.log(jnp.expm1(sp))
+
+
+def init(key, cfg):
+    r = cfg.rglru
+    w = r.lru_width
+    h = cfg.num_heads
+    bw = w // h
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 7)
+    return {
+        "lru_in": layers.init_linear(ks[0], cfg.d_model, w, dtype=dt),
+        "lru_gate": layers.init_linear(ks[1], cfg.d_model, w, dtype=dt),
+        "conv": layers.init_conv1d(ks[2], w, r.conv_width, dtype=dt),
+        "rglru": {
+            "w_a": {"w": layers.trunc_normal(ks[3], (h, bw, bw), bw**-0.5, dt)},
+            "w_x": {"w": layers.trunc_normal(ks[4], (h, bw, bw), bw**-0.5, dt)},
+            "b_a": jnp.zeros((w,), dt),
+            "b_x": jnp.zeros((w,), dt),
+            "lam": _init_lambda(ks[5], w),
+        },
+        "lru_out": layers.init_linear(ks[6], w, cfg.d_model, dtype=dt),
+    }
+
+
+def _gates(p, cfg, u):
+    """Block-diagonal gate projections. u: (..., W) -> (r, i, log_a, scale)."""
+    r = cfg.rglru
+    h = cfg.num_heads
+    lead = u.shape[:-1]
+    ub = u.reshape(*lead, h, r.lru_width // h).astype(jnp.float32)
+    g = p["rglru"]
+    ra = jnp.einsum("...hb,hbc->...hc", ub, g["w_a"]["w"].astype(jnp.float32))
+    ix = jnp.einsum("...hb,hbc->...hc", ub, g["w_x"]["w"].astype(jnp.float32))
+    ra = ra.reshape(*lead, r.lru_width) + g["b_a"].astype(jnp.float32)
+    ix = ix.reshape(*lead, r.lru_width) + g["b_x"].astype(jnp.float32)
+    rg = jax.nn.sigmoid(ra)
+    ig = jax.nn.sigmoid(ix)
+    log_a = -r.c * jax.nn.softplus(g["lam"].astype(jnp.float32)) * rg
+    # sqrt(1 - a^2) with numerical floor
+    scale = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6))
+    return ig, log_a, scale
+
+
+def apply(p, cfg, x, positions=None, *, window=None):
+    """Full-sequence Griffin recurrent block. x: (B, S, D) pre-normed."""
+    del positions, window
+    u = layers.conv1d(p["conv"], layers.linear(p["lru_in"], x))
+    gate = jax.nn.gelu(layers.linear(p["lru_gate"], x).astype(jnp.float32))
+    ig, log_a, scale = _gates(p, cfg, u)
+    xin = (scale * ig * u.astype(jnp.float32)).astype(x.dtype)
+    a = jnp.exp(log_a).astype(x.dtype)
+    h = hooks.call("linear_recurrence", a, xin)
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    return layers.linear(p["lru_out"], y)
+
+
+def prefill(p, cfg, x, positions, max_len: int, *, window=None):
+    """Full-sequence pass that also returns the final recurrent state."""
+    del positions, window, max_len
+    r = cfg.rglru
+    u_pre = layers.linear(p["lru_in"], x)  # conv input, pre-conv (B, S, W)
+    u = layers.conv1d(p["conv"], u_pre)
+    gate = jax.nn.gelu(layers.linear(p["lru_gate"], x).astype(jnp.float32))
+    ig, log_a, scale = _gates(p, cfg, u)
+    xin = (scale * ig * u.astype(jnp.float32)).astype(x.dtype)
+    a = jnp.exp(log_a).astype(x.dtype)
+    h = hooks.call("linear_recurrence", a, xin)
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    out = layers.linear(p["lru_out"], y)
+    # state: last recurrent value (f32) + conv tail (last conv_width-1 inputs)
+    s = x.shape[1]
+    w = r.conv_width - 1
+    if s >= w:
+        conv_tail = u_pre[:, s - w:, :]
+    else:
+        conv_tail = jnp.pad(u_pre, ((0, 0), (w - s, 0), (0, 0)))
+    return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+
+
+def init_state(cfg, batch: int, max_len: int, dtype):
+    r = cfg.rglru
+    return {
+        "h": jnp.zeros((batch, r.lru_width), jnp.float32),
+        "conv": jnp.zeros((batch, r.conv_width - 1, r.lru_width), dtype),
+    }
+
+
+def decode(p, cfg, x, state, lengths, *, window=None):
+    """Single-step recurrent update. x: (B, D)."""
+    del lengths, window
+    u1, conv_state = layers.conv1d(p["conv"], layers.linear(p["lru_in"], x)[:, None, :],
+                                   state["conv"])
+    u = u1[:, 0]
+    gate = jax.nn.gelu(layers.linear(p["lru_gate"], x).astype(jnp.float32))
+    ig, log_a, scale = _gates(p, cfg, u)
+    xin = scale * ig * u.astype(jnp.float32)
+    h = jnp.exp(log_a) * state["h"] + xin
+    y = (h * gate).astype(x.dtype)
+    return layers.linear(p["lru_out"], y), {"h": h, "conv": conv_state}

@@ -1,0 +1,399 @@
+"""Model assembly: embeddings/frontends + prefix blocks + scanned layer
+pattern + LM head, with train (``forward``), prefill, and decode paths.
+
+Layer layout follows ``ArchConfig``: ``prefix`` blocks are unrolled
+(heterogeneous head, e.g. DeepSeek-V3's first dense layers); the ``pattern``
+(one period of the layer mixture, e.g. Griffin's [rglru, rglru, local_attn])
+repeats ``scan_repeats`` times via ``lax.scan`` over stacked params so HLO
+size stays flat at any depth — essential for 61-88 layer archs on a 512-way
+mesh.
+
+Every mixer implements one contract (init / apply / prefill / init_state /
+decode); this module only dispatches and owns the residual structure,
+sharding constraints, and the scan.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding
+from repro.models import attention, ffn, frontends, layers, mla, moe, rglru, xlstm
+
+
+# ---------------------------------------------------------------------------
+# Mixer dispatch table
+# ---------------------------------------------------------------------------
+class _MixerAdapter:
+    def __init__(self, init, apply, prefill, init_state, decode):
+        self.init = init
+        self.apply = apply
+        self.prefill = prefill
+        self.init_state = init_state
+        self.decode = decode
+
+
+_MIXERS: dict[str, _MixerAdapter] = {
+    "global_attn": _MixerAdapter(
+        attention.init, attention.apply, attention.prefill,
+        attention.init_state, attention.decode),
+    "local_attn": _MixerAdapter(
+        attention.init, attention.apply, attention.prefill,
+        attention.init_state, attention.decode),
+    "mla": _MixerAdapter(
+        mla.init, mla.apply, mla.prefill, mla.init_state, mla.decode),
+    "rglru": _MixerAdapter(
+        rglru.init, rglru.apply, rglru.prefill, rglru.init_state, rglru.decode),
+    "mlstm": _MixerAdapter(
+        xlstm.init_mlstm, xlstm.apply_mlstm, xlstm.prefill_mlstm,
+        xlstm.init_mlstm_state, xlstm.decode_mlstm),
+    "slstm": _MixerAdapter(
+        xlstm.init_slstm, xlstm.apply_slstm, xlstm.prefill_slstm,
+        xlstm.init_slstm_state, xlstm.decode_slstm),
+}
+
+
+def _window(cfg, spec) -> int | None:
+    return cfg.local_window if spec.mixer == "local_attn" else None
+
+
+# ---------------------------------------------------------------------------
+# Block = norm + mixer (+ norm + ffn), pre-norm residual
+# ---------------------------------------------------------------------------
+def init_block(key, cfg, spec):
+    k1, k2 = jax.random.split(key)
+    dt = jnp.dtype(cfg.param_dtype)
+    p: dict[str, Any] = {
+        "norm1": layers.init_norm(cfg.d_model, kind=cfg.norm, dtype=dt),
+        "mixer": _MIXERS[spec.mixer].init(k1, cfg),
+    }
+    if spec.ffn != "none":
+        if not cfg.parallel_residual:
+            p["norm2"] = layers.init_norm(cfg.d_model, kind=cfg.norm, dtype=dt)
+        p["ffn"] = moe.init(k2, cfg) if spec.ffn == "moe" else ffn.init(k2, cfg, kind=spec.ffn)
+    return p
+
+
+def _apply_ffn(p, cfg, spec, h):
+    """-> (out, aux_loss scalar)."""
+    if spec.ffn == "moe":
+        if h.ndim == 2:
+            # decode: treat the whole batch as one routing group (1, B, D)
+            out, metrics = moe.apply(p["ffn"], cfg, h[None])
+            return out[0], metrics["moe_aux_loss"]
+        out, metrics = moe.apply(p["ffn"], cfg, h)
+        return out, metrics["moe_aux_loss"]
+    return ffn.apply(p["ffn"], cfg, h, kind=spec.ffn), jnp.float32(0.0)
+
+
+def apply_block(p, cfg, spec, x, positions):
+    """Full-sequence block. x: (B, S, D) -> ((B, S, D), aux_loss)."""
+    n1 = layers.norm(p["norm1"], x)
+    h = _MIXERS[spec.mixer].apply(p["mixer"], cfg, n1, positions, window=_window(cfg, spec))
+    aux = jnp.float32(0.0)
+    if cfg.parallel_residual and spec.ffn != "none":
+        f, aux = _apply_ffn(p, cfg, spec, n1)
+        x = x + h + f
+    else:
+        x = x + h
+        if spec.ffn != "none":
+            f, aux = _apply_ffn(p, cfg, spec, layers.norm(p["norm2"], x))
+            x = x + f
+    return sharding.constraint(x, "batch", "seq", "embed"), aux
+
+
+def prefill_block(p, cfg, spec, x, positions, max_len):
+    """Like apply_block but also returns the mixer's serving state."""
+    n1 = layers.norm(p["norm1"], x)
+    h, state = _MIXERS[spec.mixer].prefill(
+        p["mixer"], cfg, n1, positions, max_len, window=_window(cfg, spec))
+    if cfg.parallel_residual and spec.ffn != "none":
+        f, _ = _apply_ffn(p, cfg, spec, n1)
+        x = x + h + f
+    else:
+        x = x + h
+        if spec.ffn != "none":
+            f, _ = _apply_ffn(p, cfg, spec, layers.norm(p["norm2"], x))
+            x = x + f
+    return sharding.constraint(x, "batch", "seq", "embed"), state
+
+
+def init_block_state(cfg, spec, batch, max_len, dtype):
+    return _MIXERS[spec.mixer].init_state(cfg, batch, max_len, dtype)
+
+
+def decode_block(p, cfg, spec, x, state, lengths):
+    """Single-token block. x: (B, D) -> ((B, D), new_state)."""
+    n1 = layers.norm(p["norm1"], x)
+    h, new_state = _MIXERS[spec.mixer].decode(
+        p["mixer"], cfg, n1, state, lengths, window=_window(cfg, spec))
+    if cfg.parallel_residual and spec.ffn != "none":
+        f, _ = _apply_ffn(p, cfg, spec, n1)
+        x = x + h + f
+    else:
+        x = x + h
+        if spec.ffn != "none":
+            f, _ = _apply_ffn(p, cfg, spec, layers.norm(p["norm2"], x))
+            x = x + f
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+def init_model(key, cfg):
+    dt = jnp.dtype(cfg.param_dtype)
+    n_keys = 6 + len(cfg.prefix) + len(cfg.pattern)
+    ks = list(jax.random.split(key, n_keys))
+    params: dict[str, Any] = {}
+    if cfg.frontend == "audio":
+        params["codebook_embed"] = frontends.init_audio_embed(ks[0], cfg)
+        params["codebook_head"] = frontends.init_audio_heads(ks[1], cfg)
+    else:
+        params["embed"] = layers.init_embedding(ks[0], cfg.vocab_size, cfg.d_model, dtype=dt)
+        if not cfg.tie_embeddings:
+            params["lm_head"] = {
+                "w": layers.trunc_normal(ks[1], (cfg.d_model, cfg.vocab_size),
+                                         cfg.d_model**-0.5, dt)
+            }
+    if cfg.frontend == "vlm":
+        params["frontend"] = frontends.init_vlm(ks[2], cfg)
+    params["final_norm"] = layers.init_norm(cfg.d_model, kind=cfg.norm, dtype=dt)
+    params["prefix"] = tuple(
+        init_block(ks[3 + i], cfg, spec) for i, spec in enumerate(cfg.prefix)
+    )
+    scan = []
+    base = 3 + len(cfg.prefix)
+    for j, spec in enumerate(cfg.pattern):
+        kj = jax.random.split(ks[base + j], cfg.scan_repeats)
+        scan.append(jax.vmap(lambda kk, spec=spec: init_block(kk, cfg, spec))(kj))
+    params["scan"] = tuple(scan)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head ends
+# ---------------------------------------------------------------------------
+def embed_inputs(params, cfg, tokens, patch_embeds=None):
+    """-> (x (B, S, D), positions (B, S) or (S,))."""
+    if cfg.frontend == "audio":
+        x = frontends.audio_embed(params["codebook_embed"], tokens)
+    else:
+        x = layers.embed(params["embed"], tokens)
+    x = x.astype(jnp.dtype(cfg.activ_dtype))
+    if cfg.frontend == "vlm":
+        assert patch_embeds is not None, "vlm arch requires patch_embeds"
+        vis = frontends.project_patches(params["frontend"], cfg, patch_embeds)
+        x = jnp.concatenate([vis, x], axis=1)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    s = x.shape[1]
+    positions = jnp.arange(s, dtype=jnp.int32)
+    if cfg.pos == "sinusoidal":
+        x = x + layers.sinusoidal_positions(s, cfg.d_model).astype(x.dtype)
+    return sharding.constraint(x, "batch", "seq", "embed"), positions
+
+
+def lm_logits(params, cfg, x):
+    """x: (B, S, D) -> f32 logits (B, S, V) (or (B, K, S, V) for audio)."""
+    x = layers.norm(params["final_norm"], x)
+    if cfg.frontend == "audio":
+        logits = frontends.audio_logits(params["codebook_head"], x)
+        return sharding.constraint(logits, "batch", None, "seq", "vocab")
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = jnp.dot(x, params["lm_head"]["w"], preferred_element_type=jnp.float32)
+    return sharding.constraint(logits, "batch", "seq", "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (train)
+# ---------------------------------------------------------------------------
+def apply_layers(params, cfg, x, positions, *, remat: str | None = "full"):
+    """Runs prefix + scanned blocks. -> (x, total_aux_loss).
+
+    Remat is applied PER BLOCK (not per pattern period): backward
+    rematerializes one block at a time, so peak memory is one block's
+    internals even for multi-block periods (xLSTM's 7:1 pattern would
+    otherwise hold 8 blocks of chunk-scan residuals live at once).
+    """
+    aux = jnp.float32(0.0)
+    block = _maybe_remat(
+        lambda p, spec, x: apply_block(p, cfg, spec, x, positions), remat)
+    for p, spec in zip(params["prefix"], cfg.prefix):
+        x, a = block(p, spec, x)
+        aux = aux + a
+
+    if cfg.scan_repeats == 0:
+        return x, aux
+
+    def body(carry, layer_params):
+        x, aux = carry
+        # keep the scan's stacked-param cotangent accumulator in param dtype
+        layer_params = jax.tree.map(layers.grad_dtype_barrier, layer_params)
+        for j, spec in enumerate(cfg.pattern):
+            x, a = block(layer_params[j], spec, x)
+            aux = aux + a
+        return (x, aux), None
+
+    (x, aux), _ = jax.lax.scan(body, (x, aux), params["scan"])
+    return x, aux
+
+
+def _maybe_remat(fn, remat: str | None):
+    if remat is None:
+        return fn
+    policies = {
+        "full": jax.checkpoint_policies.nothing_saveable,
+        "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+        "save_anything": jax.checkpoint_policies.everything_saveable,
+    }
+    return jax.checkpoint(fn, policy=policies[remat], prevent_cse=False,
+                          static_argnums=(1,))
+
+
+def forward(params, cfg, tokens, *, patch_embeds=None, remat: str | None = "full"):
+    """Train/eval forward. tokens: (B, S) int32 ((B, K, S) for audio).
+
+    Returns (logits, aux_loss): logits f32 (B, S_total, V) — for vlm,
+    S_total = num_image_tokens + S_text; (B, K, S, V) for audio.
+    """
+    x, positions = embed_inputs(params, cfg, tokens, patch_embeds)
+    x, aux = apply_layers(params, cfg, x, positions, remat=remat)
+    return lm_logits(params, cfg, x), aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: states, prefill, decode
+# ---------------------------------------------------------------------------
+def init_states(cfg, batch: int, max_len: int, dtype):
+    """Per-layer serving state: prefix list + stacked scan states."""
+    prefix = tuple(
+        init_block_state(cfg, spec, batch, max_len, dtype) for spec in cfg.prefix
+    )
+    scan = []
+    for spec in cfg.pattern:
+        one = init_block_state(cfg, spec, batch, max_len, dtype)
+        # tile (not zeros): mLSTM/sLSTM stabilizer `m` inits to a -1e30 fill
+        scan.append(jax.tree.map(
+            lambda a: jnp.tile(a[None], (cfg.scan_repeats,) + (1,) * a.ndim), one))
+    return {"prefix": prefix, "scan": tuple(scan)}
+
+
+def prefill(params, cfg, tokens, max_len: int, *, patch_embeds=None):
+    """Process a full prompt, building serving state.
+
+    Returns (logits_last (B, V) f32, states, lengths (B,)).
+    """
+    x, positions = embed_inputs(params, cfg, tokens, patch_embeds)
+    b, s = x.shape[:2]
+    prefix_states = []
+    for p, spec in zip(params["prefix"], cfg.prefix):
+        x, st = prefill_block(p, cfg, spec, x, positions, max_len)
+        prefix_states.append(st)
+
+    scan_states = ()
+    if cfg.scan_repeats:
+        def body(x, layer_params):
+            states = []
+            for j, spec in enumerate(cfg.pattern):
+                x, st = prefill_block(layer_params[j], cfg, spec, x, positions, max_len)
+                states.append(st)
+            return x, tuple(states)
+
+        x, scan_states = jax.lax.scan(body, x, params["scan"])
+
+    logits = lm_logits(params, cfg, x[:, -1:])
+    lengths = jnp.full((b,), s, jnp.int32)
+    states = {"prefix": tuple(prefix_states), "scan": scan_states}
+    if cfg.frontend == "audio":
+        return logits[:, :, 0], states, lengths
+    return logits[:, 0], states, lengths
+
+
+def decode_step(params, cfg, tokens, states, lengths):
+    """One decode step for the whole stack.
+
+    tokens: (B,) int32 ((B, K) for audio) — the token(s) at position
+    lengths-1 (i.e. the cache slot being written this step).
+    Returns (logits (B, V) / (B, K, V) f32, new_states).
+    """
+    if cfg.frontend == "audio":
+        x = frontends.audio_embed(params["codebook_embed"], tokens[:, :, None])[:, 0]
+    else:
+        x = layers.embed(params["embed"], tokens)
+    x = x.astype(jnp.dtype(cfg.activ_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    if cfg.pos == "sinusoidal":
+        # per-example position: lengths-1
+        d = cfg.d_model
+        pos = (lengths - 1).astype(jnp.float32)[:, None]
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, :]
+        inv = jnp.exp(-dim * jnp.log(10000.0) / d)
+        ang = pos * inv
+        pe = jnp.zeros((x.shape[0], d), jnp.float32)
+        pe = pe.at[:, 0::2].set(jnp.sin(ang)).at[:, 1::2].set(jnp.cos(ang))
+        x = x + pe.astype(x.dtype)
+    x = sharding.constraint(x, "batch", "embed")
+
+    new_prefix = []
+    for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
+        x, st2 = decode_block(p, cfg, spec, x, st, lengths)
+        new_prefix.append(st2)
+
+    new_scan = states["scan"]
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_states = xs
+            new_states = []
+            for j, spec in enumerate(cfg.pattern):
+                x, st2 = decode_block(layer_params[j], cfg, spec, x, layer_states[j], lengths)
+                new_states.append(st2)
+            return x, tuple(new_states)
+
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], states["scan"]))
+
+    logits = lm_logits(params, cfg, x[:, None, :])
+    new_states = {"prefix": tuple(new_prefix), "scan": new_scan}
+    if cfg.frontend == "audio":
+        return logits[:, :, 0], new_states
+    return logits[:, 0], new_states
+
+
+# ---------------------------------------------------------------------------
+# Analytic parameter counts (MODEL_FLOPS and accounting)
+# ---------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _param_shapes(cfg):
+    return jax.eval_shape(lambda: init_model(jax.random.key(0), cfg))
+
+
+def param_counts(cfg) -> dict[str, int]:
+    """total / embed (tables) / routed (MoE expert) / active per-token."""
+    shapes = _param_shapes(cfg)
+    total = embed_n = routed = 0
+    for path, leaf in jax.tree_util.tree_leaves_with_path(shapes):
+        s = sharding._path_str(path)
+        n = int(leaf.size)
+        total += n
+        if "embed/w" in s or "codebook_embed" in s:
+            embed_n += n
+        if "/experts/" in s or s.endswith("experts/w_gate") or s.endswith(
+            "experts/w_up") or s.endswith("experts/w_down"):
+            routed += n
+    active = total - routed
+    if cfg.moe:
+        active += routed * cfg.moe.top_k // cfg.moe.num_experts
+    return {
+        "total": total,
+        "embed": embed_n,
+        "routed": routed,
+        "active": active,
+        "active_nonembed": active - embed_n,
+        "total_nonembed": total - embed_n,
+    }

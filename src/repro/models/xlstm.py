@@ -1,0 +1,307 @@
+"""xLSTM blocks (arXiv:2405.04517): mLSTM (matrix memory, parallelizable)
+and sLSTM (scalar memory, sequential scan with block-diagonal recurrence).
+
+mLSTM training/prefill goes through the `mlstm` accelerated hook (stabilized
+parallel form; chunkwise Pallas kernel on TPU). Decode uses the exact
+recurrent form over (C, n, m) state. sLSTM is inherently sequential
+(recurrent weight matrices) and runs as a lax.scan — no kernel, noted in
+DESIGN.md.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hooks
+from repro.models import layers
+
+
+def _mlstm_dims(cfg):
+    di = int(cfg.xlstm.mlstm_proj_factor * cfg.d_model)
+    h = cfg.num_heads
+    return di, h, di // h
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block
+# ---------------------------------------------------------------------------
+def _init_blocked(key, di: int, bs: int, dtype):
+    """Block-diagonal projection (official xLSTM qkv_proj_blocksize):
+    weight (di//bs, bs, bs) — near-banded, O(di*bs) params not O(di^2)."""
+    return {"w": layers.trunc_normal(key, (di // bs, bs, bs), bs**-0.5, dtype)}
+
+
+def _blocked_linear(p, x):
+    """x: (..., di) -> (..., di) through the block-diagonal weight."""
+    nb, bs, _ = p["w"].shape
+    lead = x.shape[:-1]
+    xb = x.reshape(*lead, nb, bs)
+    y = jnp.einsum("...nb,nbc->...nc", xb, p["w"].astype(x.dtype))
+    return y.reshape(*lead, nb * bs)
+
+
+def init_mlstm(key, cfg):
+    di, h, dh = _mlstm_dims(cfg)
+    bs = cfg.xlstm.qkv_block_size
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 9)
+    return {
+        "up_proj": layers.init_linear(ks[0], cfg.d_model, di, dtype=dt),
+        "up_gate": layers.init_linear(ks[1], cfg.d_model, di, dtype=dt),
+        "conv": layers.init_conv1d(ks[2], di, cfg.xlstm.conv_width, dtype=dt),
+        "wq_in": _init_blocked(ks[3], di, bs, dt),
+        "wk_in": _init_blocked(ks[4], di, bs, dt),
+        "wv_in": _init_blocked(ks[5], di, bs, dt),
+        "wi_in": layers.init_linear(ks[6], di, h, bias=True, dtype=dt),
+        "wf_in": layers.init_linear(ks[7], di, h, bias=True, dtype=dt),
+        "head_norm": layers.init_norm(di, kind="rmsnorm", dtype=dt),
+        "down_proj": layers.init_linear(ks[8], di, cfg.d_model, dtype=dt),
+    }
+
+
+def _mlstm_qkvif(p, cfg, x):
+    di, h, dh = _mlstm_dims(cfg)
+    lead = x.shape[:-1]
+    inner = layers.linear(p["up_proj"], x)
+    z = layers.linear(p["up_gate"], x)
+    if x.ndim == 3:
+        c = jax.nn.silu(layers.conv1d(p["conv"], inner))
+        conv_state = None
+    else:  # single-step handled by caller
+        raise AssertionError("use decode()")
+    q = _blocked_linear(p["wq_in"], c).reshape(*lead, h, dh)
+    k = _blocked_linear(p["wk_in"], c).reshape(*lead, h, dh)
+    v = _blocked_linear(p["wv_in"], inner).reshape(*lead, h, dh)
+    ig = layers.linear(p["wi_in"], inner).astype(jnp.float32)
+    fg = layers.linear(p["wf_in"], inner).astype(jnp.float32) + 3.0  # forget-bias init
+    return q, k, v, ig, fg, z, conv_state
+
+
+def apply_mlstm(p, cfg, x, positions=None, *, window=None):
+    """x: (B, S, D) pre-normed -> (B, S, D)."""
+    del positions, window
+    b, s, _ = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    q, k, v, ig, fg, z, _ = _mlstm_qkvif(p, cfg, x)
+    o = hooks.call("mlstm", q, k, v, ig, fg)
+    o = layers.norm(p["head_norm"], o.reshape(b, s, di))
+    y = o * jax.nn.silu(z.astype(jnp.float32)).astype(o.dtype)
+    return layers.linear(p["down_proj"], y)
+
+
+def prefill_mlstm(p, cfg, x, positions, max_len: int, *, window=None):
+    """Full-sequence mLSTM + exact final (C, n, m) recurrent state.
+
+    The final state has the closed form (with g_t = i_t + sum_{s>t} log f_s,
+    m_T = max_t g_t, matching the stabilized decode recursion):
+        C_T = sum_t exp(g_t - m_T) k_t v_t^T,   n_T = sum_t exp(g_t - m_T) k_t
+    """
+    del positions, window, max_len
+    b, s, _ = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    q, k, v, ig, fg, z, _ = _mlstm_qkvif(p, cfg, x)
+    o = hooks.call("mlstm", q, k, v, ig, fg)
+    o = layers.norm(p["head_norm"], o.reshape(b, s, di))
+    y = o * jax.nn.silu(z.astype(jnp.float32)).astype(o.dtype)
+    out = layers.linear(p["down_proj"], y)
+
+    log_f = jax.nn.log_sigmoid(fg)  # (B, S, H) f32
+    log_f_cum = jnp.cumsum(log_f, axis=1)
+    g = ig + (log_f_cum[:, -1:, :] - log_f_cum)  # (B, S, H)
+    m_t = jnp.max(g, axis=1)  # (B, H)
+    w = jnp.exp(g - m_t[:, None, :])  # (B, S, H)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    c_t = jnp.einsum("bsh,bshd,bshv->bhdv", w, kf, vf)
+    n_t = jnp.einsum("bsh,bshd->bhd", w, kf)
+    # conv state: last (conv_width - 1) pre-conv inputs (`inner`)
+    inner = layers.linear(p["up_proj"], x)
+    cw = cfg.xlstm.conv_width - 1
+    conv_tail = inner[:, -cw:, :] if s >= cw else jnp.pad(
+        inner, ((0, 0), (cw - s, 0), (0, 0)))
+    return out, {"c": c_t, "n": n_t, "m": m_t, "conv": conv_tail}
+
+
+def init_mlstm_state(cfg, batch: int, max_len: int, dtype):
+    del max_len
+    di, h, dh = _mlstm_dims(cfg)
+    return {
+        "c": jnp.zeros((batch, h, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, h, dh), jnp.float32),
+        "m": jnp.full((batch, h), -1e30, jnp.float32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, di), dtype),
+    }
+
+
+def decode_mlstm(p, cfg, x, state, lengths, *, window=None):
+    """Exact recurrent mLSTM step. x: (B, D)."""
+    del lengths, window
+    b, _ = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    inner = layers.linear(p["up_proj"], x)
+    z = layers.linear(p["up_gate"], x)
+    c1, conv_state = layers.conv1d(p["conv"], inner[:, None, :], state["conv"])
+    cx = jax.nn.silu(c1[:, 0])
+    q = _blocked_linear(p["wq_in"], cx).reshape(b, h, dh).astype(jnp.float32) * dh**-0.5
+    k = _blocked_linear(p["wk_in"], cx).reshape(b, h, dh).astype(jnp.float32)
+    v = _blocked_linear(p["wv_in"], inner).reshape(b, h, dh).astype(jnp.float32)
+    ig = layers.linear(p["wi_in"], inner).astype(jnp.float32)
+    fg = layers.linear(p["wf_in"], inner).astype(jnp.float32) + 3.0
+    log_f = jax.nn.log_sigmoid(fg)
+    m_new = jnp.maximum(log_f + state["m"], ig)
+    f_s = jnp.exp(log_f + state["m"] - m_new)
+    i_s = jnp.exp(ig - m_new)
+    c = f_s[..., None, None] * state["c"] + i_s[..., None, None] * (
+        k[..., :, None] * v[..., None, :]
+    )
+    n = f_s[..., None] * state["n"] + i_s[..., None] * k
+    num = jnp.einsum("bhd,bhdv->bhv", q, c)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", q, n)), jnp.exp(-m_new))
+    o = (num / den[..., None]).reshape(b, di)
+    o = layers.norm(p["head_norm"], o.astype(x.dtype))
+    y = o * jax.nn.silu(z.astype(jnp.float32)).astype(o.dtype)
+    return layers.linear(p["down_proj"], y), {"c": c, "n": n, "m": m_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan; self-contained post-up-projection FFN)
+# ---------------------------------------------------------------------------
+def init_slstm(key, cfg):
+    d = cfg.d_model
+    h = cfg.num_heads
+    dh = d // h
+    dt = jnp.dtype(cfg.param_dtype)
+    ff = int(cfg.xlstm.slstm_proj_factor * d)
+    ks = jax.random.split(key, 12)
+    gate_w = lambda kk: layers.init_linear(kk, d, d, dtype=dt)
+    rec_w = lambda kk: layers.trunc_normal(kk, (h, dh, dh), dh**-0.5, dt)
+    return {
+        "conv": layers.init_conv1d(ks[0], d, cfg.xlstm.conv_width, dtype=dt),
+        "slstm": {
+            "wz": gate_w(ks[1]), "wi": gate_w(ks[2]),
+            "wf": gate_w(ks[3]), "wo": gate_w(ks[4]),
+            "rz": rec_w(ks[5]), "ri": rec_w(ks[6]),
+            "rf": rec_w(ks[7]), "ro": rec_w(ks[8]),
+            "bz": jnp.zeros((d,), dt), "bi": jnp.zeros((d,), dt),
+            "bf": jnp.full((d,), 3.0, dt), "bo": jnp.zeros((d,), dt),
+        },
+        "head_norm": layers.init_norm(d, kind="rmsnorm", dtype=dt),
+        "ffn_gate": layers.init_linear(ks[9], d, ff, dtype=dt),
+        "ffn_up": layers.init_linear(ks[10], d, ff, dtype=dt),
+        "ffn_down": layers.init_linear(ks[11], ff, d, dtype=dt),
+    }
+
+
+def _slstm_cell(sp, h_prev, c_prev, n_prev, m_prev, zt, it, ft, ot, nheads):
+    """One sLSTM step, all f32. h_prev: (B, D); gate pre-acts: (B, D)."""
+    b, d = h_prev.shape
+    dh = d // nheads
+    hb = h_prev.reshape(b, nheads, dh)
+    rec = lambda r: jnp.einsum("bhd,hdc->bhc", hb, r.astype(jnp.float32)).reshape(b, d)
+    z = jnp.tanh(zt + rec(sp["rz"]))
+    i_pre = it + rec(sp["ri"])
+    f_pre = ft + rec(sp["rf"])
+    o = jax.nn.sigmoid(ot + rec(sp["ro"]))
+    log_f = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(log_f + m_prev, i_pre)
+    i_s = jnp.exp(i_pre - m_new)
+    f_s = jnp.exp(log_f + m_prev - m_new)
+    c = f_s * c_prev + i_s * z
+    n = f_s * n_prev + i_s
+    h = o * c / jnp.maximum(n, 1e-6)
+    return h, c, n, m_new
+
+
+def apply_slstm(p, cfg, x, positions=None, *, window=None):
+    """x: (B, S, D) pre-normed -> (B, S, D). Sequential lax.scan over time."""
+    del positions, window
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    cx = jax.nn.silu(layers.conv1d(p["conv"], x))
+    sp = p["slstm"]
+    f32 = jnp.float32
+    zt = (layers.linear(sp["wz"], x) + sp["bz"]).astype(f32)
+    it = (layers.linear(sp["wi"], cx) + sp["bi"]).astype(f32)
+    ft = (layers.linear(sp["wf"], cx) + sp["bf"]).astype(f32)
+    ot = (layers.linear(sp["wo"], x) + sp["bo"]).astype(f32)
+
+    def step(carry, gates):
+        h, c, n, m = carry
+        z_t, i_t, f_t, o_t = gates
+        h, c, n, m = _slstm_cell(sp, h, c, n, m, z_t, i_t, f_t, o_t, h_heads)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((b, d), f32)
+    init = (zeros, zeros, zeros, jnp.full((b, d), -1e30, f32))
+    gates_t = tuple(jnp.moveaxis(g, 1, 0) for g in (zt, it, ft, ot))
+    _, hs = jax.lax.scan(step, init, gates_t)
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)  # (B,S,D)
+    y = layers.norm(p["head_norm"], h_seq)
+    g = layers.linear(p["ffn_gate"], y)
+    u = layers.linear(p["ffn_up"], y)
+    return layers.linear(p["ffn_down"], jax.nn.gelu(g.astype(f32)).astype(u.dtype) * u)
+
+
+def prefill_slstm(p, cfg, x, positions, max_len: int, *, window=None):
+    """Full-sequence sLSTM; the scan's final carry IS the serving state."""
+    del positions, window, max_len
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    cx = jax.nn.silu(layers.conv1d(p["conv"], x))
+    sp = p["slstm"]
+    f32 = jnp.float32
+    zt = (layers.linear(sp["wz"], x) + sp["bz"]).astype(f32)
+    it = (layers.linear(sp["wi"], cx) + sp["bi"]).astype(f32)
+    ft = (layers.linear(sp["wf"], cx) + sp["bf"]).astype(f32)
+    ot = (layers.linear(sp["wo"], x) + sp["bo"]).astype(f32)
+
+    def step(carry, gates):
+        h, c, n, m = carry
+        z_t, i_t, f_t, o_t = gates
+        h, c, n, m = _slstm_cell(sp, h, c, n, m, z_t, i_t, f_t, o_t, h_heads)
+        return (h, c, n, m), h
+
+    zeros = jnp.zeros((b, d), f32)
+    init = (zeros, zeros, zeros, jnp.full((b, d), -1e30, f32))
+    gates_t = tuple(jnp.moveaxis(g, 1, 0) for g in (zt, it, ft, ot))
+    (hT, cT, nT, mT), hs = jax.lax.scan(step, init, gates_t)
+    h_seq = jnp.moveaxis(hs, 0, 1).astype(x.dtype)
+    y = layers.norm(p["head_norm"], h_seq)
+    g = layers.linear(p["ffn_gate"], y)
+    u = layers.linear(p["ffn_up"], y)
+    out = layers.linear(p["ffn_down"], jax.nn.gelu(g.astype(f32)).astype(u.dtype) * u)
+    cw = cfg.xlstm.conv_width - 1
+    conv_tail = x[:, -cw:, :] if s >= cw else jnp.pad(x, ((0, 0), (cw - s, 0), (0, 0)))
+    return out, {"h": hT, "c": cT, "n": nT, "m": mT, "conv": conv_tail}
+
+
+def init_slstm_state(cfg, batch: int, max_len: int, dtype):
+    del max_len
+    d = cfg.d_model
+    f32 = jnp.float32
+    return {
+        "h": jnp.zeros((batch, d), f32),
+        "c": jnp.zeros((batch, d), f32),
+        "n": jnp.zeros((batch, d), f32),
+        "m": jnp.full((batch, d), -1e30, f32),
+        "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, d), dtype),
+    }
+
+
+def decode_slstm(p, cfg, x, state, lengths, *, window=None):
+    del lengths, window
+    sp = p["slstm"]
+    f32 = jnp.float32
+    c1, conv_state = layers.conv1d(p["conv"], x[:, None, :], state["conv"])
+    cx = jax.nn.silu(c1[:, 0])
+    zt = (layers.linear(sp["wz"], x) + sp["bz"]).astype(f32)
+    it = (layers.linear(sp["wi"], cx) + sp["bi"]).astype(f32)
+    ft = (layers.linear(sp["wf"], cx) + sp["bf"]).astype(f32)
+    ot = (layers.linear(sp["wo"], x) + sp["bo"]).astype(f32)
+    h, c, n, m = _slstm_cell(sp, state["h"], state["c"], state["n"], state["m"],
+                             zt, it, ft, ot, cfg.num_heads)
+    y = layers.norm(p["head_norm"], h.astype(x.dtype))
+    g = layers.linear(p["ffn_gate"], y)
+    u = layers.linear(p["ffn_up"], y)
+    out = layers.linear(p["ffn_down"], jax.nn.gelu(g.astype(f32)).astype(u.dtype) * u)
+    return out, {"h": h, "c": c, "n": n, "m": m, "conv": conv_state}

@@ -1,0 +1,2 @@
+"""Serving substrate: continuous-batching engine + sampling."""
+from repro.serving import engine, sampling  # noqa: F401

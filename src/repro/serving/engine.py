@@ -1,0 +1,232 @@
+"""Continuous-batching serving engine over the functional model zoo.
+
+The XaaS serving story: a SERVICE-class lease holds a fixed chip allocation;
+inside it, this engine multiplexes many short FaaS-style requests onto one
+compiled decode program (the paper's "fine-grained transactional computations"
+running on a long-lived high-performance allocation).
+
+Design (vLLM-shape, JAX-native):
+  * fixed slot count B (the compiled decode batch) with per-slot state inside
+    the *stacked* KV/recurrent caches; slots are recycled across requests
+    (continuous batching).
+  * two compiled programs only — `prefill_one` (padded prompt buckets) and
+    `decode_all` (one token for all B slots) — so serving never recompiles
+    after warmup. Prompt padding buckets bound the prefill-program count.
+  * slot admission writes the prefilled per-slot state into the batched
+    state tree with a donated scatter (`slot_assign`), so admission is O(state
+    of one slot), not O(whole cache).
+  * all host-side logic (queueing, retirement) is control plane; every
+    data-plane array op is jit'd. REST never touches the data path, per the
+    paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from collections import deque
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer
+from repro.serving.sampling import SamplingConfig, sample
+
+__all__ = ["Request", "RequestResult", "ServingEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    request_id: int
+    prompt: Any  # (S,) int32 (or (K, S) audio)
+    max_new_tokens: int
+    sampling: SamplingConfig = dataclasses.field(default_factory=SamplingConfig)
+    eos_id: int | None = None
+
+
+@dataclasses.dataclass
+class RequestResult:
+    request_id: int
+    tokens: list[int] | list[tuple]  # generated tokens (tuples for audio)
+    prefill_steps: int = 1
+    decode_steps: int = 0
+
+
+def _bucket(n: int, buckets: tuple[int, ...]) -> int:
+    for b in buckets:
+        if n <= b:
+            return b
+    return buckets[-1]
+
+
+class ServingEngine:
+    """Continuous-batching engine for one deployed model."""
+
+    def __init__(
+        self,
+        cfg,
+        params,
+        *,
+        slots: int = 8,
+        max_len: int = 512,
+        prompt_buckets: tuple[int, ...] = (32, 128, 512),
+        rng: jax.Array | None = None,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.prompt_buckets = tuple(b for b in prompt_buckets if b <= max_len) or (max_len,)
+        self.rng = rng if rng is not None else jax.random.key(0)
+
+        dt = jnp.dtype(cfg.activ_dtype)
+        self.states = transformer.init_states(cfg, slots, max_len, dt)
+        self.lengths = jnp.zeros((slots,), jnp.int32)
+        self.last_tokens = self._zero_tokens(slots)
+        # host-side slot table
+        self.active: list[Request | None] = [None] * slots
+        self.generated: list[list] = [[] for _ in range(slots)]
+        self.queue: deque[Request] = deque()
+        self.results: dict[int, RequestResult] = {}
+        self.stats = {"prefills": 0, "decode_steps": 0, "retired": 0}
+
+        # ---- compiled programs ----
+        @jax.jit
+        def _decode_all(params, tokens, states, lengths, key):
+            logits, new_states = transformer.decode_step(
+                params, cfg, tokens, states, lengths)
+            return logits, new_states
+
+        self._decode_all = _decode_all
+
+        @functools.partial(jax.jit, static_argnums=(2,))
+        def _prefill_one(params, tokens, max_len):
+            # tokens: (1, Sb) padded bucket
+            return transformer.prefill(params, cfg, tokens, max_len)
+
+        self._prefill_one = _prefill_one
+
+        def _batch_axis(dst, src):
+            # first axis where dst and src disagree and src == 1 (the
+            # prefilled single-request state) is the slot/batch axis
+            for i, (a, b) in enumerate(zip(dst.shape, src.shape)):
+                if a != b and b == 1:
+                    return i
+            for i, a in enumerate(dst.shape):  # same-shape fallback
+                if a == self.slots and src.shape[i] == 1:
+                    return i
+            raise AssertionError(f"no batch axis: {dst.shape} vs {src.shape}")
+
+        @jax.jit
+        def _slot_assign(states, slot_states, lengths, slot, length):
+            def put(dst, src):
+                ax = _batch_axis(dst, src)
+                return jax.lax.dynamic_update_index_in_dim(
+                    dst, jax.lax.squeeze(src, (ax,)).astype(dst.dtype), slot, ax)
+            new = jax.tree.map(put, states, slot_states)
+            return new, lengths.at[slot].set(length)
+
+        self._slot_assign = _slot_assign
+
+    # ------------------------------------------------------------------
+    def _zero_tokens(self, n: int):
+        if self.cfg.frontend == "audio":
+            return jnp.zeros((n, self.cfg.num_codebooks), jnp.int32)
+        return jnp.zeros((n,), jnp.int32)
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def _free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.active) if r is None]
+
+    # ------------------------------------------------------------------
+    def _admit(self) -> None:
+        """Prefill queued requests into free slots."""
+        for slot in self._free_slots():
+            if not self.queue:
+                return
+            req = self.queue.popleft()
+            prompt = jnp.asarray(req.prompt)
+            s = prompt.shape[-1]
+            if s > self.max_len:
+                raise ValueError(f"prompt {s} > engine max_len {self.max_len}")
+            sb = _bucket(s, self.prompt_buckets)
+            pad = sb - s
+            if self.cfg.frontend == "audio":
+                padded = jnp.pad(prompt, ((0, 0), (pad, 0)))[None]
+            else:
+                padded = jnp.pad(prompt, (pad, 0))[None]
+            # NOTE: left-pad keeps the *suffix* alignment the decode path
+            # expects (cache slots [0, sb) filled, real prompt at the tail).
+            logits, slot_states, _ = self._prefill_one(self.params, padded, self.max_len)
+            self.stats["prefills"] += 1
+            self.states, self.lengths = self._slot_assign(
+                self.states, slot_states, self.lengths, slot, sb)
+            self.rng, k = jax.random.split(self.rng)
+            first = sample(k, logits[0], req.sampling)
+            self.active[slot] = req
+            self.generated[slot] = [self._tok_out(first)]
+            self.last_tokens = self.last_tokens.at[slot].set(first)
+
+    def _tok_out(self, tok: jax.Array):
+        t = jax.device_get(tok)
+        return tuple(int(x) for x in t) if t.ndim else int(t)
+
+    def _retire(self, slot: int) -> None:
+        req = self.active[slot]
+        assert req is not None
+        self.results[req.request_id] = RequestResult(
+            request_id=req.request_id,
+            tokens=self.generated[slot],
+            decode_steps=len(self.generated[slot]),
+        )
+        self.active[slot] = None
+        self.generated[slot] = []
+        self.lengths = self.lengths.at[slot].set(0)
+        self.stats["retired"] += 1
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """One engine iteration: admit, decode once for all active slots,
+        sample, retire finished. Returns number of active slots."""
+        self._admit()
+        active_idx = [i for i, r in enumerate(self.active) if r is not None]
+        if not active_idx:
+            return 0
+        # one decode for all B slots (inactive slots compute but are ignored
+        # — the fixed-batch tradeoff that keeps a single compiled program)
+        self.lengths = self.lengths + jnp.asarray(
+            [1 if r is not None else 0 for r in self.active], jnp.int32)
+        self.rng, k = jax.random.split(self.rng)
+        logits, self.states = self._decode_all(
+            self.params, self.last_tokens, self.states, self.lengths, k)
+        self.stats["decode_steps"] += 1
+        # sample per slot (host loop over B is control-plane only)
+        new_tokens = []
+        for i in range(self.slots):
+            req = self.active[i]
+            if req is None:
+                new_tokens.append(self._zero_tokens(1)[0])
+                continue
+            self.rng, k = jax.random.split(self.rng)
+            tok = sample(k, logits[i], req.sampling)
+            new_tokens.append(tok)
+            self.generated[i].append(self._tok_out(tok))
+            done = len(self.generated[i]) >= req.max_new_tokens
+            if req.eos_id is not None and not done:
+                t = self.generated[i][-1]
+                done = (t == req.eos_id) if isinstance(t, int) else (t[0] == req.eos_id)
+            if int(self.lengths[i]) >= self.max_len:
+                done = True
+            if done:
+                self._retire(i)
+        self.last_tokens = jnp.stack(new_tokens)
+        return len([r for r in self.active if r is not None])
+
+    def run_to_completion(self, max_steps: int = 10_000) -> dict[int, RequestResult]:
+        steps = 0
+        while (self.queue or any(r is not None for r in self.active)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return self.results

@@ -1,0 +1,26 @@
+"""Token sampling: greedy / temperature / top-k, audio multi-codebook aware."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["SamplingConfig", "sample"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingConfig:
+    temperature: float = 0.0  # 0 -> greedy
+    top_k: int = 0  # 0 -> full distribution
+
+
+def sample(key: jax.Array, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
+    """logits (..., V) f32 -> token ids (...,) int32."""
+    if cfg.temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / cfg.temperature
+    if cfg.top_k > 0:
+        kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
+        logits = jnp.where(logits < kth, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

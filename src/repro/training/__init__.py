@@ -1,0 +1,3 @@
+"""Training substrate: optimizer (AdamW + ZeRO-1), train-step factory with
+microbatched grad accumulation, remat, and DCN gradient compression."""
+from repro.training import optimizer, train_step  # noqa: F401

@@ -1,0 +1,338 @@
+"""Optimizers: AdamW with ZeRO-1 sharded states, built from scratch in JAX.
+
+ZeRO-1 on the XaaS mesh: optimizer moments are sharded over the *data* axis
+in addition to the parameter's own model-parallel sharding, cutting optimizer
+memory by the DP degree. We implement it the pjit-native way — the moment
+pytrees get PartitionSpecs that extend the param spec by sharding the largest
+replicated dimension over "data"; XLA inserts the reduce-scatter/all-gather
+pair around the update. This keeps the update mathematically identical to
+replicated AdamW (tests assert bit-equality vs. the naive implementation on
+one device).
+
+No optax dependency — the container ships every substrate (assignment rule).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import sharding as shd
+
+__all__ = ["AdamWConfig", "init_adamw", "adamw_update", "zero1_state_pspecs",
+           "AdafactorConfig", "init_adafactor", "adafactor_update",
+           "adafactor_state_pspecs", "global_norm", "clip_by_global_norm",
+           "lr_schedule"]
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    # moment dtype: f32 always (bf16 moments diverge at scale)
+    moment_dtype: str = "float32"
+
+
+def lr_schedule(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    """Linear warmup + cosine decay to lr_min (standard LM schedule)."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1),
+        0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def _stacked(p) -> bool:
+    """Scanned-layer parameter stacks (leading dim = layers). Their
+    optimizer updates run under lax.map over the stack so update temps are
+    one layer's worth — a full 58-layer expert-stack f32 intermediate is
+    3.4 GB/chip and backend fusion cannot always be trusted to elide it.
+    Tensor-level reductions (Adafactor rms/scale) become per-layer, which
+    matches treating each layer as its own logical tensor."""
+    return p.ndim >= 3 and p.shape[0] > 1
+
+
+def _maybe_map_stack(fn, p, *args):
+    if _stacked(p):
+        return jax.lax.map(lambda t: fn(*t), (p, *args))
+    return fn(p, *args)
+
+
+def init_adamw(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return {
+        "step": jnp.zeros((), jnp.int32),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    def sumsq(x):
+        if _stacked(x):
+            # per-layer-slice reduction: a monolithic astype(f32) of a
+            # 58-layer grad stack is a 3.4 GB/chip temp if the backend
+            # fails to fuse the convert into the reduce
+            return jnp.sum(jax.lax.map(
+                lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), x))
+        return jnp.sum(jnp.square(x.astype(jnp.float32)))
+
+    leaves = [sumsq(x) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), norm
+
+
+def clip_scale(grads: Any, max_norm: float) -> tuple[jax.Array, jax.Array]:
+    """(scale, norm) for global-norm clipping WITHOUT materializing a
+    clipped copy of the grads — callers fold `scale` into their update
+    chain. A full bf16 grad copy is 5.1 GB/chip at 671B; this is free."""
+    norm = global_norm(grads)
+    return jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12)), norm
+
+
+def adamw_update(params: Any, grads: Any, state: dict, cfg: AdamWConfig):
+    """One AdamW step. Returns (new_params, new_state, metrics).
+
+    The clip scale is folded into the moment updates (no clipped-grad
+    copy) and the whole per-tensor update is one elementwise chain, so XLA
+    fuses it without f32 intermediates in HBM.
+    """
+    cscale, gnorm = clip_scale(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        gf = g.astype(jnp.float32) * cscale
+        mu2 = b1 * mu + (1 - b1) * gf
+        nu2 = b2 * nu + (1 - b2) * gf * gf
+        mhat = mu2 / bc1
+        nhat = nu2 / bc2
+        delta = mhat / (jnp.sqrt(nhat) + cfg.eps) + cfg.weight_decay * p.astype(jnp.float32)
+        p2 = p.astype(jnp.float32) - lr * delta
+        return p2.astype(p.dtype), mu2.astype(mu.dtype), nu2.astype(nu.dtype)
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_mu = tdef.flatten_up_to(state["mu"])
+    flat_nu = tdef.flatten_up_to(state["nu"])
+    out = [_maybe_map_stack(upd, p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_params = tdef.unflatten([o[0] for o in out])
+    new_mu = tdef.unflatten([o[1] for o in out])
+    new_nu = tdef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"step": step, "mu": new_mu, "nu": new_nu}, metrics
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018) — factored second moment, optional bf16
+# momentum. The launcher recipe selects it for archs whose full AdamW state
+# cannot fit the pod (671B on 256 x 16 GB: params bf16 1.34 TB + f32 m+v
+# 5.4 TB > 4 TB HBM — no sharding fixes arithmetic; PaLM-style factored
+# stats do). DESIGN.md §Hardware-adaptation records this deviation.
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class AdafactorConfig:
+    lr_peak: float = 1e-2
+    lr_min: float = 1e-3
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    decay_exponent: float = 0.8  # beta2_t = 1 - step^-0.8
+    eps1: float = 1e-30
+    eps2: float = 1e-3
+    clip_threshold: float = 1.0
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+    momentum: float = 0.0  # 0 -> no first moment stored
+    momentum_dtype: str = "bfloat16"
+    min_factored: int = 128  # factor only if both trailing dims >= this
+
+
+def _factored(p, cfg: AdafactorConfig) -> bool:
+    return p.ndim >= 2 and min(p.shape[-2:]) >= cfg.min_factored
+
+
+def init_adafactor(params: Any, cfg: AdafactorConfig) -> dict:
+    def stats(p):
+        if _factored(p, cfg):
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "stats": jax.tree.map(stats, params,
+                              is_leaf=lambda x: hasattr(x, "shape")),
+    }
+    if cfg.momentum:
+        dt = jnp.dtype(cfg.momentum_dtype)
+        state["mu"] = jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params)
+    return state
+
+
+def adafactor_update(params: Any, grads: Any, state: dict, cfg: AdafactorConfig):
+    """One Adafactor step. Returns (new_params, new_state, metrics).
+
+    Memory discipline (671B fits a 16 GB chip because of this): the update
+    never materializes a full-tensor f32 intermediate. `u` is expressed as
+    the elementwise chain g * rsqrt(vhat) twice — once inside the rms
+    reduction (fused into the reduce), once inside the final parameter
+    chain (fused into the p_new write). Recompute is ~free; a 58-layer
+    expert-stack f32 temp is 3.4 GB/chip.
+    """
+    cscale, gnorm = clip_scale(grads, cfg.grad_clip)
+    step = state["step"] + 1
+    lr = lr_schedule(  # reuse the warmup+cosine schedule shape
+        AdamWConfig(lr_peak=cfg.lr_peak, lr_min=cfg.lr_min,
+                    warmup_steps=cfg.warmup_steps, decay_steps=cfg.decay_steps),
+        step)
+    beta2 = 1.0 - step.astype(jnp.float32) ** -cfg.decay_exponent
+
+    def upd(p, g, st, mu):
+        def gf():  # recompute-friendly: never bound to a full f32 temp
+            return g.astype(jnp.float32) * cscale
+
+        if "vr" in st:
+            g2_row = jnp.mean(jnp.square(gf()), axis=-1) + cfg.eps1
+            g2_col = jnp.mean(jnp.square(gf()), axis=-2) + cfg.eps1
+            vr = beta2 * st["vr"] + (1 - beta2) * g2_row
+            vc = beta2 * st["vc"] + (1 - beta2) * g2_col
+            denom = jnp.mean(vr, axis=-1, keepdims=True)
+            def rsq():  # broadcast chain, fuses into consumers
+                vhat = vr[..., None] * vc[..., None, :] / jnp.maximum(
+                    denom[..., None], cfg.eps1)
+                return jax.lax.rsqrt(vhat + cfg.eps1)
+            new_st = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * (jnp.square(gf()) + cfg.eps1)
+            def rsq():
+                return jax.lax.rsqrt(v + cfg.eps1)
+            new_st = {"v": v}
+        # rms(u) via a fused reduce (u never materializes)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(gf() * rsq())) + 1e-30)
+        uclip = 1.0 / jnp.maximum(1.0, rms_u / cfg.clip_threshold)
+        if cfg.momentum:
+            u = cfg.momentum * mu.astype(jnp.float32) + (
+                1 - cfg.momentum) * (gf() * rsq() * uclip)
+            new_mu = u.astype(mu.dtype)
+            update = u
+        else:
+            new_mu = mu
+            update = gf() * rsq() * uclip
+        scale = jnp.maximum(
+            cfg.eps2,
+            jnp.sqrt(jnp.mean(jnp.square(p.astype(jnp.float32)))))
+        delta = update * scale + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), new_st, new_mu
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = tdef.flatten_up_to(grads)
+    flat_st = tdef.flatten_up_to(state["stats"])
+    flat_mu = tdef.flatten_up_to(state["mu"]) if cfg.momentum else [None] * len(flat_p)
+    def upd_nomu(p, g, st):
+        return upd(p, g, st, None)
+    out = [
+        _maybe_map_stack(upd, p, g, st, m) if m is not None else
+        (jax.lax.map(lambda t: upd_nomu(*t), (p, g, st)) if _stacked(p)
+         else upd(p, g, st, None))
+        for p, g, st, m in zip(flat_p, flat_g, flat_st, flat_mu)
+    ]
+    new_state = {
+        "step": step,
+        "stats": tdef.unflatten([o[1] for o in out]),
+    }
+    if cfg.momentum:
+        new_state["mu"] = tdef.unflatten([o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return tdef.unflatten([o[0] for o in out]), new_state, metrics
+
+
+def adafactor_state_pspecs(params: Any, cfg: AdafactorConfig) -> dict:
+    """PartitionSpecs mirroring init_adafactor's tree: factored stats drop
+    the reduced dim from the param's spec; full stats inherit it."""
+    pspecs = shd.param_pspecs(params)
+
+    def stats_spec(p, spec):
+        entries = tuple(spec) + (None,) * (p.ndim - len(spec))
+        if _factored(p, cfg):
+            return {"vr": P(*entries[:-1]), "vc": P(*entries[:-2], entries[-1])}
+        return {"v": P(*entries)}
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_s = tdef.flatten_up_to(pspecs)
+    out = {
+        "step": P(),
+        "stats": tdef.unflatten(
+            [stats_spec(p, s) for p, s in zip(flat_p, flat_s)]),
+    }
+    if cfg.momentum:
+        out["mu"] = pspecs
+    return out
+
+
+# ---------------------------------------------------------------------------
+# ZeRO-1: moment sharding specs
+# ---------------------------------------------------------------------------
+def _extend_spec_over_data(spec: P, shape: tuple[int, ...], mesh, data_axes) -> P:
+    """Shard the largest axis of `shape` that `spec` leaves replicated over
+    the data axis (if divisible) — the moments-only ZeRO-1 partition.
+    No-op when the param spec already consumes the data axis (FSDP)."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    used: set[str] = set()
+    for e in entries:
+        if e is None:
+            continue
+        used.update(e if isinstance(e, tuple) else (e,))
+    names = data_axes if isinstance(data_axes, tuple) else (data_axes,)
+    if used & set(names):
+        return P(*entries)
+    dp = 1
+    for a in names:
+        dp *= mesh.shape[a]
+    # candidate dims: currently unsharded, divisible by dp; pick the largest
+    best, best_dim = -1, -1
+    for i, (dim, e) in enumerate(zip(shape, entries)):
+        if e is None and dim % dp == 0 and dim > best_dim:
+            best, best_dim = i, dim
+    if best >= 0:
+        entries[best] = data_axes
+    return P(*entries)
+
+
+def zero1_state_pspecs(params: Any, mesh, *, data_axes="data") -> dict:
+    """PartitionSpec pytree for the AdamW state under ZeRO-1.
+
+    Each moment inherits its parameter's spec, then additionally shards its
+    largest replicated dim over the data axis. `step` is replicated.
+    """
+    pspecs = shd.param_pspecs(params)
+    flat_specs, tdef = jax.tree.flatten(pspecs, is_leaf=lambda x: isinstance(x, P))
+    flat_params = tdef.flatten_up_to(params)
+    mom = tdef.unflatten([
+        _extend_spec_over_data(s, p.shape, mesh, data_axes)
+        for s, p in zip(flat_specs, flat_params)
+    ])
+    return {"step": P(), "mu": mom, "nu": mom}

@@ -1,0 +1,24 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real single
+CPU device (the dry-run forces its own 512 stand-in devices in-process)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.key(0)
+
+
+def tiny_mesh():
+    """A (1, 1) data x model mesh on the single real device — exercises the
+    full sharded code path (rules, constraints, NamedShardings) without
+    fake devices."""
+    import numpy as np
+    devs = np.array(jax.devices()[:1]).reshape(1, 1)
+    return jax.sharding.Mesh(devs, ("data", "model"))
+
+
+@pytest.fixture()
+def mesh11():
+    return tiny_mesh()

@@ -1,0 +1,123 @@
+"""XaaS core integration: hooks registry semantics, performance-portable
+container deploy, deployment-recompilation cache, invocation + metering."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import container as xc
+from repro.core import hooks, invocation, recompile, scheduler
+from repro.core.accounting import Meter
+
+
+# ---------------------------------------------------------------------------
+# hooks
+# ---------------------------------------------------------------------------
+def test_hook_registry_and_priorities():
+    apis = hooks.list_apis()
+    for required in ("attention", "decode_attention", "matmul", "rmsnorm",
+                     "moe_mlp", "linear_recurrence", "mlstm"):
+        assert required in apis
+    # pallas-tpu outranks xla-blocked on a TPU profile
+    impls = hooks.available_impls("attention", recompile.TPU_V5E_POD)
+    assert impls[0] == "portable" or "pallas-tpu" in impls
+    binding = hooks.bind(recompile.TPU_V5E_POD)
+    assert binding.providers()["attention"] == "pallas-tpu"
+    # the portable floor: no profile -> reference everywhere
+    floor = hooks.bind(None)
+    assert floor.providers()["attention"] == "portable"
+    # CPU profile gets no TPU kernels
+    cpu = hooks.bind(recompile.PORTABLE_CPU)
+    assert cpu.providers()["attention"] == "portable"
+
+
+def test_hook_override_and_unknown_rejected():
+    b = hooks.bind(None, overrides={"attention": "xla-blocked"})
+    assert b.providers()["attention"] == "xla-blocked"
+    with pytest.raises(hooks.HookError):
+        hooks.bind(None, overrides={"attention": "no-such-provider"})
+    with pytest.raises(hooks.HookError):
+        hooks.bind(None, overrides={"no_such_api": "portable"})
+
+
+def test_hook_scoping_nested():
+    b1 = hooks.bind(None)
+    b2 = hooks.bind(None, overrides={"attention": "xla-blocked"})
+    with hooks.use(b1):
+        assert hooks.current_binding() is b1
+        with hooks.use(b2):
+            assert hooks.current_binding() is b2
+        assert hooks.current_binding() is b1
+    assert hooks.current_binding() is None
+
+
+# ---------------------------------------------------------------------------
+# deployment recompilation (ship IR, specialize at target)
+# ---------------------------------------------------------------------------
+def test_recompile_cache_cold_vs_warm():
+    fn = lambda a: a @ a
+    x = jnp.zeros((64, 64))
+    comp = recompile.DeploymentCompiler()
+    b1 = comp.deploy(fn, "m", recompile.PORTABLE_CPU, args=(x,))
+    b2 = comp.deploy(fn, "m", recompile.PORTABLE_CPU, args=(x,))
+    assert not b1.cache_hit and b2.cache_hit
+    assert comp.stats == {"ir_hits": 1, "ir_misses": 1,
+                          "exe_hits": 1, "exe_misses": 1}
+    # different arg shape -> new IR (a different "container image")
+    y = jnp.zeros((32, 32))
+    comp.deploy(fn, "m", recompile.PORTABLE_CPU, args=(y,))
+    assert comp.stats["ir_misses"] == 2
+
+
+def test_collective_parser_on_sharded_program():
+    text = """
+  %ag = bf16[256,1024]{1,0} all-gather(%x), replica_groups={{0,1}}, dimensions={0}
+  %ar = f32[64]{0} all-reduce(%y), replica_groups=[1,2]<=[2], to_apply=%sum
+"""
+    out = recompile.collective_bytes(text)
+    assert out["all-gather"] == 256 * 1024 * 2
+    assert out["all-reduce"] == 64 * 4
+    assert out["total"] == 256 * 1024 * 2 + 64 * 4
+
+
+# ---------------------------------------------------------------------------
+# XContainer end-to-end on the portable profile
+# ---------------------------------------------------------------------------
+def _matmul_container():
+    def fn(a, b):
+        return hooks.call("matmul", a, b)
+
+    def make_args(mesh):
+        sds = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+        return (sds, sds), {}, {}
+
+    return xc.XContainer(name="blas-demo", entrypoints={"mm": (fn, make_args)})
+
+
+def test_container_deploy_and_run():
+    cont = _matmul_container()
+    dep = cont.deploy(recompile.PORTABLE_CPU)
+    art = dep.artifact("mm")
+    assert art.flops == pytest.approx(2 * 64**3, rel=0.05)
+    x = jnp.ones((64, 64))
+    out = dep("mm", x, x)
+    np.testing.assert_allclose(np.asarray(out), 64.0)
+
+
+def test_invocation_lease_lifecycle_and_metering():
+    cluster = scheduler.Cluster(chips=8)
+    svc = invocation.InvocationService(cluster, Meter())
+    cont = _matmul_container()
+    prof = recompile.PORTABLE_CPU
+    lease = svc.acquire("alice", cont, prof)
+    assert lease.active and lease.chips == 1
+    x = jnp.ones((64, 64))
+    svc.invoke(lease, "mm", x, x, steps=3)
+    assert svc.meter.total_usd("alice") > 0
+    assert svc.meter.bills[0].flops == lease.deployment.artifact("mm").flops
+    svc.release(lease)
+    assert not lease.active
+    # warm re-acquire skips compilation
+    lease2 = svc.acquire("alice", cont, prof)
+    assert svc.stats["warm_acquires"] == 1
+    svc.release(lease2)

@@ -1,0 +1,136 @@
+"""Optimizer correctness: AdamW vs a naive reference, Adafactor behavior,
+stack-chunked update equivalence, clip-scale equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.training import optimizer as opt
+
+
+def _params(key, stacked=False):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w": jax.random.normal(ks[0], (8, 16)) * 0.1,
+        "b": jax.random.normal(ks[1], (16,)) * 0.1,
+    }
+    if stacked:
+        p["stack"] = jax.random.normal(ks[2], (4, 8, 16)) * 0.1
+    return p
+
+
+def test_adamw_matches_naive_reference():
+    cfg = opt.AdamWConfig(lr_peak=1e-2, warmup_steps=0, decay_steps=100,
+                          weight_decay=0.01, grad_clip=1e9)
+    key = jax.random.key(0)
+    params = _params(key)
+    grads = jax.tree.map(lambda p: jnp.ones_like(p) * 0.01, params)
+    state = opt.init_adamw(params, cfg)
+    p2, s2, _ = opt.adamw_update(params, grads, state, cfg)
+
+    # naive reference
+    b1, b2, step = cfg.b1, cfg.b2, 1
+    lr = float(opt.lr_schedule(cfg, jnp.int32(step)))
+    for k in params:
+        g = np.asarray(grads[k], np.float64)
+        mu = (1 - b1) * g
+        nu = (1 - b2) * g * g
+        mhat = mu / (1 - b1**step)
+        nhat = nu / (1 - b2**step)
+        want = (np.asarray(params[k], np.float64)
+                - lr * (mhat / (np.sqrt(nhat) + cfg.eps)
+                        + cfg.weight_decay * np.asarray(params[k], np.float64)))
+        np.testing.assert_allclose(np.asarray(p2[k]), want, atol=1e-5)
+
+
+def test_stacked_map_update_equivalent():
+    """lax.map-chunked update == unchunked update (AdamW has no per-tensor
+    reductions, so slicing the stack is exact)."""
+    cfg = opt.AdamWConfig(grad_clip=1e9)
+    key = jax.random.key(1)
+    stacked = {"s": jax.random.normal(key, (4, 8, 16)) * 0.1}
+    flat = {"s": stacked["s"].reshape(32, 16)}  # ndim-2: not chunked
+    g_st = jax.tree.map(lambda p: p * 0.03, stacked)
+    g_fl = {"s": g_st["s"].reshape(32, 16)}
+    p2_st, _, _ = opt.adamw_update(stacked, g_st, opt.init_adamw(stacked, cfg), cfg)
+    p2_fl, _, _ = opt.adamw_update(flat, g_fl, opt.init_adamw(flat, cfg), cfg)
+    np.testing.assert_allclose(
+        np.asarray(p2_st["s"]).reshape(32, 16), np.asarray(p2_fl["s"]),
+        atol=1e-6)
+
+
+def test_clip_scale_equals_materialized_clip():
+    key = jax.random.key(2)
+    grads = {"a": jax.random.normal(key, (32,)) * 10.0}
+    clipped, norm1 = opt.clip_by_global_norm(grads, 1.0)
+    scale, norm2 = opt.clip_scale(grads, 1.0)
+    np.testing.assert_allclose(float(norm1), float(norm2), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(clipped["a"]), np.asarray(grads["a"]) * float(scale),
+        rtol=1e-5)
+    # clipped norm is at most the max norm
+    assert float(opt.global_norm(clipped)) <= 1.0 + 1e-5
+
+
+def test_global_norm_stacked_matches_flat():
+    key = jax.random.key(3)
+    x = jax.random.normal(key, (4, 130, 130))  # stacked path (ndim 3)
+    n1 = float(opt.global_norm({"x": x}))
+    n2 = float(jnp.sqrt(jnp.sum(jnp.square(x))))
+    np.testing.assert_allclose(n1, n2, rtol=1e-6)
+
+
+def test_adafactor_reduces_loss_and_is_factored():
+    cfg = opt.AdafactorConfig(lr_peak=0.05, lr_min=0.05, warmup_steps=0,
+                              min_factored=8)
+    key = jax.random.key(4)
+    w = jax.random.normal(key, (16, 16)) * 0.5
+    target = jnp.eye(16)
+    params = {"w": w}
+    state = opt.init_adafactor(params, cfg)
+    assert "vr" in state["stats"]["w"] and "vc" in state["stats"]["w"]
+    assert state["stats"]["w"]["vr"].shape == (16,)
+
+    def loss(p):
+        return jnp.mean((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(20):
+        g = jax.grad(loss)(params)
+        params, state, _ = opt.adafactor_update(params, g, state, cfg)
+    assert float(loss(params)) < l0 * 0.7
+
+
+def test_adafactor_momentum_state():
+    cfg = opt.AdafactorConfig(momentum=0.9, min_factored=8)
+    params = {"w": jnp.ones((16, 16))}
+    state = opt.init_adafactor(params, cfg)
+    assert "mu" in state and state["mu"]["w"].dtype == jnp.bfloat16
+    g = {"w": jnp.ones((16, 16)) * 0.1}
+    p2, s2, _ = opt.adafactor_update(params, g, state, cfg)
+    assert bool(jnp.any(s2["mu"]["w"] != 0))
+
+
+def test_adafactor_state_pspecs_mirror_init():
+    from jax.sharding import PartitionSpec as P
+
+    cfg = opt.AdafactorConfig(min_factored=8)
+    params = {"w": jnp.ones((16, 32)), "b": jnp.ones((32,))}
+    state = opt.init_adafactor(params, cfg)
+    specs = opt.adafactor_state_pspecs(params, cfg)
+    # same tree structure for stats
+    s1 = jax.tree.structure(state["stats"])
+    s2 = jax.tree.structure(
+        jax.tree.map(lambda x: 0, specs["stats"],
+                     is_leaf=lambda x: isinstance(x, P)))
+    assert s1 == s2
+
+
+def test_lr_schedule_shape():
+    cfg = opt.AdamWConfig(lr_peak=1e-3, lr_min=1e-4, warmup_steps=10,
+                          decay_steps=100)
+    lrs = [float(opt.lr_schedule(cfg, jnp.int32(s))) for s in range(0, 120, 5)]
+    assert lrs[0] == 0.0
+    assert max(lrs) <= 1e-3 + 1e-9
+    assert abs(lrs[2] - 1e-3) < 1e-9  # peak at warmup end
+    assert lrs[-1] >= 1e-4 - 1e-9  # floor

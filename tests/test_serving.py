@@ -1,0 +1,99 @@
+"""Serving engine: continuous batching completes all requests; greedy decode
+matches the step-by-step model; slot recycling; audio path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.sampling import SamplingConfig, sample
+
+
+def _engine(arch="qwen2-0.5b", dropless=True, **kw):
+    cfg = configs.get_config(arch + "-smoke")
+    if dropless and cfg.moe is not None:
+        cfg = dataclasses.replace(
+            cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params, ServingEngine(cfg, params, slots=4, max_len=128,
+                                      prompt_buckets=(16, 32), **kw)
+
+
+def test_all_requests_complete_more_requests_than_slots():
+    cfg, params, eng = _engine()
+    rng = np.random.default_rng(0)
+    n = 10  # > slots
+    for i in range(n):
+        plen = int(rng.integers(4, 16))
+        eng.submit(Request(request_id=i,
+                           prompt=rng.integers(0, cfg.vocab_size, (plen,)),
+                           max_new_tokens=int(rng.integers(2, 8))))
+    results = eng.run_to_completion()
+    assert sorted(results) == list(range(n))
+    assert eng.stats["retired"] == n
+    assert eng.stats["prefills"] == n
+    for i, r in results.items():
+        assert 2 <= len(r.tokens) <= 8
+
+
+def test_greedy_engine_matches_manual_decode():
+    """Engine greedy output == hand-rolled prefill+decode_step loop."""
+    cfg, params, eng = _engine()
+    prompt = np.arange(10, dtype=np.int32) % cfg.vocab_size
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=5))
+    result = eng.run_to_completion()[0]
+
+    # manual greedy reference with the left-padded bucket the engine used
+    bucket = 16
+    padded = jnp.pad(jnp.asarray(prompt), (bucket - len(prompt), 0))[None]
+    logits, states, lengths = transformer.prefill(params, cfg, padded, 128)
+    toks = [int(jnp.argmax(logits[0]))]
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    for _ in range(4):
+        lengths = lengths + 1
+        logits, states = transformer.decode_step(params, cfg, cur, states, lengths)
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(int(cur[0]))
+    assert result.tokens == toks
+
+
+def test_eos_stops_generation():
+    cfg, params, eng = _engine()
+    # find the actual first greedy token, then use it as "eos"
+    prompt = np.arange(6, dtype=np.int32)
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=50))
+    first = eng.run_to_completion()[0].tokens[1]
+    cfg2, params2, eng2 = _engine()
+    eng2.submit(Request(request_id=1, prompt=prompt, max_new_tokens=50,
+                        eos_id=int(first)))
+    r = eng2.run_to_completion()[1]
+    assert len(r.tokens) < 50
+    assert r.tokens[-1] == first
+
+
+def test_audio_engine_multicodebook():
+    cfg, params, eng = _engine("musicgen-medium")
+    rng = np.random.default_rng(1)
+    eng.submit(Request(
+        request_id=0,
+        prompt=rng.integers(0, cfg.vocab_size, (cfg.num_codebooks, 8)),
+        max_new_tokens=3))
+    r = eng.run_to_completion()[0]
+    assert len(r.tokens) == 3
+    assert all(len(t) == cfg.num_codebooks for t in r.tokens)
+
+
+def test_sampling_modes():
+    key = jax.random.key(0)
+    logits = jnp.asarray([[0.0, 5.0, 1.0, -2.0]])
+    assert int(sample(key, logits, SamplingConfig())[0]) == 1  # greedy
+    # top-k=1 == greedy regardless of temperature
+    assert int(sample(key, logits,
+                      SamplingConfig(temperature=2.0, top_k=1))[0]) == 1
+    # temperature sampling stays in-vocab
+    s = sample(key, jnp.zeros((64, 16)), SamplingConfig(temperature=1.0))
+    assert s.shape == (64,) and bool((s >= 0).all()) and bool((s < 16).all())

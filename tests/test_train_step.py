@@ -1,0 +1,114 @@
+"""Train-step semantics: microbatch-count invariance, both accumulation
+forms, int8 error-feedback compression (hypothesis), gradient flow."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import configs
+from repro.training import train_step as ts
+
+
+def _batch(cfg, key, b=8, s=16):
+    tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    return {"tokens": tok, "labels": jnp.roll(tok, -1, axis=-1)}
+
+
+def test_microbatch_invariance_f32():
+    """M=1 and M=4 produce (near-)identical updates with f32 accumulation."""
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    key = jax.random.key(0)
+    batch = _batch(cfg, jax.random.key(1))
+    outs = {}
+    for m in (1, 4):
+        tcfg = ts.TrainConfig(microbatches=m, accum_dtype="float32")
+        state = ts.init_train_state(key, cfg, tcfg)
+        step = jax.jit(ts.make_train_step(cfg, tcfg))
+        new_state, metrics = step(state, batch)
+        outs[m] = (new_state["params"], float(metrics["loss"]))
+    # loss means match; params updates match closely
+    assert abs(outs[1][1] - outs[4][1]) < 2e-2
+    flat1 = jax.tree.leaves(outs[1][0])
+    flat4 = jax.tree.leaves(outs[4][0])
+    for a, b in zip(flat1, flat4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-2)
+
+
+def test_cotangent_accumulation_matches_explicit():
+    """The scan-inside-grad accumulation (accum_dtype=bfloat16) matches the
+    explicit f32 accumulator within bf16 tolerance."""
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    key = jax.random.key(0)
+    batch = _batch(cfg, jax.random.key(1))
+    outs = {}
+    for dt in ("float32", "bfloat16"):
+        tcfg = ts.TrainConfig(microbatches=4, accum_dtype=dt)
+        state = ts.init_train_state(key, cfg, tcfg)
+        step = jax.jit(ts.make_train_step(cfg, tcfg))
+        new_state, metrics = step(state, batch)
+        outs[dt] = (new_state["params"], float(metrics["loss"]))
+    assert abs(outs["float32"][1] - outs["bfloat16"][1]) < 5e-2
+    for a, b in zip(jax.tree.leaves(outs["float32"][0]),
+                    jax.tree.leaves(outs["bfloat16"][0])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=0.1)
+
+
+@given(st.lists(st.floats(-100.0, 100.0), min_size=1, max_size=64))
+@settings(max_examples=100, deadline=None)
+def test_int8_compression_bounded_error(vals):
+    """|dequant(quant(x)) - x| <= scale/2 elementwise (hypothesis)."""
+    x = jnp.asarray(vals, jnp.float32)
+    q, scale = ts.compress_int8(x)
+    back = ts.decompress_int8(q, scale)
+    assert q.dtype == jnp.int8
+    err = np.max(np.abs(np.asarray(back) - np.asarray(x)))
+    assert err <= float(scale) * 0.5 + 1e-6
+
+
+def test_int8_error_feedback_converges():
+    """With error feedback, repeated compression of a constant gradient has
+    O(1/steps) mean bias (the residual carries what quantization dropped)."""
+    g = jnp.asarray([0.001, 0.5, -0.3, 1.0], jnp.float32)
+    ef = jnp.zeros_like(g)
+    acc = jnp.zeros_like(g)
+    steps = 50
+    for _ in range(steps):
+        q, scale = ts.compress_int8(g + ef)
+        back = ts.decompress_int8(q, scale)
+        ef = (g + ef) - back
+        acc = acc + back
+    np.testing.assert_allclose(np.asarray(acc / steps), np.asarray(g),
+                               atol=2e-3)
+
+
+def test_vlm_loss_aligns_labels():
+    """VLM logits cover [image|text]; CE must use only the text tail."""
+    cfg = configs.get_config("llava-next-34b-smoke")
+    from repro.models import frontends
+
+    key = jax.random.key(0)
+    b, s = 2, 8
+    tok = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    batch = {
+        "tokens": tok,
+        "labels": jnp.roll(tok, -1, -1),
+        "patch_embeds": jax.random.normal(
+            key, (b, cfg.num_image_tokens, frontends.VIS_DIM), jnp.float32),
+    }
+    tcfg = ts.TrainConfig()
+    state = ts.init_train_state(key, cfg, tcfg)
+    loss, metrics = ts.loss_fn(state["params"], cfg, batch)
+    assert jnp.isfinite(loss)
+
+
+def test_masked_labels_ignored():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    logits = jnp.zeros((2, 4, cfg.vocab_size))
+    labels = jnp.asarray([[1, 2, -100, -100], [3, -100, -100, -100]])
+    ce = ts.cross_entropy(logits, labels)
+    # uniform logits -> CE = log(V) over the 3 valid positions only
+    np.testing.assert_allclose(float(ce), float(jnp.log(cfg.vocab_size)),
+                               rtol=1e-5)

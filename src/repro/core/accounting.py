@@ -136,6 +136,15 @@ class Meter:
     def total_flop_s(self, tenant: str | None = None) -> float:
         return sum(b.flop_s for b in self._select(tenant))
 
+    def total_steps(self, kind: str, tenant: str | None = None) -> int:
+        """Total metered step count for one bill kind (e.g. decode steps,
+        served tokens) — the usage-quantum query the serving ledger uses."""
+        return sum(b.steps for b in self._select(tenant) if b.kind == kind)
+
+    def served_tokens(self, tenant: str | None = None) -> int:
+        """Tokens served to a tenant through leased serving executors."""
+        return self.total_steps("serve_tokens", tenant)
+
     def by_tenant(self) -> dict[str, float]:
         out: dict[str, float] = defaultdict(float)
         for b in self.bills:

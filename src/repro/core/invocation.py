@@ -32,7 +32,7 @@ from typing import Any
 
 from repro.core import accounting, container as xcontainer, recompile, scheduler
 
-__all__ = ["Lease", "InvocationService", "model_step_time"]
+__all__ = ["Lease", "InvocationService", "ServingExecutor", "model_step_time"]
 
 
 def model_step_time(artifact: recompile.CompiledArtifact) -> float:
@@ -143,6 +143,34 @@ class InvocationService:
         self.stats["invocations"] += 1
         return out
 
+    def acquire_serving(
+        self,
+        tenant: str,
+        cont: xcontainer.XContainer,
+        profile: recompile.SystemProfile,
+        *,
+        mesh=None,
+        runtime_s: float = 3600.0,
+    ) -> "ServingExecutor":
+        """Acquire a SERVICE-class lease whose deployment boots a serving
+        engine (build ``cont`` with ``repro.serving.service.serving_container``).
+
+        The lease pins the chip allocation for the engine's lifetime (the
+        paper's long-lived high-performance allocation); the engine
+        multiplexes fine-grained requests onto it, and every served token is
+        metered into the tenant's ledger via the returned executor.
+        """
+        factory = cont.meta.get("engine_factory")
+        if factory is None:
+            raise ValueError(
+                f"container {cont.name!r} has no meta['engine_factory']; "
+                "build it with repro.serving.service.serving_container")
+        lease = self.acquire(
+            tenant, cont, profile, mesh=mesh, runtime_s=runtime_s,
+            klass=scheduler.JobClass.SERVICE)
+        engine = factory(lease.deployment)
+        return ServingExecutor(service=self, lease=lease, engine=engine)
+
     def release(self, lease: Lease) -> None:
         """Scale to zero: free the chips; keep the warm artifact cached."""
         if lease.active:
@@ -156,3 +184,80 @@ class InvocationService:
             l for l in self._leases.values()
             if l.active and (tenant is None or l.tenant == tenant)
         ]
+
+
+class ServingExecutor:
+    """Serving data plane bound to a SERVICE lease.
+
+    Wraps the ``ServingEngine`` booted from the lease's deployment. Requests
+    flow through the lease (``submit`` / ``run``); the hot loop inside the
+    engine stays one fused compiled program — the control plane never touches
+    the data path. After each drain, the delta of decode steps and served
+    tokens is metered into the tenant's ledger:
+
+      * ``serve_decode``: decode-step executions, billed with FLOPs/bytes
+        from the deployment's compiled ``decode`` artifact (the same
+        compiled-truth rule the rest of accounting follows).
+      * ``serve_tokens``: the per-token usage line (the FaaS billing quantum
+        lifted to continuous batching) — queryable via
+        ``Meter.served_tokens(tenant)``.
+    """
+
+    def __init__(self, service: InvocationService, lease: Lease, engine: Any):
+        self.service = service
+        self.lease = lease
+        self.engine = engine
+        self._metered_tokens = 0
+        self._metered_steps = 0
+
+    def warmup(self) -> None:
+        """Pre-compile the engine's data-plane programs (warm-start)."""
+        self.engine.warmup()
+
+    def submit(self, request) -> None:
+        if not self.lease.active:
+            raise RuntimeError(f"lease {self.lease.lease_id} is released")
+        self.engine.submit(request)
+
+    def run(self, max_steps: int = 10_000) -> dict:
+        """Drain the engine and meter the usage delta. Returns the engine's
+        request_id -> RequestResult map (cumulative across runs)."""
+        if not self.lease.active:
+            raise RuntimeError(f"lease {self.lease.lease_id} is released")
+        t0 = time.perf_counter()
+        results = self.engine.run_to_completion(max_steps=max_steps)
+        wall = time.perf_counter() - t0
+        self._meter(wall)
+        return results
+
+    @property
+    def unserved(self) -> int:
+        return self.engine.stats.get("unserved", 0)
+
+    def _meter(self, wall_s: float) -> None:
+        try:
+            art = self.lease.deployment.artifact("decode")
+        except KeyError:
+            art = None
+        steps = self.engine.stats["decode_steps"] - self._metered_steps
+        tokens = sum(
+            len(r.tokens) for r in self.engine.results.values()
+        ) - self._metered_tokens
+        job_id = f"lease-{self.lease.lease_id}"
+        if steps > 0:
+            self.service.meter.record(
+                tenant=self.lease.tenant, kind="serve_decode", steps=steps,
+                chips=self.lease.chips, wall_s=wall_s, artifact=art,
+                job_id=job_id)
+            self._metered_steps += steps
+        if tokens > 0:
+            # pure usage-count line: wall already billed on the decode line
+            self.service.meter.record(
+                tenant=self.lease.tenant, kind="serve_tokens", steps=tokens,
+                chips=self.lease.chips, wall_s=0.0, job_id=job_id)
+            self._metered_tokens += tokens
+        self.service.stats["invocations"] += 1
+
+    def release(self) -> None:
+        """Scale to zero; the warm deployment stays cached for re-acquire."""
+        self.service.release(self.lease)

@@ -1,8 +1,10 @@
-"""Serving driver — continuous-batching engine over a deployed model.
+"""Serving driver — leased continuous-batching engine over a deployed model.
 
-Runs REAL decode steps (not the dry-run): builds a model, boots the
-``ServingEngine`` (vLLM-shape: slot recycling, two compiled programs), feeds
-it a synthetic request stream, and reports throughput + per-request stats.
+Serving is a first-class XaaS workload here: the driver acquires a
+SERVICE-class lease from the ``InvocationService`` control plane, the lease's
+deployment boots the ``ServingEngine`` (fused data plane: one compiled
+program per decode step, one host sync per step), traffic flows through the
+lease, and every served token lands in the tenant's accounting ledger.
 
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
@@ -17,23 +19,38 @@ import jax
 import numpy as np
 
 from repro import configs
+from repro.core import recompile, scheduler
+from repro.core.invocation import InvocationService
 from repro.models import transformer
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request
 from repro.serving.sampling import SamplingConfig
+from repro.serving.service import serving_container
 
 __all__ = ["run", "main"]
 
 
 def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         slots: int = 4, max_len: int = 256, prompt_len: int = 24,
-        smoke: bool = True, temperature: float = 0.0, seed: int = 0) -> dict:
+        smoke: bool = True, temperature: float = 0.0, seed: int = 0,
+        tenant: str = "serve-demo", fused: bool = True,
+        sync_every: int = 1) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
     params = transformer.init_model(jax.random.key(seed), cfg)
-    engine = ServingEngine(cfg, params, slots=slots, max_len=max_len,
-                           prompt_buckets=(32, 64, 128))
-    sampling = SamplingConfig(temperature=temperature)
+
+    # control plane: schedule chips, deploy the container, boot the engine
+    profile = recompile.PORTABLE_CPU
+    cont = serving_container(cfg, params, slots=slots, max_len=max_len,
+                             prompt_buckets=(32, 64, 128), fused=fused,
+                             sync_every=sync_every)
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    executor = service.acquire_serving(tenant, cont, profile)
+    t0 = time.perf_counter()
+    executor.warmup()
+    print(f"warmup (all data-plane programs compiled): "
+          f"{time.perf_counter() - t0:.1f}s")
+
     for i in range(requests):
         plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
         if cfg.frontend == "audio":
@@ -41,18 +58,31 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
                                   (cfg.num_codebooks, plen), dtype=np.int32)
         else:
             prompt = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
-        engine.submit(Request(request_id=i, prompt=prompt,
-                              max_new_tokens=max_new, sampling=sampling))
+        executor.submit(Request(request_id=i, prompt=prompt,
+                                max_new_tokens=max_new,
+                                sampling=SamplingConfig(temperature=temperature)))
+
     t0 = time.perf_counter()
-    results = engine.run_to_completion()
+    results = executor.run()
     wall = time.perf_counter() - t0
+    stats = dict(executor.engine.stats)
     toks = sum(len(r.tokens) for r in results.values())
-    print(f"served {len(results)}/{requests} requests, {toks} tokens in "
+    ledger_tokens = service.meter.served_tokens(tenant)
+    billed = service.meter.total_usd(tenant)
+    executor.release()
+
+    print(f"lease {executor.lease.lease_id} ({tenant}): served "
+          f"{len(results)}/{requests} requests, {toks} tokens in "
           f"{wall:.1f}s ({toks / max(wall, 1e-9):.1f} tok/s) | "
-          f"prefills {engine.stats['prefills']} "
-          f"decode steps {engine.stats['decode_steps']}")
-    return {"results": results, "stats": dict(engine.stats), "wall_s": wall,
-            "tokens": toks}
+          f"prefills {stats['prefills']} ({stats['prefill_calls']} calls) "
+          f"decode steps {stats['decode_steps']} "
+          f"syncs/step {stats['host_syncs_decode'] / max(stats['decode_steps'], 1):.2f}")
+    print(f"ledger[{tenant}]: {ledger_tokens} tokens metered, "
+          f"${billed:.6f} billed across "
+          f"{len([b for b in service.meter.bills if b.tenant == tenant])} line items")
+    return {"results": results, "stats": stats, "wall_s": wall,
+            "tokens": toks, "ledger_tokens": ledger_tokens,
+            "billed_usd": billed, "service": service}
 
 
 def main() -> None:
@@ -65,12 +95,18 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--smoke", action="store_true")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--tenant", default="serve-demo")
+    ap.add_argument("--sync-every", type=int, default=1)
+    ap.add_argument("--unfused", action="store_true",
+                    help="legacy host-loop data plane (before/after reference)")
     args = ap.parse_args()
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
               prompt_len=args.prompt_len, smoke=args.smoke,
-              temperature=args.temperature)
+              temperature=args.temperature, tenant=args.tenant,
+              fused=not args.unfused, sync_every=args.sync_every)
     assert len(out["results"]) == args.requests
+    assert out["ledger_tokens"] == out["tokens"]
 
 
 if __name__ == "__main__":

@@ -365,6 +365,20 @@ def decode_step(params, cfg, tokens, states, lengths):
     return logits[:, 0], new_states
 
 
+def decode_and_sample(params, cfg, tokens, states, lengths, key, sample_fn):
+    """Fused decode + sample: ONE traced program for the serving hot path.
+
+    ``sample_fn(key, logits) -> int32 ids`` runs inside the same jit as the
+    decode, so per-slot sampling (vectorized temperature/top-k) costs no
+    extra dispatch and no host round-trip — the serving engine's whole
+    per-step data plane compiles to a single XLA executable around this.
+
+    Returns (new_tokens (B,) / (B, K) int32, new_states, logits).
+    """
+    logits, new_states = decode_step(params, cfg, tokens, states, lengths)
+    return sample_fn(key, logits), new_states, logits
+
+
 # ---------------------------------------------------------------------------
 # Analytic parameter counts (MODEL_FLOPS and accounting)
 # ---------------------------------------------------------------------------

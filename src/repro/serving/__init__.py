@@ -1,2 +1,2 @@
-"""Serving substrate: continuous-batching engine + sampling."""
-from repro.serving import engine, sampling  # noqa: F401
+"""Serving substrate: continuous-batching engine + sampling + service glue."""
+from repro.serving import engine, sampling, service  # noqa: F401

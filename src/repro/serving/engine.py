@@ -9,30 +9,47 @@ Design (vLLM-shape, JAX-native):
   * fixed slot count B (the compiled decode batch) with per-slot state inside
     the *stacked* KV/recurrent caches; slots are recycled across requests
     (continuous batching).
-  * two compiled programs only — `prefill_one` (padded prompt buckets) and
-    `decode_all` (one token for all B slots) — so serving never recompiles
-    after warmup. Prompt padding buckets bound the prefill-program count.
+  * a FUSED per-step program: decode, per-slot sampling (temperature/top-k
+    carried as (B,) device arrays), length update, and EOS/max-token
+    done-flag computation all happen inside one ``jax.jit`` — the host syncs
+    a single packed "tokens | active | done" row batch per step (or one
+    stacked fetch every ``sync_every`` steps). Nothing slow on the data
+    path, per the paper's Invocation principle.
+  * batched admission: all admissible queued requests sharing a prompt
+    bucket prefill in ONE batched program call (batch padded to a power of
+    two so the compiled-program count stays bounded at
+    #buckets x log2(slots)+1).
   * slot admission writes the prefilled per-slot state into the batched
-    state tree with a donated scatter (`slot_assign`), so admission is O(state
-    of one slot), not O(whole cache).
-  * all host-side logic (queueing, retirement) is control plane; every
-    data-plane array op is jit'd. REST never touches the data path, per the
-    paper.
+    state tree with a jitted scatter (`_assign`), so admission is O(state of
+    one slot), not O(whole cache).
+  * all host-side logic (queueing, retirement bookkeeping) is control plane;
+    every data-plane array op is jit'd. REST never touches the data path.
+
+``fused=False`` keeps the legacy host-loop step (B scalar ``sample`` calls +
+per-token ``device_get`` + per-slot length sync) as the "before" reference for
+``benchmarks/serving_throughput.py``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import logging
 from collections import deque
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.models import transformer
-from repro.serving.sampling import SamplingConfig, sample
+from repro.serving.sampling import (SamplingConfig, SamplingParams, sample,
+                                    sample_batched)
 
 __all__ = ["Request", "RequestResult", "ServingEngine"]
+
+logger = logging.getLogger(__name__)
+
+_NO_LIMIT = 1 << 30
 
 
 @dataclasses.dataclass
@@ -59,8 +76,19 @@ def _bucket(n: int, buckets: tuple[int, ...]) -> int:
     return buckets[-1]
 
 
+def _pow2(n: int) -> int:
+    return 1 << (n - 1).bit_length()
+
+
 class ServingEngine:
-    """Continuous-batching engine for one deployed model."""
+    """Continuous-batching engine for one deployed model.
+
+    fused: run the whole per-step loop as one compiled program (default);
+        False keeps the legacy host-side loop for before/after benchmarks.
+    sync_every: fetch the packed per-step result every k fused steps (k > 1
+        trades per-token latency for k-fold fewer host<->device syncs; slots
+        that finish mid-window idle until the next sync).
+    """
 
     def __init__(
         self,
@@ -71,62 +99,172 @@ class ServingEngine:
         max_len: int = 512,
         prompt_buckets: tuple[int, ...] = (32, 128, 512),
         rng: jax.Array | None = None,
+        fused: bool = True,
+        sync_every: int = 1,
     ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
-        self.prompt_buckets = tuple(b for b in prompt_buckets if b <= max_len) or (max_len,)
+        # max_len is ALWAYS the final bucket: a prompt longer than the largest
+        # configured bucket but <= max_len must land in a bucket that can hold
+        # it (otherwise the pad count goes negative and jnp.pad crashes).
+        self.prompt_buckets = tuple(
+            sorted({b for b in prompt_buckets if b < max_len} | {max_len}))
         self.rng = rng if rng is not None else jax.random.key(0)
+        self.fused = fused
+        self.sync_every = max(int(sync_every), 1)
 
         dt = jnp.dtype(cfg.activ_dtype)
         self.states = transformer.init_states(cfg, slots, max_len, dt)
-        self.lengths = jnp.zeros((slots,), jnp.int32)
-        self.last_tokens = self._zero_tokens(slots)
-        # host-side slot table
+        # device-side control block: everything the fused step needs to run
+        # without consulting the host. (B,) arrays + the last sampled tokens.
+        self.ctrl = {
+            "lengths": jnp.zeros((slots,), jnp.int32),
+            "active": jnp.zeros((slots,), bool),
+            "gen": jnp.zeros((slots,), jnp.int32),
+            "temp": jnp.zeros((slots,), jnp.float32),
+            "topk": jnp.zeros((slots,), jnp.int32),
+            "max_new": jnp.full((slots,), _NO_LIMIT, jnp.int32),
+            "eos": jnp.full((slots,), -1, jnp.int32),
+            "last": self._zero_tokens(slots),
+        }
+        # host-side slot table (control plane only)
         self.active: list[Request | None] = [None] * slots
         self.generated: list[list] = [[] for _ in range(slots)]
         self.queue: deque[Request] = deque()
         self.results: dict[int, RequestResult] = {}
-        self.stats = {"prefills": 0, "decode_steps": 0, "retired": 0}
+        self._seen_ids: set[int] = set()
+        self._pending: list[jax.Array] = []  # un-synced packed step results
+        self.stats = {
+            "prefills": 0,          # requests prefilled
+            "prefill_calls": 0,     # batched prefill program executions
+            "decode_steps": 0,
+            "retired": 0,
+            "host_syncs_decode": 0,  # blocking device->host syncs on the decode path
+            "host_syncs_admit": 0,   # blocking syncs during admission
+            "unserved": 0,
+        }
+
+        # per-leaf slot/batch axis, found structurally: the axis whose extent
+        # tracks the state batch size (probe batch=1 vs batch=2 shapes)
+        p1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dt))
+        p2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dt))
+
+        def _axis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
+
+        state_axes = jax.tree.map(_axis, p1, p2)
 
         # ---- compiled programs ----
         @jax.jit
-        def _decode_all(params, tokens, states, lengths, key):
-            logits, new_states = transformer.decode_step(
-                params, cfg, tokens, states, lengths)
-            return logits, new_states
+        def _fused_step(params, key, states, ctrl):
+            """decode + sample + length update + done flags, one program."""
+            active = ctrl["active"]
+            lengths = ctrl["lengths"] + active.astype(jnp.int32)
+            key, sub = jax.random.split(key)
+            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
+            toks, new_states, _ = transformer.decode_and_sample(
+                params, cfg, ctrl["last"], states, lengths, sub,
+                lambda k, lg: sample_batched(k, lg, sp))
+            gen = ctrl["gen"] + active.astype(jnp.int32)
+            first = toks if toks.ndim == 1 else toks[:, 0]
+            done = active & (
+                (gen >= ctrl["max_new"])
+                | ((ctrl["eos"] >= 0) & (first == ctrl["eos"]))
+                | (lengths >= max_len))
+            amask = active if toks.ndim == 1 else active[:, None]
+            toks = jnp.where(amask, toks, 0)
+            packed = jnp.concatenate([
+                toks.reshape(slots, -1),
+                active.astype(jnp.int32)[:, None],
+                done.astype(jnp.int32)[:, None],
+            ], axis=1)
+            new_ctrl = dict(
+                ctrl,
+                lengths=jnp.where(done, 0, lengths),
+                active=active & ~done,
+                gen=gen,
+                last=toks,
+            )
+            return key, new_states, new_ctrl, packed
 
-        self._decode_all = _decode_all
+        self._fused_step = _fused_step
 
         @functools.partial(jax.jit, static_argnums=(2,))
-        def _prefill_one(params, tokens, max_len):
-            # tokens: (1, Sb) padded bucket
+        def _prefill_batch(params, tokens, max_len):
+            # tokens: (N, Sb) padded bucket batch ((N, K, Sb) audio)
             return transformer.prefill(params, cfg, tokens, max_len)
 
-        self._prefill_one = _prefill_one
+        self._prefill_batch = _prefill_batch
 
-        def _batch_axis(dst, src):
-            # first axis where dst and src disagree and src == 1 (the
-            # prefilled single-request state) is the slot/batch axis
-            for i, (a, b) in enumerate(zip(dst.shape, src.shape)):
-                if a != b and b == 1:
-                    return i
-            for i, a in enumerate(dst.shape):  # same-shape fallback
-                if a == self.slots and src.shape[i] == 1:
-                    return i
-            raise AssertionError(f"no batch axis: {dst.shape} vs {src.shape}")
+        self._sample_first = jax.jit(sample_batched)
 
         @jax.jit
-        def _slot_assign(states, slot_states, lengths, slot, length):
-            def put(dst, src):
-                ax = _batch_axis(dst, src)
+        def _assign(states, batch_states, ctrl, src, slot, length, first_tok,
+                    temp, topk, max_new, eos):
+            """Scatter prefilled request `src` of a batched prefill into
+            engine slot `slot`, and arm its control-block entries."""
+            def put(ax, dst, s):
+                row = jax.lax.dynamic_index_in_dim(s, src, ax, keepdims=False)
                 return jax.lax.dynamic_update_index_in_dim(
-                    dst, jax.lax.squeeze(src, (ax,)).astype(dst.dtype), slot, ax)
-            new = jax.tree.map(put, states, slot_states)
-            return new, lengths.at[slot].set(length)
+                    dst, row.astype(dst.dtype), slot, ax)
+            new_states = jax.tree.map(put, state_axes, states, batch_states)
+            new_ctrl = dict(
+                ctrl,
+                lengths=ctrl["lengths"].at[slot].set(length),
+                active=ctrl["active"].at[slot].set(True),
+                gen=ctrl["gen"].at[slot].set(1),
+                temp=ctrl["temp"].at[slot].set(temp),
+                topk=ctrl["topk"].at[slot].set(topk),
+                max_new=ctrl["max_new"].at[slot].set(max_new),
+                eos=ctrl["eos"].at[slot].set(eos),
+                last=ctrl["last"].at[slot].set(first_tok),
+            )
+            return new_states, new_ctrl
 
-        self._slot_assign = _slot_assign
+        self._assign = _assign
+
+        @jax.jit
+        def _decode(params, tokens, states, lengths):
+            return transformer.decode_step(params, cfg, tokens, states, lengths)
+
+        self._decode = _decode  # legacy (unfused) step
+
+    # ------------------------------------------------------------------
+    def warmup(self) -> None:
+        """Pre-compile every data-plane program so steady-state serving never
+        compiles: the fused step, each (batch, bucket) prefill shape, the
+        first-token sampler, and the slot-assign scatter. Outputs are
+        discarded — engine state is untouched."""
+        if self.fused:
+            self._fused_step(self.params, self.rng, self.states, self.ctrl)
+        else:
+            self._decode(self.params, self.ctrl["last"], self.states,
+                         self.ctrl["lengths"])
+        npads, n = [], 1
+        top = _pow2(self.slots) if self.fused else 1
+        while n <= top:
+            npads.append(n)
+            n <<= 1
+        key = jax.random.key(0)
+        zero_tok = self._zero_tokens(1)[0]
+        for npad in npads:
+            for sb in self.prompt_buckets:
+                if self.cfg.frontend == "audio":
+                    toks = jnp.zeros((npad, self.cfg.num_codebooks, sb), jnp.int32)
+                else:
+                    toks = jnp.zeros((npad, sb), jnp.int32)
+                logits, bstates, _ = self._prefill_batch(
+                    self.params, toks, self.max_len)
+            self._sample_first(
+                key, logits, SamplingParams.from_configs([SamplingConfig()] * npad))
+            self._assign(self.states, bstates, self.ctrl, 0, 0, 0, zero_tok,
+                         0.0, 0, _NO_LIMIT, -1)
+        jax.block_until_ready(self.states)
 
     # ------------------------------------------------------------------
     def _zero_tokens(self, n: int):
@@ -135,45 +273,102 @@ class ServingEngine:
         return jnp.zeros((n,), jnp.int32)
 
     def submit(self, req: Request) -> None:
+        s = np.asarray(req.prompt).shape[-1]
+        if s > self.max_len:
+            raise ValueError(f"prompt {s} > engine max_len {self.max_len}")
+        if req.request_id in self._seen_ids:
+            # a duplicate would silently overwrite its results entry and
+            # corrupt downstream token metering deltas
+            raise ValueError(f"duplicate request_id {req.request_id}")
+        self._seen_ids.add(req.request_id)
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
 
     # ------------------------------------------------------------------
+    # Admission: batched prefill per prompt bucket
+    # ------------------------------------------------------------------
     def _admit(self) -> None:
-        """Prefill queued requests into free slots."""
-        for slot in self._free_slots():
-            if not self.queue:
-                return
-            req = self.queue.popleft()
-            prompt = jnp.asarray(req.prompt)
-            s = prompt.shape[-1]
-            if s > self.max_len:
-                raise ValueError(f"prompt {s} > engine max_len {self.max_len}")
-            sb = _bucket(s, self.prompt_buckets)
-            pad = sb - s
-            if self.cfg.frontend == "audio":
-                padded = jnp.pad(prompt, ((0, 0), (pad, 0)))[None]
+        """Prefill queued requests into free slots, one batched prefill call
+        per prompt bucket (legacy mode admits one request per call, matching
+        the seed engine's behavior for before/after comparison)."""
+        free = self._free_slots()
+        take = min(len(free), len(self.queue))
+        if not take:
+            return
+        reqs = [self.queue.popleft() for _ in range(take)]
+        groups: dict[int, list[Request]] = {}
+        for req in reqs:
+            sb = _bucket(np.asarray(req.prompt).shape[-1], self.prompt_buckets)
+            groups.setdefault(sb, []).append(req)
+        for sb, rs in groups.items():
+            if self.fused:
+                self._admit_group(sb, rs, free)
             else:
-                padded = jnp.pad(prompt, (pad, 0))[None]
-            # NOTE: left-pad keeps the *suffix* alignment the decode path
-            # expects (cache slots [0, sb) filled, real prompt at the tail).
-            logits, slot_states, _ = self._prefill_one(self.params, padded, self.max_len)
-            self.stats["prefills"] += 1
-            self.states, self.lengths = self._slot_assign(
-                self.states, slot_states, self.lengths, slot, sb)
-            self.rng, k = jax.random.split(self.rng)
-            first = sample(k, logits[0], req.sampling)
+                for r in rs:
+                    self._admit_group(sb, [r], free)
+
+    def _admit_group(self, sb: int, reqs: list[Request], free: list[int]) -> None:
+        n = len(reqs)
+        npad = _pow2(n)  # bound compiled-program count per bucket
+        if self.cfg.frontend == "audio":
+            batch = np.zeros((npad, self.cfg.num_codebooks, sb), np.int32)
+        else:
+            batch = np.zeros((npad, sb), np.int32)
+        for i, req in enumerate(reqs):
+            prompt = np.asarray(req.prompt, np.int32)
+            # left-pad: keeps the *suffix* alignment the decode path expects
+            # (cache slots [0, sb) filled, real prompt at the tail)
+            batch[i, ..., sb - prompt.shape[-1]:] = prompt
+        logits, batch_states, _ = self._prefill_batch(
+            self.params, jnp.asarray(batch), self.max_len)
+        self.stats["prefill_calls"] += 1
+        self.stats["prefills"] += n
+
+        pad_cfg = [r.sampling for r in reqs] + [SamplingConfig()] * (npad - n)
+        self.rng, sub = jax.random.split(self.rng)
+        first = self._sample_first(sub, logits, SamplingParams.from_configs(pad_cfg))
+        first_host = np.asarray(jax.device_get(first))
+        self.stats["host_syncs_admit"] += 1
+
+        for i, req in enumerate(reqs):
+            # prefill token + safe decode steps left in the cache after the
+            # prompt's (padded) bucket
+            room = self.max_len - sb + 1
+            if room < req.max_new_tokens:
+                logger.warning(
+                    "request %s: prompt bucket %d leaves room for %d of the "
+                    "%d requested tokens (engine max_len=%d) — output will "
+                    "be truncated", req.request_id, sb, room,
+                    req.max_new_tokens, self.max_len)
+            if req.max_new_tokens <= 1 or room <= 1:
+                # the prefill logits already yielded the only (or only
+                # representable) token; retire without occupying a decode slot
+                self.results[req.request_id] = RequestResult(
+                    request_id=req.request_id,
+                    tokens=[self._row_out(first_host[i])],
+                    decode_steps=0)
+                self.stats["retired"] += 1
+                continue
+            slot = free.pop(0)
+            self.states, self.ctrl = self._assign(
+                self.states, batch_states, self.ctrl, i, slot, sb, first[i],
+                float(req.sampling.temperature), int(req.sampling.top_k),
+                int(req.max_new_tokens),
+                -1 if req.eos_id is None else int(req.eos_id))
             self.active[slot] = req
-            self.generated[slot] = [self._tok_out(first)]
-            self.last_tokens = self.last_tokens.at[slot].set(first)
+            self.generated[slot] = [self._row_out(first_host[i])]
+
+    def _row_out(self, row: np.ndarray):
+        return tuple(int(x) for x in row) if row.ndim else int(row)
 
     def _tok_out(self, tok: jax.Array):
         t = jax.device_get(tok)
+        self.stats["host_syncs_decode"] += 1
         return tuple(int(x) for x in t) if t.ndim else int(t)
 
-    def _retire(self, slot: int) -> None:
+    def _retire(self, slot: int, *, reset_device: bool = False) -> None:
         req = self.active[slot]
         assert req is not None
         self.results[req.request_id] = RequestResult(
@@ -183,26 +378,75 @@ class ServingEngine:
         )
         self.active[slot] = None
         self.generated[slot] = []
-        self.lengths = self.lengths.at[slot].set(0)
+        if reset_device:  # fused path already zeroed these on device
+            self.ctrl = dict(
+                self.ctrl,
+                lengths=self.ctrl["lengths"].at[slot].set(0),
+                active=self.ctrl["active"].at[slot].set(False),
+            )
         self.stats["retired"] += 1
 
     # ------------------------------------------------------------------
+    # Stepping
+    # ------------------------------------------------------------------
     def step(self) -> int:
-        """One engine iteration: admit, decode once for all active slots,
-        sample, retire finished. Returns number of active slots."""
+        """One engine iteration: admit, run one fused decode program for all
+        B slots, sync the packed result (every ``sync_every`` steps), retire
+        finished. Returns number of host-visible active slots."""
         self._admit()
-        active_idx = [i for i, r in enumerate(self.active) if r is not None]
-        if not active_idx:
+        if not any(r is not None for r in self.active):
+            self._flush()
             return 0
-        # one decode for all B slots (inactive slots compute but are ignored
-        # — the fixed-batch tradeoff that keeps a single compiled program)
-        self.lengths = self.lengths + jnp.asarray(
+        if self.fused:
+            self.rng, self.states, self.ctrl, packed = self._fused_step(
+                self.params, self.rng, self.states, self.ctrl)
+            self.stats["decode_steps"] += 1
+            self._pending.append(packed)
+            # flush at the window boundary — or early, when every in-flight
+            # request has provably hit its token budget (each active slot
+            # emits one token per buffered step unless it finished even
+            # sooner), so the engine never burns whole-batch decode steps on
+            # a drained batch just to reach the window edge
+            if len(self._pending) >= self.sync_every or all(
+                len(self.generated[i]) + len(self._pending) >= r.max_new_tokens
+                for i, r in enumerate(self.active) if r is not None
+            ):
+                self._flush()
+        else:
+            self._step_host()
+        return sum(r is not None for r in self.active)
+
+    def _flush(self) -> None:
+        """Fetch all buffered packed step results in ONE blocking transfer
+        and replay them through the host-side slot table."""
+        if not self._pending:
+            return
+        rows = jax.device_get(self._pending)
+        self._pending = []
+        self.stats["host_syncs_decode"] += 1
+        audio = self.cfg.frontend == "audio"
+        for arr in rows:  # (B, T+2): tokens..., active, done
+            arr = np.asarray(arr)
+            for i in range(self.slots):
+                if not arr[i, -2]:  # slot inactive at that step
+                    continue
+                req = self.active[i]
+                if req is None:
+                    continue
+                tok = arr[i, :-2]
+                self.generated[i].append(
+                    tuple(int(x) for x in tok) if audio else int(tok[0]))
+                if arr[i, -1]:
+                    self._retire(i)
+
+    def _step_host(self) -> None:
+        """Legacy per-slot host loop (the seed data plane): B scalar sample
+        programs + one device_get per token + one length sync per slot."""
+        self.ctrl["lengths"] = self.ctrl["lengths"] + jnp.asarray(
             [1 if r is not None else 0 for r in self.active], jnp.int32)
-        self.rng, k = jax.random.split(self.rng)
-        logits, self.states = self._decode_all(
-            self.params, self.last_tokens, self.states, self.lengths, k)
+        logits, self.states = self._decode(
+            self.params, self.ctrl["last"], self.states, self.ctrl["lengths"])
         self.stats["decode_steps"] += 1
-        # sample per slot (host loop over B is control-plane only)
         new_tokens = []
         for i in range(self.slots):
             req = self.active[i]
@@ -217,16 +461,28 @@ class ServingEngine:
             if req.eos_id is not None and not done:
                 t = self.generated[i][-1]
                 done = (t == req.eos_id) if isinstance(t, int) else (t[0] == req.eos_id)
-            if int(self.lengths[i]) >= self.max_len:
+            length = int(self.ctrl["lengths"][i])
+            self.stats["host_syncs_decode"] += 1
+            if length >= self.max_len:
                 done = True
             if done:
-                self._retire(i)
-        self.last_tokens = jnp.stack(new_tokens)
-        return len([r for r in self.active if r is not None])
+                self._retire(i, reset_device=True)
+        self.ctrl["last"] = jnp.stack(new_tokens)
 
     def run_to_completion(self, max_steps: int = 10_000) -> dict[int, RequestResult]:
+        """Drive the engine until every request completes or ``max_steps``
+        engine iterations elapse. On truncation, ``stats['unserved']`` holds
+        the count of requests left queued/in-flight (and a warning is
+        logged) so callers can tell completion from truncation."""
         steps = 0
         while (self.queue or any(r is not None for r in self.active)) and steps < max_steps:
             self.step()
             steps += 1
+        self._flush()
+        unserved = len(self.queue) + sum(r is not None for r in self.active)
+        self.stats["unserved"] = unserved
+        if unserved:
+            logger.warning(
+                "run_to_completion hit max_steps=%d with %d request(s) unserved",
+                max_steps, unserved)
         return self.results

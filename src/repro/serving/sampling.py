@@ -1,4 +1,14 @@
-"""Token sampling: greedy / temperature / top-k, audio multi-codebook aware."""
+"""Token sampling: greedy / temperature / top-k, audio multi-codebook aware.
+
+Two forms:
+  * ``SamplingConfig`` + ``sample`` — the scalar, host-side form (one request,
+    Python-branching on temperature/top_k; cheap, but each call is its own
+    device program).
+  * ``SamplingParams`` + ``sample_batched`` — the vectorized, device-side form:
+    per-slot temperature/top_k carried as ``(B,)`` arrays so the whole batch
+    samples inside ONE jitted program with no host branching. This is what the
+    fused serving data plane uses (nothing slow on the data path).
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -6,13 +16,30 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingConfig", "sample"]
+__all__ = ["SamplingConfig", "SamplingParams", "sample", "sample_batched"]
 
 
 @dataclasses.dataclass(frozen=True)
 class SamplingConfig:
     temperature: float = 0.0  # 0 -> greedy
     top_k: int = 0  # 0 -> full distribution
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-slot sampling parameters as device arrays (vectorized
+    ``SamplingConfig``): a pytree, so it traces straight through ``jax.jit``."""
+
+    temperature: jax.Array  # (B,) f32; <= 0 -> greedy for that slot
+    top_k: jax.Array  # (B,) int32; <= 0 -> full distribution
+
+    @classmethod
+    def from_configs(cls, cfgs: list[SamplingConfig]) -> "SamplingParams":
+        return cls(
+            temperature=jnp.asarray([c.temperature for c in cfgs], jnp.float32),
+            top_k=jnp.asarray([c.top_k for c in cfgs], jnp.int32),
+        )
 
 
 def sample(key: jax.Array, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
@@ -24,3 +51,33 @@ def sample(key: jax.Array, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
         kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
+
+
+def sample_batched(key: jax.Array, logits: jax.Array,
+                   params: SamplingParams) -> jax.Array:
+    """Vectorized per-row sampling, jit-safe (no host branching).
+
+    logits: (B, V) f32 (or (B, K, V) for audio multi-codebook); params fields
+    are (B,) and broadcast over trailing dims. Rows with temperature <= 0
+    decode greedily; rows with top_k <= 0 sample the full distribution.
+    Returns int32 ids of shape logits.shape[:-1].
+    """
+    v = logits.shape[-1]
+    bshape = (-1,) + (1,) * (logits.ndim - 1)
+    temp = params.temperature.reshape(bshape)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / jnp.maximum(temp, 1e-6)
+
+    def _mask_topk(s):
+        # per-row top-k threshold: k-th largest value (k clamped into [1, V])
+        k = jnp.clip(jnp.where(params.top_k > 0, params.top_k, v), 1, v)
+        kth_idx = jnp.broadcast_to(k.reshape(bshape) - 1, s.shape[:-1] + (1,))
+        kth = jnp.take_along_axis(-jnp.sort(-s, axis=-1), kth_idx, axis=-1)
+        return jnp.where(s < kth, -jnp.inf, s)
+
+    # the O(V log V) sort only runs when some sampling row restricts to top-k
+    needs_topk = jnp.any((params.top_k > 0) & (params.temperature > 0.0))
+    masked = jax.lax.cond(needs_topk, _mask_topk, lambda s: s, scaled)
+    sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
+    gate = params.temperature.reshape((-1,) + (1,) * (greedy.ndim - 1)) > 0.0
+    return jnp.where(gate, sampled, greedy)

@@ -1,0 +1,74 @@
+"""Serving-as-a-Service glue: an ``XContainer`` whose deployment boots a
+``ServingEngine``.
+
+This is how serving becomes a first-class leased XaaS workload instead of a
+hand-constructed engine: the container's ``meta['engine_factory']`` is the
+boot hook ``InvocationService.acquire_serving`` calls after scheduling a
+SERVICE-class lease and deploying the container. The container also carries a
+real ``decode`` entrypoint through the deployment compiler, so the lease's
+ledger meters decode FLOPs from the *compiled artifact* (billing from the
+compiled truth, same as every other XaaS workload) rather than from user
+claims.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import container as xcontainer
+from repro.models import transformer
+from repro.serving.engine import ServingEngine
+
+__all__ = ["serving_container"]
+
+
+def serving_container(
+    cfg,
+    params,
+    *,
+    slots: int = 8,
+    max_len: int = 512,
+    prompt_buckets: tuple[int, ...] = (32, 128, 512),
+    fused: bool = True,
+    sync_every: int = 1,
+    name: str | None = None,
+) -> xcontainer.XContainer:
+    """Build a deployable serving container for one model.
+
+    ``deploy()`` compiles the ``decode`` entrypoint (the metering artifact);
+    ``meta['engine_factory'](deployment)`` boots the continuous-batching
+    engine bound to that deployment.
+    """
+    dt = jnp.dtype(cfg.activ_dtype)
+
+    def decode_fn(params_, tokens, states, lengths):
+        return transformer.decode_step(params_, cfg, tokens, states, lengths)
+
+    def make_args(mesh):
+        pshapes = jax.eval_shape(lambda: transformer.init_model(jax.random.key(0), cfg))
+        sshapes = jax.eval_shape(lambda: transformer.init_states(cfg, slots, max_len, dt))
+        if cfg.frontend == "audio":
+            tok = jax.ShapeDtypeStruct((slots, cfg.num_codebooks), jnp.int32)
+        else:
+            tok = jax.ShapeDtypeStruct((slots,), jnp.int32)
+        lens = jax.ShapeDtypeStruct((slots,), jnp.int32)
+        return (pshapes, tok, sshapes, lens), {}, {}
+
+    def engine_factory(deployment) -> ServingEngine:
+        return ServingEngine(
+            cfg, params, slots=slots, max_len=max_len,
+            prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every)
+
+    # geometry in the name: the warm-deployment cache keys on (name, profile),
+    # so two serving containers for the same arch but different slot/cache
+    # geometry must never alias each other's compiled decode artifact
+    return xcontainer.XContainer(
+        name=name or f"serve-{cfg.name}-b{slots}x{max_len}",
+        entrypoints={"decode": (decode_fn, make_args)},
+        meta={
+            "engine_factory": engine_factory,
+            "arch": cfg.name,
+            "slots": slots,
+            "max_len": max_len,
+        },
+    )

@@ -1,8 +1,26 @@
 """Shared fixtures. NOTE: no XLA_FLAGS here — tests run on the real single
 CPU device (the dry-run forces its own 512 stand-in devices in-process)."""
+import pathlib
+
 import jax
 import jax.numpy as jnp
 import pytest
+
+# Skip-guard: property-based test modules need `hypothesis` (declared in
+# requirements-dev.txt / pyproject's [test] extra). When it isn't installed,
+# exclude those modules from collection so the rest of the suite still runs
+# everywhere, instead of erroring the whole collection.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import re
+
+    _imports_hypothesis = re.compile(
+        r"^\s*(?:import hypothesis|from hypothesis)", re.MULTILINE)
+    collect_ignore = [
+        p.name for p in pathlib.Path(__file__).parent.glob("test_*.py")
+        if _imports_hypothesis.search(p.read_text())
+    ]
 
 
 @pytest.fixture(scope="session")

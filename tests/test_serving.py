@@ -1,5 +1,6 @@
 """Serving engine: continuous batching completes all requests; greedy decode
-matches the step-by-step model; slot recycling; audio path."""
+matches the step-by-step model; slot recycling; audio path; fused vs legacy
+data-plane parity; batched admission; per-slot sampling divergence."""
 import dataclasses
 
 import jax
@@ -10,7 +11,8 @@ import pytest
 from repro import configs
 from repro.models import transformer
 from repro.serving.engine import Request, ServingEngine
-from repro.serving.sampling import SamplingConfig, sample
+from repro.serving.sampling import (SamplingConfig, SamplingParams, sample,
+                                    sample_batched)
 
 
 def _engine(arch="qwen2-0.5b", dropless=True, **kw):
@@ -19,8 +21,8 @@ def _engine(arch="qwen2-0.5b", dropless=True, **kw):
         cfg = dataclasses.replace(
             cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=64.0))
     params = transformer.init_model(jax.random.key(0), cfg)
-    return cfg, params, ServingEngine(cfg, params, slots=4, max_len=128,
-                                      prompt_buckets=(16, 32), **kw)
+    kw = {"slots": 4, "max_len": 128, "prompt_buckets": (16, 32), **kw}
+    return cfg, params, ServingEngine(cfg, params, **kw)
 
 
 def test_all_requests_complete_more_requests_than_slots():
@@ -97,3 +99,184 @@ def test_sampling_modes():
     # temperature sampling stays in-vocab
     s = sample(key, jnp.zeros((64, 16)), SamplingConfig(temperature=1.0))
     assert s.shape == (64,) and bool((s >= 0).all()) and bool((s < 16).all())
+
+
+def test_sample_batched_per_row_configs():
+    """One vectorized call handles greedy, top-k, and full-dist rows at once,
+    and jits cleanly."""
+    key = jax.random.key(3)
+    logits = jax.random.normal(key, (4, 32))
+    sp = SamplingParams.from_configs([
+        SamplingConfig(),                          # greedy
+        SamplingConfig(temperature=2.0, top_k=1),  # degenerate top-k == greedy
+        SamplingConfig(temperature=0.9, top_k=5),
+        SamplingConfig(temperature=1.3),
+    ])
+    out = jax.jit(sample_batched)(key, logits, sp)
+    assert out.shape == (4,)
+    assert int(out[0]) == int(jnp.argmax(logits[0]))
+    assert int(out[1]) == int(jnp.argmax(logits[1]))
+    assert bool((out >= 0).all()) and bool((out < 32).all())
+    # audio-shaped logits broadcast the per-slot params over codebooks
+    out_a = jax.jit(sample_batched)(key, jax.random.normal(key, (4, 3, 32)), sp)
+    assert out_a.shape == (4, 3)
+
+
+def test_fused_matches_legacy_host_loop():
+    """The fused single-program data plane serves byte-identical greedy
+    tokens to the legacy per-slot host loop, across mixed prompt buckets and
+    slot recycling (more requests than slots)."""
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    rng = np.random.default_rng(7)
+    reqs = [(i, rng.integers(0, cfg.vocab_size, (int(rng.integers(4, 30)),),
+                             dtype=np.int32), int(rng.integers(2, 7)))
+            for i in range(7)]
+
+    def serve(fused, sync_every=1):
+        eng = ServingEngine(cfg, params, slots=3, max_len=64,
+                            prompt_buckets=(8, 16, 32), fused=fused,
+                            sync_every=sync_every)
+        for i, p, m in reqs:
+            eng.submit(Request(request_id=i, prompt=p, max_new_tokens=m))
+        res = eng.run_to_completion()
+        return {k: res[k].tokens for k in sorted(res)}, eng.stats
+
+    fused_toks, fused_stats = serve(True)
+    legacy_toks, legacy_stats = serve(False)
+    assert fused_toks == legacy_toks
+    # exactly one blocking sync per decode step on the fused path
+    assert fused_stats["host_syncs_decode"] == fused_stats["decode_steps"]
+    assert legacy_stats["host_syncs_decode"] > 2 * legacy_stats["decode_steps"]
+    # batched admission: fewer prefill program calls than requests
+    assert fused_stats["prefill_calls"] < fused_stats["prefills"] == 7
+    # k-step sync batching serves the same tokens with ~k-fold fewer syncs
+    batched_toks, batched_stats = serve(True, sync_every=4)
+    assert batched_toks == fused_toks
+    assert batched_stats["host_syncs_decode"] < fused_stats["host_syncs_decode"]
+
+
+def test_per_slot_sampling_divergence():
+    """Slots with diverging sampling configs coexist in one fused batch."""
+    cfg, params, eng = _engine()
+    prompt = np.arange(9, dtype=np.int32) % cfg.vocab_size
+    cfgs = [SamplingConfig(),
+            SamplingConfig(temperature=2.0, top_k=1),  # == greedy
+            SamplingConfig(temperature=0.9, top_k=5),
+            SamplingConfig(temperature=1.3)]
+    for i, sc in enumerate(cfgs):
+        eng.submit(Request(request_id=i, prompt=prompt, max_new_tokens=6,
+                           sampling=sc))
+    res = eng.run_to_completion()
+    assert sorted(res) == [0, 1, 2, 3]
+    for r in res.values():
+        assert len(r.tokens) == 6
+        assert all(0 <= t < cfg.vocab_size for t in r.tokens)
+    # greedy and degenerate top-k=1 rows decode identically
+    assert res[0].tokens == res[1].tokens
+
+
+def test_slot_recycling_after_eos_retirement():
+    """An EOS-retired slot is recycled for a queued request, which then
+    completes normally."""
+    cfg, params, eng = _engine()
+    prompt = np.arange(6, dtype=np.int32)
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=50))
+    first_decode_tok = eng.run_to_completion()[0].tokens[1]
+
+    cfg2, params2, eng2 = _engine(slots=1)
+    eng2.submit(Request(request_id=1, prompt=prompt, max_new_tokens=50,
+                        eos_id=int(first_decode_tok)))
+    eng2.submit(Request(request_id=2, prompt=prompt, max_new_tokens=3))
+    res = eng2.run_to_completion()
+    assert sorted(res) == [1, 2]
+    assert res[1].tokens[-1] == first_decode_tok and len(res[1].tokens) < 50
+    assert len(res[2].tokens) == 3  # served on the recycled slot
+    assert eng2.stats["retired"] == 2
+
+
+def test_overlong_prompt_lands_in_max_len_bucket():
+    """A prompt longer than the largest configured bucket but <= max_len pads
+    into the implicit max_len bucket instead of crashing on a negative pad.
+    With the bucket consuming the whole cache there is no decode room left,
+    so the request completes with its prefill token (and a logged warning)."""
+    cfg, params, eng = _engine()  # buckets (16, 32), max_len 128
+    assert eng.prompt_buckets[-1] == 128
+    prompt = np.arange(100, dtype=np.int32) % cfg.vocab_size
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=4))
+    res = eng.run_to_completion()
+    assert len(res[0].tokens) == 1  # truncated to the available room
+    # beyond max_len is rejected up front
+    with pytest.raises(ValueError):
+        eng.submit(Request(request_id=1,
+                           prompt=np.zeros(300, np.int32), max_new_tokens=1))
+
+
+def test_max_new_tokens_one_yields_exactly_one_token():
+    """A 1-token request is served straight from the prefill logits and never
+    occupies a decode slot (the seed emitted 2 tokens here)."""
+    cfg, params, eng = _engine()
+    eng.submit(Request(request_id=0, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=1))
+    eng.submit(Request(request_id=1, prompt=np.arange(8, dtype=np.int32),
+                       max_new_tokens=3))
+    res = eng.run_to_completion()
+    assert len(res[0].tokens) == 1
+    assert len(res[1].tokens) == 3
+    # the 1-token request's first token matches the longer request's first
+    assert res[0].tokens[0] == res[1].tokens[0]
+
+
+def test_duplicate_request_id_rejected():
+    cfg, params, eng = _engine()
+    eng.submit(Request(request_id=0, prompt=np.arange(4, dtype=np.int32),
+                       max_new_tokens=2))
+    with pytest.raises(ValueError):
+        eng.submit(Request(request_id=0, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=2))
+
+
+def test_sync_window_flushes_early_when_batch_drains():
+    """With a large sync window, the engine must not burn decode steps past
+    the point where every in-flight request has provably finished."""
+    cfg, params, eng = _engine(slots=2, sync_every=16)
+    eng.submit(Request(request_id=0, prompt=np.arange(6, dtype=np.int32),
+                       max_new_tokens=4))
+    res = eng.run_to_completion()
+    assert len(res[0].tokens) == 4
+    # 1 prefill token + 3 decode steps; the 16-step window must not inflate it
+    assert eng.stats["decode_steps"] == 3
+
+
+def test_run_to_completion_reports_unserved_on_truncation():
+    cfg, params, eng = _engine()
+    for i in range(6):  # 6 requests, 4 slots, way too few steps
+        eng.submit(Request(request_id=i,
+                           prompt=np.arange(8, dtype=np.int32),
+                           max_new_tokens=40))
+    res = eng.run_to_completion(max_steps=3)
+    assert eng.stats["unserved"] == 6 - len(res) > 0
+
+    # a completed run reports zero unserved
+    cfg2, params2, eng2 = _engine()
+    eng2.submit(Request(request_id=0, prompt=np.arange(8, dtype=np.int32),
+                        max_new_tokens=3))
+    eng2.run_to_completion()
+    assert eng2.stats["unserved"] == 0
+
+
+def test_audio_batched_admission_and_recycling():
+    """Multi-codebook frontend through the fused path: batched audio
+    admission plus slot recycling."""
+    cfg, params, eng = _engine("musicgen-medium", slots=2)
+    rng = np.random.default_rng(2)
+    for i in range(3):  # > slots
+        eng.submit(Request(
+            request_id=i,
+            prompt=rng.integers(0, cfg.vocab_size, (cfg.num_codebooks, 4 + i)),
+            max_new_tokens=2))
+    res = eng.run_to_completion()
+    assert sorted(res) == [0, 1, 2]
+    for r in res.values():
+        assert len(r.tokens) == 2
+        assert all(len(t) == cfg.num_codebooks for t in r.tokens)

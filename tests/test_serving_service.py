@@ -1,0 +1,139 @@
+"""Serving as a leased XaaS service: SERVICE-class lease boots the engine,
+traffic flows through the executor, every served token lands in the tenant's
+ledger, warm re-acquire skips deployment."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import recompile, scheduler
+from repro.core.invocation import InvocationService
+from repro.models import transformer
+from repro.serving.engine import Request
+from repro.serving.sampling import SamplingConfig
+from repro.serving.service import serving_container
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _container(**kw):
+    cfg, params = _model()
+    kw = {"slots": 2, "max_len": 64, "prompt_buckets": (8, 16), **kw}
+    return cfg, serving_container(cfg, params, **kw)
+
+
+def _requests(cfg, n, seed=0, max_new=3):
+    rng = np.random.default_rng(seed)
+    return [Request(request_id=i,
+                    prompt=rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32),
+                    max_new_tokens=max_new,
+                    sampling=SamplingConfig())
+            for i in range(n)]
+
+
+def test_serving_lease_meters_every_token():
+    cfg, cont = _container()
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    ex = service.acquire_serving("tenant-a", cont, profile)
+
+    assert ex.lease.job.klass == scheduler.JobClass.SERVICE
+    assert ex.lease.job.state == scheduler.JobState.RUNNING
+    assert service.stats["cold_acquires"] == 1
+
+    for r in _requests(cfg, 4):
+        ex.submit(r)
+    results = ex.run()
+    assert sorted(results) == [0, 1, 2, 3]
+    tokens = sum(len(r.tokens) for r in results.values())
+
+    # the ledger saw every served token, attributed to the tenant
+    assert service.meter.served_tokens("tenant-a") == tokens
+    assert service.meter.served_tokens("someone-else") == 0
+    kinds = {b.kind for b in service.meter.bills}
+    assert {"serve_tokens", "serve_decode"} <= kinds
+    # decode-step billing pulls FLOPs from the compiled decode artifact
+    decode_bills = [b for b in service.meter.bills if b.kind == "serve_decode"]
+    assert decode_bills and all(b.flops > 0 for b in decode_bills)
+    assert service.meter.total_steps("serve_decode", "tenant-a") == \
+        ex.engine.stats["decode_steps"]
+    service.meter.check_invariants()
+
+    # a second drain meters only the delta
+    for r in _requests(cfg, 2, seed=1):
+        ex.submit(Request(request_id=10 + r.request_id, prompt=r.prompt,
+                          max_new_tokens=r.max_new_tokens))
+    results = ex.run()
+    total = sum(len(r.tokens) for r in results.values())
+    assert service.meter.served_tokens("tenant-a") == total
+
+    ex.release()
+    assert not ex.lease.active
+    with pytest.raises(RuntimeError):
+        ex.submit(_requests(cfg, 1)[0])
+    with pytest.raises(RuntimeError):
+        ex.run()
+
+
+def test_container_name_encodes_geometry():
+    """Different slot/cache geometries must not alias each other in the
+    warm-deployment cache (it keys on container name + profile)."""
+    _, cont_a = _container(slots=2, max_len=64)
+    _, cont_b = _container(slots=4, max_len=128)
+    assert cont_a.name != cont_b.name
+
+
+def test_warm_reacquire_reuses_deployment():
+    cfg, cont = _container()
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    ex1 = service.acquire_serving("tenant-a", cont, profile)
+    ex1.release()
+    ex2 = service.acquire_serving("tenant-b", cont, profile)
+    assert service.stats == {**service.stats, "cold_acquires": 1,
+                             "warm_acquires": 1}
+    assert ex2.lease.deployment is ex1.lease.deployment
+    # fresh engine per lease: no state bleed between tenants
+    assert ex2.engine is not ex1.engine
+    ex2.release()
+
+
+def test_two_tenant_ledger_isolation():
+    cfg, cont = _container()
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=2 * profile.chips))
+    exa = service.acquire_serving("tenant-a", cont, profile)
+    exb = service.acquire_serving("tenant-b", cont, profile)
+
+    for r in _requests(cfg, 2, seed=2, max_new=2):
+        exa.submit(r)
+    for r in _requests(cfg, 3, seed=3, max_new=4):
+        exb.submit(r)
+    ra, rb = exa.run(), exb.run()
+
+    toks_a = sum(len(r.tokens) for r in ra.values())
+    toks_b = sum(len(r.tokens) for r in rb.values())
+    assert toks_a == 2 * 2 and toks_b == 3 * 4
+    assert service.meter.served_tokens("tenant-a") == toks_a
+    assert service.meter.served_tokens("tenant-b") == toks_b
+    assert service.meter.served_tokens() == toks_a + toks_b
+    by_tenant = service.meter.by_tenant()
+    assert set(by_tenant) == {"tenant-a", "tenant-b"}
+    exa.release()
+    exb.release()
+
+
+def test_container_without_engine_factory_rejected():
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    from repro.core import container as xcontainer
+    bare = xcontainer.XContainer(name="not-serving", entrypoints={})
+    with pytest.raises(ValueError):
+        service.acquire_serving("tenant-a", bare, profile)

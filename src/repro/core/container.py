@@ -57,6 +57,17 @@ class Deployment:
     def providers(self) -> dict[str, str]:
         return self.binding.providers()
 
+    def manifest(self) -> dict:
+        """The specialization manifest: which tier serves each accelerated
+        API on this deployment, with probe provenance (docs/kernel-portability.md)."""
+        m = self.binding.manifest()
+        return {
+            "container": self.container.name,
+            "profile": self.profile.name,
+            "chip": self.profile.chip,
+            "apis": m["apis"],
+        }
+
 
 @dataclasses.dataclass
 class XContainer:
@@ -86,10 +97,18 @@ class XContainer:
         compiler: recompile.DeploymentCompiler | None = None,
         entrypoints: list[str] | None = None,
         hook_overrides: Mapping[str, str] | None = None,
+        probe: bool = True,
     ) -> Deployment:
+        """Deploy onto `profile`: probe + bind hooks, install sharding rules,
+        lower, compile. With ``probe`` (default) every candidate tier must
+        pass its deploy-time probe before binding (hooks.bind); the chosen
+        tier per API lands in ``meta["specialization"][profile.name]`` so
+        warm re-deployments can report exactly what serves traffic."""
         compiler = compiler or recompile.DEFAULT_COMPILER
         mesh = mesh if mesh is not None else build_mesh(profile)
-        binding = hooks.bind(profile, overrides=hook_overrides or self.hook_overrides)
+        binding = hooks.bind(
+            profile, overrides=hook_overrides or self.hook_overrides,
+            probe=probe)
         rules = self.rules_for(profile)
         artifacts: dict[str, recompile.CompiledArtifact] = {}
         names = entrypoints or list(self.entrypoints)
@@ -105,7 +124,7 @@ class XContainer:
                     kwargs=kwargs,
                     jit_kwargs=jit_kwargs,
                 )
-        return Deployment(
+        dep = Deployment(
             container=self,
             profile=profile,
             mesh=mesh,
@@ -113,3 +132,5 @@ class XContainer:
             rules=rules,
             artifacts=artifacts,
         )
+        self.meta.setdefault("specialization", {})[profile.name] = dep.manifest()
+        return dep

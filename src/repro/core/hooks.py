@@ -16,6 +16,16 @@ has:
 Binding is explicit and scoped (``with hooks.use(binding):``) so one process
 can hold deployments for several target systems — exactly the multi-provider
 story of the paper.
+
+Probe-based specialization (the deploy-time half of the contract): an
+implementation may carry a *probe* — a callable that compiles and runs a tiny
+candidate kernel the way the tier would actually execute on the target. When
+``bind(profile, probe=True)`` selects tiers, a probe failure rejects the tier
+and dispatch falls back to the next priority, recording the rejection in the
+binding's specialization manifest. This is what turns a JAX/XLA API-vintage
+mismatch (see kernels/compat.py) into a visible fallback instead of a trace
+error inside a deployed program. Probe outcomes are cached per
+``(api, provider, profile.chip)`` so warm deployments never re-probe.
 """
 from __future__ import annotations
 
@@ -28,6 +38,7 @@ __all__ = [
     "AcceleratedAPI",
     "Binding",
     "HookError",
+    "TierChoice",
     "register_api",
     "register_impl",
     "available_impls",
@@ -37,6 +48,8 @@ __all__ = [
     "current_binding",
     "get_api",
     "list_apis",
+    "probe_impl",
+    "clear_probe_cache",
 ]
 
 
@@ -51,6 +64,31 @@ class Implementation:
     # availability predicate over a SystemProfile (core.recompile.SystemProfile)
     supports: Callable[[Any], bool]
     priority: int = 0  # higher wins when several impls support a profile
+    # deploy-time probe: compile+run a tiny candidate kernel the way this
+    # tier would execute on `profile`; raising (or returning False) rejects
+    # the tier at bind time. None = the tier is assumed bindable.
+    probe: Callable[[Any], Any] | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class TierChoice:
+    """Why one provider serves one API in a binding (manifest line)."""
+
+    api: str
+    provider: str  # "portable" or a registered provider tag
+    priority: int
+    probed: bool  # a probe ran (and passed) for the chosen tier
+    # tiers that supported the profile but were rejected by their probe,
+    # highest priority first: (provider, error message)
+    rejected: tuple[tuple[str, str], ...] = ()
+
+    def to_dict(self) -> dict:
+        return {
+            "provider": self.provider,
+            "priority": self.priority,
+            "probed": self.probed,
+            "rejected": [list(r) for r in self.rejected],
+        }
 
 
 @dataclasses.dataclass
@@ -68,9 +106,15 @@ _LOCK = threading.Lock()
 class Binding(Mapping[str, Callable[..., Any]]):
     """Immutable api-name -> implementation mapping for one deployment."""
 
-    def __init__(self, mapping: dict[str, Callable[..., Any]], label: str = "portable"):
+    def __init__(
+        self,
+        mapping: dict[str, Callable[..., Any]],
+        label: str = "portable",
+        choices: dict[str, TierChoice] | None = None,
+    ):
         self._mapping = dict(mapping)
         self.label = label
+        self.choices = dict(choices or {})
 
     def __getitem__(self, k: str) -> Callable[..., Any]:
         return self._mapping[k]
@@ -83,6 +127,19 @@ class Binding(Mapping[str, Callable[..., Any]]):
 
     def providers(self) -> dict[str, str]:
         return {k: getattr(v, "__xaas_provider__", "portable") for k, v in self._mapping.items()}
+
+    def manifest(self) -> dict:
+        """Serializable specialization manifest: chosen tier per API, with
+        probe provenance and the tiers that were rejected on the way down."""
+        providers = self.providers()
+        apis = {}
+        for name in sorted(self._mapping):
+            choice = self.choices.get(name)
+            if choice is None:  # un-probed bind: provider known, provenance not
+                choice = TierChoice(
+                    api=name, provider=providers[name], priority=0, probed=False)
+            apis[name] = choice.to_dict()
+        return {"label": self.label, "apis": apis}
 
     def __repr__(self):
         return f"Binding({self.label}: {self.providers()})"
@@ -112,6 +169,7 @@ def register_impl(
     *,
     supports: Callable[[Any], bool] | None = None,
     priority: int = 0,
+    probe: Callable[[Any], Any] | None = None,
 ) -> None:
     with _LOCK:
         api = _REGISTRY.get(api_name)
@@ -119,8 +177,13 @@ def register_impl(
             raise HookError(f"unknown accelerated API {api_name!r}")
         fn.__xaas_provider__ = provider  # type: ignore[attr-defined]
         api.impls[provider] = Implementation(
-            provider=provider, fn=fn, supports=supports or (lambda profile: True), priority=priority
+            provider=provider, fn=fn, supports=supports or (lambda profile: True),
+            priority=priority, probe=probe,
         )
+        # re-registering replaces the probe too: stale verdicts for the old
+        # implementation must not govern the new one
+        for key in [k for k in _PROBE_CACHE if k[:2] == (api_name, provider)]:
+            del _PROBE_CACHE[key]
 
 
 def get_api(name: str) -> AcceleratedAPI:
@@ -143,34 +206,103 @@ def available_impls(api_name: str, profile: Any = None) -> list[str]:
     return out
 
 
-def bind(profile: Any = None, *, overrides: Mapping[str, str] | None = None) -> Binding:
+# probe outcome cache: (api, provider, profile.chip) -> (passed, error|None).
+# Keyed on the chip kind, not the profile object: the probe compiles against
+# the *local* toolchain, and two profiles for the same chip see the same
+# toolchain. Warm deployments therefore never re-probe.
+_PROBE_CACHE: dict[tuple[str, str, Any], tuple[bool, str | None]] = {}
+
+
+def clear_probe_cache() -> None:
+    _PROBE_CACHE.clear()
+
+
+def probe_impl(api_name: str, provider: str, profile: Any) -> tuple[bool, str | None]:
+    """Run (or recall) the deploy-time probe for one (api, provider) tier.
+
+    Returns ``(passed, error_message)``. A tier without a probe passes by
+    definition; probe exceptions and falsy non-None returns fail.
+    """
+    impl = get_api(api_name).impls.get(provider)
+    if impl is None:
+        raise HookError(f"no implementation {provider!r} for API {api_name!r}")
+    if impl.probe is None:
+        return True, None
+    key = (api_name, provider, getattr(profile, "chip", None))
+    cached = _PROBE_CACHE.get(key)
+    if cached is not None:
+        return cached
+    try:
+        out = impl.probe(profile)
+        result = (True, None) if (out is None or out) else (
+            False, "probe returned falsy")
+    except Exception as e:  # noqa: BLE001 — any failure means "cannot bind"
+        result = (False, f"{type(e).__name__}: {e}")
+    _PROBE_CACHE[key] = result
+    return result
+
+
+def bind(
+    profile: Any = None,
+    *,
+    overrides: Mapping[str, str] | None = None,
+    probe: bool = False,
+) -> Binding:
     """Build a deployment binding: best available impl per API for `profile`.
 
     `overrides` pins an API to a provider tag ("portable" or a registered
     provider), mirroring the paper's per-site library pinning.
+
+    With ``probe=True`` (what ``XContainer.deploy`` uses), every candidate
+    tier must pass its deploy-time probe before it may bind; a failing tier
+    is skipped and the next priority is tried, down to the portable floor.
+    Rejections are recorded on the binding's manifest. Overridden (pinned)
+    tiers are NOT probed — a pin is an operator's explicit order.
     """
     overrides = dict(overrides or {})
     mapping: dict[str, Callable[..., Any]] = {}
+    choices: dict[str, TierChoice] = {}
     label = getattr(profile, "name", "portable") if profile is not None else "portable"
     for name, api in _REGISTRY.items():
         choice = overrides.pop(name, None)
         if choice == "portable":
             mapping[name] = api.reference
+            choices[name] = TierChoice(name, "portable", 0, probed=False)
             continue
         if choice is not None:
             if choice not in api.impls:
                 raise HookError(f"no implementation {choice!r} for API {name!r}")
             mapping[name] = api.impls[choice].fn
+            choices[name] = TierChoice(
+                name, choice, api.impls[choice].priority, probed=False)
             continue
         best: Implementation | None = None
+        rejected: list[tuple[str, str]] = []
         if profile is not None:
-            for impl in api.impls.values():
-                if impl.supports(profile) and (best is None or impl.priority > best.priority):
-                    best = impl
-        mapping[name] = best.fn if best is not None else api.reference
+            candidates = sorted(
+                (i for i in api.impls.values() if i.supports(profile)),
+                key=lambda i: -i.priority)
+            for impl in candidates:
+                if probe:
+                    ok, err = probe_impl(name, impl.provider, profile)
+                    if not ok:
+                        rejected.append((impl.provider, err or "probe failed"))
+                        continue
+                best = impl
+                break
+        if best is not None:
+            mapping[name] = best.fn
+            choices[name] = TierChoice(
+                name, best.provider, best.priority,
+                probed=probe and best.probe is not None,
+                rejected=tuple(rejected))
+        else:
+            mapping[name] = api.reference
+            choices[name] = TierChoice(
+                name, "portable", 0, probed=False, rejected=tuple(rejected))
     if overrides:
         raise HookError(f"overrides for unknown APIs: {sorted(overrides)}")
-    return Binding(mapping, label=label)
+    return Binding(mapping, label=label, choices=choices)
 
 
 def current_binding() -> Binding | None:

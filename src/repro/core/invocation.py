@@ -210,9 +210,11 @@ class ServingExecutor:
         self._metered_tokens = 0
         self._metered_steps = 0
 
-    def warmup(self) -> None:
-        """Pre-compile the engine's data-plane programs (warm-start)."""
-        self.engine.warmup()
+    def warmup(self) -> dict | None:
+        """Pre-compile the engine's data-plane programs (warm-start).
+        Returns the deployment's specialization manifest (chosen kernel tier
+        per accelerated API), which the engine also logs."""
+        return self.engine.warmup()
 
     def submit(self, request) -> None:
         if not self.lease.active:

@@ -33,6 +33,8 @@ from typing import Any, Callable, Mapping
 
 import jax
 
+from repro.kernels import compat
+
 __all__ = [
     "SystemProfile",
     "CompiledArtifact",
@@ -41,6 +43,7 @@ __all__ = [
     "TPU_V5E_POD",
     "TPU_V5E_2POD",
     "PORTABLE_CPU",
+    "CPU_INTERPRET",
     "collective_bytes",
 ]
 
@@ -130,6 +133,23 @@ PORTABLE_CPU = SystemProfile(
     mesh_shape=(1,),
     mesh_axes=("data",),
     providers=(),
+)
+
+# A CPU host whose "library set" includes the Pallas interpreter and the
+# blocked pure-XLA tier: what CPU CI deploys, so the hand-tiled kernels are
+# exercised (through the pallas-interpret tier) rather than skipped.
+CPU_INTERPRET = SystemProfile(
+    name="cpu-pallas-interpret",
+    chip="cpu",
+    chips=1,
+    peak_flops=1e11,
+    hbm_bytes=8 * 2**30,
+    hbm_bw=50e9,
+    ici_bw=1e9,
+    ici_links=1,
+    mesh_shape=(1,),
+    mesh_axes=("data",),
+    providers=("pallas-interpret", "xla-blocked"),
 )
 
 
@@ -254,8 +274,7 @@ class CompiledArtifact:
 
     def cost_analysis(self) -> dict:
         if self._cost is None:
-            c = self.compiled.cost_analysis()
-            self._cost = dict(c[0] if isinstance(c, (list, tuple)) else c)
+            self._cost = compat.xla_cost_analysis(self.compiled)
         return self._cost
 
     def memory_analysis(self):

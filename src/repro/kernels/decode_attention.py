@@ -23,7 +23,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 _NEG_INF = -1e30
 DEFAULT_BK = 256
@@ -102,7 +103,7 @@ def decode_attention(
 ) -> jax.Array:
     """Drop-in for the `decode_attention` hook ABI (see kernels/ref.py)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.default_interpret()
     b, hq, d = q.shape
     s, hkv = k_cache.shape[1], k_cache.shape[2]
     assert hq % hkv == 0
@@ -128,25 +129,26 @@ def decode_attention(
 
     out = pl.pallas_call(
         kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
+        grid_spec=compat.prefetch_scalar_grid_spec(
             num_scalar_prefetch=0,
             grid=grid,
             in_specs=[
                 pl.BlockSpec(
-                    (1,), lambda b_, h, j: (b_,), memory_space=pltpu.SMEM),
+                    (1,), lambda b_, h, j: (b_,),
+                    memory_space=compat.smem_space()),
                 pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
                 pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
                 pl.BlockSpec((1, 1, bk, d), lambda b_, h, j: (b_, h, j, 0)),
             ],
             out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, j: (b_, h, 0, 0)),
             scratch_shapes=[
-                pltpu.VMEM((g,), jnp.float32),
-                pltpu.VMEM((g,), jnp.float32),
-                pltpu.VMEM((g, d), jnp.float32),
+                compat.vmem((g,), jnp.float32),
+                compat.vmem((g,), jnp.float32),
+                compat.vmem((g, d), jnp.float32),
             ],
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -27,7 +27,8 @@ import math
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 _NEG_INF = -1e30
 DEFAULT_BQ = 128
@@ -130,7 +131,7 @@ def flash_attention(
 ) -> jax.Array:
     """Drop-in for the `attention` hook ABI (see kernels/ref.py)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.default_interpret()
     b, sq, hq, d = q.shape
     skv, hkv = k.shape[1], k.shape[2]
     assert hq % hkv == 0
@@ -163,11 +164,11 @@ def flash_attention(
         out_specs=pl.BlockSpec((1, 1, bq, d), lambda b_, h, i, j: (b_, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((b, hq, sq_p, d), q.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
+            compat.vmem((bq,), jnp.float32),
+            compat.vmem((bq,), jnp.float32),
+            compat.vmem((bq, d), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,

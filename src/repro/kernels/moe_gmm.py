@@ -26,7 +26,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import compat
 
 
 def _swiglu_kernel(x_ref, wg_ref, wu_ref, h_ref, acc_g, acc_u, *, nk: int):
@@ -65,7 +66,7 @@ def moe_swiglu_hidden(
 ) -> jax.Array:
     """h = silu(x @ w_gate) * (x @ w_up), grouped over experts. (E, C, F)."""
     if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+        interpret = compat.default_interpret()
     e, c, d = x.shape
     f = w_gate.shape[-1]
     bc = min(block_c, c)
@@ -99,10 +100,10 @@ def moe_swiglu_hidden(
         out_specs=pl.BlockSpec((1, bc, bf), lambda ee, i, j, k: (ee, i, j)),
         out_shape=jax.ShapeDtypeStruct((e, cp, fp), x.dtype),
         scratch_shapes=[
-            pltpu.VMEM((bc, bf), jnp.float32),
-            pltpu.VMEM((bc, bf), jnp.float32),
+            compat.vmem((bc, bf), jnp.float32),
+            compat.vmem((bc, bf), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compat.tpu_compiler_params(
             dimension_semantics=("parallel", "parallel", "parallel",
                                  "arbitrary"),
         ),

@@ -1,18 +1,30 @@
 """Accelerated-API implementations + hook registration.
 
-Two system-optimized provider tiers per API (DESIGN.md §1 — the paper's
-"system-optimized libraries" bound by OCI-style hooks at deploy time):
+Three system-optimized provider tiers per API (DESIGN.md §1 — the paper's
+"system-optimized libraries" bound by OCI-style hooks at deploy time; full
+matrix in docs/kernel-portability.md):
 
   * ``xla-blocked`` — memory-bounded pure-JAX implementations (blocked /
     online-softmax attention, chunkwise mLSTM). These lower to clean HLO on
     any XLA backend, keep peak memory O(block) instead of O(S^2), and are
     what the multi-pod dry-run binds (Pallas cannot lower for the CPU
     stand-in devices; on real TPU metal the pallas-tpu tier wins instead).
+  * ``pallas-interpret`` — the SAME hand-tiled Pallas kernels forced into
+    interpret mode: the Pallas interpreter emulates the grid/BlockSpec/
+    scratch machinery with pure-JAX ops, so the kernels' tiling logic runs
+    (and is CI-exercised) on any backend, at emulation speed.
   * ``pallas-tpu`` — hand-tiled Pallas TPU kernels (flash_attention,
     decode_attention, rmsnorm, rglru scan, moe grouped matmul, chunked
     mLSTM), validated against kernels/ref.py oracles in interpret mode.
 
-Priorities: pallas-tpu (20) > xla-blocked (10) > portable reference (0).
+Priorities: pallas-tpu (20) > pallas-interpret (15) > xla-blocked (10) >
+portable reference (0).
+
+Each Pallas-backed tier registers a *probe* (core/hooks.py): a tiny
+candidate kernel compiled and run exactly the way the tier would execute on
+the target. ``bind(profile, probe=True)`` rejects tiers whose probe fails —
+so a JAX API-vintage mismatch (kernels/compat.py) degrades to the next tier
+instead of crashing a deployed program mid-trace.
 """
 from __future__ import annotations
 
@@ -237,6 +249,96 @@ def pallas_decode_attention(q, k_cache, v_cache, *, lengths=None, window=None,
 
 
 # ---------------------------------------------------------------------------
+# Interpret-tier wrappers (Pallas kernels pinned to the interpreter, so the
+# hand-tiled grid/BlockSpec code runs on CPU/GPU hosts — and on CPU CI)
+# ---------------------------------------------------------------------------
+def interpret_attention(q, k, v, *, causal=True, window=None, scale=None,
+                        logit_softcap=None):
+    return _fa_pallas.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale,
+        logit_softcap=logit_softcap, interpret=True)
+
+
+def interpret_decode_attention(q, k_cache, v_cache, *, lengths=None,
+                               window=None, scale=None, logit_softcap=None):
+    return _dec_pallas.decode_attention(
+        q, k_cache, v_cache, lengths=lengths, window=window, scale=scale,
+        logit_softcap=logit_softcap, interpret=True)
+
+
+def interpret_rmsnorm(x, weight, *, eps=1e-6):
+    return _rms_pallas.rmsnorm(x, weight, eps=eps, interpret=True)
+
+
+def interpret_moe_mlp(expert_inputs, w_gate, w_up, w_down):
+    return _gmm_pallas.moe_mlp(expert_inputs, w_gate, w_up, w_down,
+                               interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Deploy-time probes: compile + run a TINY candidate kernel per tier, in the
+# mode the tier would actually execute on the target. Failures (e.g. a
+# pltpu API rename the shim cannot paper over) reject the tier at bind time.
+# Probe tiles are (8, 128) — the f32 minimum Mosaic tile — so a compiled-
+# Mosaic probe on TPU metal sees the same tile constraints the full-size
+# kernels do and cannot be falsely rejected for sub-minimum blocks.
+# ---------------------------------------------------------------------------
+def _probe_args_attn():
+    z = jnp.zeros((1, 8, 8, 128), jnp.float32)
+    return z, jnp.zeros((1, 8, 1, 128), jnp.float32), jnp.zeros(
+        (1, 8, 1, 128), jnp.float32)
+
+
+def _probe_flash(interpret):
+    def probe(profile):
+        q, k, v = _probe_args_attn()
+        _fa_pallas.flash_attention(
+            q, k, v, block_q=8, block_k=8, interpret=interpret
+        ).block_until_ready()
+    return probe
+
+
+def _probe_decode(interpret):
+    def probe(profile):
+        q = jnp.zeros((1, 8, 128), jnp.float32)
+        kc = jnp.zeros((1, 8, 1, 128), jnp.float32)
+        _dec_pallas.decode_attention(
+            q, kc, kc, block_k=8, interpret=interpret).block_until_ready()
+    return probe
+
+
+def _probe_rmsnorm(interpret):
+    def probe(profile):
+        x = jnp.zeros((8, 128), jnp.float32)
+        w = jnp.zeros((128,), jnp.float32)
+        _rms_pallas.rmsnorm(
+            x, w, block_rows=8, interpret=interpret).block_until_ready()
+    return probe
+
+
+def _probe_moe(interpret):
+    def probe(profile):
+        x = jnp.zeros((1, 8, 128), jnp.float32)
+        w = jnp.zeros((1, 128, 128), jnp.float32)
+        _gmm_pallas.moe_swiglu_hidden(
+            x, w, w, block_c=8, block_f=128, block_k=128, interpret=interpret
+        ).block_until_ready()
+    return probe
+
+
+def _probe_blocked(profile):
+    q, k, v = _probe_args_attn()
+    blocked_attention(q, k, v, block_q=8, block_k=8).block_until_ready()
+
+
+# interpret=None lets each kernel pick its own execution mode for the target
+# backend (compiled Mosaic on TPU metal, interpreter elsewhere) — the probe
+# then exercises exactly the path the bound tier will take.
+_TPU_MODE = None
+_INTERP_MODE = True
+
+
+# ---------------------------------------------------------------------------
 # Registration
 # ---------------------------------------------------------------------------
 def _is_tpu(profile: Any) -> bool:
@@ -244,8 +346,13 @@ def _is_tpu(profile: Any) -> bool:
         "pallas-tpu")
 
 
+def _is_interp(profile: Any) -> bool:
+    return profile.supports("pallas-interpret")
+
+
 def _is_xla(profile: Any) -> bool:
-    return profile.supports("xla-blocked") or _is_tpu(profile)
+    return profile.supports("xla-blocked") or _is_tpu(profile) or _is_interp(
+        profile)
 
 
 def _register() -> None:
@@ -255,17 +362,25 @@ def _register() -> None:
     if "xla-blocked" in impls:
         return  # idempotent
     reg("attention", "xla-blocked", blocked_attention,
-        supports=_is_xla, priority=10)
+        supports=_is_xla, priority=10, probe=_probe_blocked)
+    reg("attention", "pallas-interpret", interpret_attention,
+        supports=_is_interp, priority=15, probe=_probe_flash(_INTERP_MODE))
     reg("attention", "pallas-tpu", pallas_attention,
-        supports=_is_tpu, priority=20)
+        supports=_is_tpu, priority=20, probe=_probe_flash(_TPU_MODE))
+    reg("decode_attention", "pallas-interpret", interpret_decode_attention,
+        supports=_is_interp, priority=15, probe=_probe_decode(_INTERP_MODE))
     reg("decode_attention", "pallas-tpu", pallas_decode_attention,
-        supports=_is_tpu, priority=20)
+        supports=_is_tpu, priority=20, probe=_probe_decode(_TPU_MODE))
     reg("mlstm", "xla-blocked", mlstm_chunkwise,
         supports=_is_xla, priority=10)
+    reg("rmsnorm", "pallas-interpret", interpret_rmsnorm,
+        supports=_is_interp, priority=15, probe=_probe_rmsnorm(_INTERP_MODE))
     reg("rmsnorm", "pallas-tpu", _rms_pallas.rmsnorm,
-        supports=_is_tpu, priority=20)
+        supports=_is_tpu, priority=20, probe=_probe_rmsnorm(_TPU_MODE))
+    reg("moe_mlp", "pallas-interpret", interpret_moe_mlp,
+        supports=_is_interp, priority=15, probe=_probe_moe(_INTERP_MODE))
     reg("moe_mlp", "pallas-tpu", _gmm_pallas.moe_mlp,
-        supports=_is_tpu, priority=20)
+        supports=_is_tpu, priority=20, probe=_probe_moe(_TPU_MODE))
 
 
 _register()

@@ -83,10 +83,7 @@ def run_cell(arch_id: str, shape_id: str, mesh_kind: str,
         compiled = lowered.compile()
         compile_s = time.perf_counter() - t0
 
-        cost = compiled.cost_analysis()
-        if isinstance(cost, (list, tuple)):
-            cost = cost[0]
-        cost = dict(cost)
+        cost = hlo_cost.xla_cost_analysis(compiled)
         mem = None
         try:
             ma = compiled.memory_analysis()

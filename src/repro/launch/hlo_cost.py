@@ -29,7 +29,20 @@ import re
 
 import numpy as np
 
-__all__ = ["CostReport", "analyze", "parse_computations"]
+from repro.kernels import compat
+
+__all__ = ["CostReport", "analyze", "parse_computations", "xla_cost_analysis"]
+
+
+def xla_cost_analysis(compiled) -> dict:
+    """XLA's own per-module cost dict, normalized across jax versions.
+
+    ``Compiled.cost_analysis()`` has returned a dict, a one-element list of
+    dicts, or nothing depending on version/backend; every consumer (tests,
+    dryrun, accounting) reads it through this one helper so a format change
+    is one fix, not N.
+    """
+    return compat.xla_cost_analysis(compiled)
 
 _DTYPE_BYTES = {
     "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

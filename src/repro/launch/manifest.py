@@ -1,0 +1,69 @@
+"""Print the backend specialization manifest — which kernel tier serves each
+accelerated API on each system profile, after deploy-time probing.
+
+CI runs this after the test suite so a tier regression (a probe that starts
+failing and silently demotes an API to a lower tier) is visible in the
+workflow log at a glance, not buried behind green tests that exercise the
+fallback. See docs/kernel-portability.md for the tier x backend matrix.
+
+Usage:
+    python -m repro.launch.manifest [--json] [--profile NAME ...]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.core import hooks, recompile
+from repro.kernels import ops  # noqa: F401 — registers the tiers
+
+PROFILES = {
+    p.name: p
+    for p in (
+        recompile.PORTABLE_CPU,
+        recompile.CPU_INTERPRET,
+        recompile.TPU_V5E,
+        recompile.TPU_V5E_POD,
+    )
+}
+
+
+def collect(names: list[str] | None = None) -> dict:
+    out = {}
+    for name in names or list(PROFILES):
+        profile = PROFILES[name]
+        binding = hooks.bind(profile, probe=True)
+        out[name] = binding.manifest()
+    return out
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--json", action="store_true", help="machine-readable")
+    ap.add_argument(
+        "--profile", action="append", choices=sorted(PROFILES),
+        help="limit to one or more profiles (default: all)")
+    args = ap.parse_args(argv)
+
+    manifests = collect(args.profile)
+    if args.json:
+        print(json.dumps(manifests, indent=2))
+        return 0
+
+    for pname, man in manifests.items():
+        chip = PROFILES[pname].chip
+        print(f"\n== {pname} ({chip}) ==")
+        width = max(len(a) for a in man["apis"]) + 2
+        for api, choice in sorted(man["apis"].items()):
+            line = f"  {api:<{width}} {choice['provider']}"
+            if choice["probed"]:
+                line += "  [probed]"
+            for provider, err in choice["rejected"]:
+                line += f"\n  {'':<{width}} rejected {provider}: {err}"
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -31,6 +31,7 @@ per-token ``device_get`` + per-slot length sync) as the "before" reference for
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 import logging
@@ -41,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import hooks
 from repro.models import transformer
 from repro.serving.sampling import (SamplingConfig, SamplingParams, sample,
                                     sample_batched)
@@ -101,11 +103,19 @@ class ServingEngine:
         rng: jax.Array | None = None,
         fused: bool = True,
         sync_every: int = 1,
+        binding: hooks.Binding | None = None,
+        manifest: dict | None = None,
     ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # the deployment's hook binding: data-plane programs trace under it,
+        # so the engine serves through the tiers the deployment probed+bound
+        # (None = portable floor). `manifest` is the deployment's
+        # specialization record, reported by warmup().
+        self.binding = binding
+        self.manifest = manifest
         # max_len is ALWAYS the final bucket: a prompt longer than the largest
         # configured bucket but <= max_len must land in a bucket that can hold
         # it (otherwise the pad count goes negative and jnp.pad crashes).
@@ -235,11 +245,32 @@ class ServingEngine:
         self._decode = _decode  # legacy (unfused) step
 
     # ------------------------------------------------------------------
-    def warmup(self) -> None:
+    def _bound(self):
+        """Hook-binding scope for data-plane tracing: jit programs trace on
+        first call, and the trace must happen under the deployment's binding
+        for the probed tiers to actually serve traffic."""
+        if self.binding is None:
+            return contextlib.nullcontext()
+        return hooks.use(self.binding)
+
+    def warmup(self) -> dict | None:
         """Pre-compile every data-plane program so steady-state serving never
         compiles: the fused step, each (batch, bucket) prefill shape, the
         first-token sampler, and the slot-assign scatter. Outputs are
-        discarded — engine state is untouched."""
+        discarded — engine state is untouched. Returns (and logs) the
+        deployment's specialization manifest, so the operator sees exactly
+        which kernel tier serves each accelerated API before traffic lands."""
+        with self._bound():
+            self._warmup_programs()
+        if self.manifest is not None:
+            tiers = {a: c["provider"]
+                     for a, c in self.manifest.get("apis", {}).items()}
+            logger.info("serving warm [%s @ %s]: %s",
+                        self.manifest.get("container", "?"),
+                        self.manifest.get("profile", "?"), tiers)
+        return self.manifest
+
+    def _warmup_programs(self) -> None:
         if self.fused:
             self._fused_step(self.params, self.rng, self.states, self.ctrl)
         else:
@@ -393,6 +424,10 @@ class ServingEngine:
         """One engine iteration: admit, run one fused decode program for all
         B slots, sync the packed result (every ``sync_every`` steps), retire
         finished. Returns number of host-visible active slots."""
+        with self._bound():
+            return self._step_bound()
+
+    def _step_bound(self) -> int:
         self._admit()
         if not any(r is not None for r in self.active):
             self._flush()

@@ -55,9 +55,13 @@ def serving_container(
         return (pshapes, tok, sshapes, lens), {}, {}
 
     def engine_factory(deployment) -> ServingEngine:
+        # the engine inherits the deployment's probed hook binding + its
+        # specialization manifest: traffic is served by exactly the tiers
+        # deploy() bound, and warmup() reports them
         return ServingEngine(
             cfg, params, slots=slots, max_len=max_len,
-            prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every)
+            prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every,
+            binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),
     # so two serving containers for the same arch but different slot/cache

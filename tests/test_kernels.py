@@ -166,6 +166,23 @@ def test_hook_binding_consistency():
     np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)
 
 
+def test_hook_dispatch_through_interpret_tier():
+    """On the CPU-CI profile the hand-tiled Pallas kernels serve traffic via
+    the pallas-interpret tier (probed at bind time), not the portable ref."""
+    from repro.core import hooks, recompile
+
+    binding = hooks.bind(recompile.CPU_INTERPRET, probe=True)
+    assert binding.providers()["decode_attention"] == "pallas-interpret"
+    q3, k, v = _qkv(2, 1, 64, 4, 2, 16, jnp.float32)
+    q = q3[:, 0]
+    lengths = jnp.asarray([32, 64], jnp.int32)
+    want = ref.decode_attention(q, k, v, lengths=lengths)
+    with hooks.use(binding):
+        got = hooks.call("decode_attention", q, k, v, lengths=lengths)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=2e-5, rtol=2e-5)
+
+
 # ---------------------------------------------------------------------------
 # rmsnorm (Pallas, interpret) vs oracle
 # ---------------------------------------------------------------------------

@@ -137,3 +137,22 @@ def test_container_without_engine_factory_rejected():
     bare = xcontainer.XContainer(name="not-serving", entrypoints={})
     with pytest.raises(ValueError):
         service.acquire_serving("tenant-a", bare, profile)
+
+
+def test_warmup_reports_specialization_manifest():
+    """warmup() must report exactly which kernel tier serves each accelerated
+    API for this deployment (the specialization manifest), and the engine
+    must carry the deployment's probed binding."""
+    cfg, cont = _container()
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    ex = service.acquire_serving("tenant-a", cont, profile)
+    man = ex.warmup()
+    assert man["container"] == cont.name
+    assert man["profile"] == "portable-cpu"
+    # the portable floor serves every API on this profile
+    assert all(c["provider"] == "portable" for c in man["apis"].values())
+    assert ex.engine.binding is ex.lease.deployment.binding
+    # deploy() also mirrored the manifest into the shipped recipe's meta
+    assert cont.meta["specialization"]["portable-cpu"]["apis"] == man["apis"]
+    ex.release()

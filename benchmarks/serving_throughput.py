@@ -10,12 +10,16 @@ Measures, for the same synthetic request stream on one model:
   * prefill program calls — batched admission runs one program per prompt
     bucket instead of one per request.
 
+Writes machine-readable results to ``BENCH_serving.json`` (``--out``) so the
+perf trajectory is tracked across PRs.
+
     PYTHONPATH=src python benchmarks/serving_throughput.py \
         [--arch qwen2-0.5b] [--requests 16] [--max-new 16]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -83,6 +87,7 @@ def main() -> None:
     ap.add_argument("--max-len", type=int, default=128)
     ap.add_argument("--sync-every", type=int, default=4,
                     help="extra fused run with k-step sync batching")
+    ap.add_argument("--out", default="BENCH_serving.json")
     args = ap.parse_args()
 
     arch = args.arch + ("" if args.arch.endswith("-smoke") else "-smoke")
@@ -121,6 +126,20 @@ def main() -> None:
         f"fused data plane must sync exactly once per decode step, "
         f"got {fused['syncs_per_step']}")
     assert fused["tok_s"] > legacy["tok_s"], "fused engine should be faster"
+
+    payload = {
+        "benchmark": "serving_throughput",
+        "arch": arch,
+        "requests": args.requests,
+        "max_new": args.max_new,
+        "slots": args.slots,
+        "fused_speedup": round(speedup, 3),
+        "modes": [{k: v for k, v in r.items() if k != "results"}
+                  for r in rows],
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    print(f"wrote {args.out}")
     print("serving_throughput OK")
 
 

@@ -1,5 +1,18 @@
-"""Batched serving example (deliverable (b)): continuous batching over mixed
-request sizes, with FaaS-style metering per request batch.
+"""Multi-tenant elastic serving example — the canonical fleet walkthrough.
+
+Three tenants share an autoscaled fleet of leased serving replicas while two
+BATCH training jobs coexist on the same cluster:
+
+  * requests are placed by the affinity router (returning sessions stick to
+    their replica; prompt buckets stay hot),
+  * a traffic burst trips the SLO autoscaler, which acquires more SERVICE
+    leases — preempting (checkpoint + requeue) a training job when the
+    cluster is full,
+  * the lull drains the extra replicas back to the minimum footprint and
+    releases their leases, letting the training jobs resume from their
+    checkpoints,
+  * every served token is metered to the tenant whose request produced it,
+    aggregated across replicas in one ledger.
 
     PYTHONPATH=src python examples/serve_batch.py [--arch qwen2-0.5b]
 """
@@ -7,60 +20,70 @@ import argparse
 import time
 
 import jax
-import numpy as np
 
 from repro import configs
-from repro.core.accounting import Meter
+from repro.fleet import FleetConfig, FleetManager, SLO, bursty_trace, materialize
 from repro.models import transformer
-from repro.serving.engine import Request, ServingEngine
-from repro.serving.sampling import SamplingConfig
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
-    ap.add_argument("--requests", type=int, default=12)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--max-replicas", type=int, default=4)
     args = ap.parse_args()
 
     cfg = configs.get_config(args.arch + "-smoke")
-    params = transformer.init_model(jax.random.key(0), cfg)
-    engine = ServingEngine(cfg, params, slots=args.slots, max_len=128,
-                           prompt_buckets=(16, 32, 64))
-    meter = Meter()
-    rng = np.random.default_rng(0)
+    params = transformer.init_model(jax.random.key(args.seed), cfg)
 
-    for i in range(args.requests):
-        plen = int(rng.integers(4, 32))
-        if cfg.frontend == "audio":
-            prompt = rng.integers(0, cfg.vocab_size,
-                                  (cfg.num_codebooks, plen), dtype=np.int32)
-        else:
-            prompt = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
-        engine.submit(Request(
-            request_id=i, prompt=prompt,
-            max_new_tokens=int(rng.integers(4, args.max_new + 1)),
-            sampling=SamplingConfig(temperature=args.temperature, top_k=40)))
+    trace = bursty_trace(
+        seed=args.seed, duration_s=24.0, base_rate=0.3, burst_rate=8.0,
+        bursts=((4.0, 12.0),),
+        tenants={"acme": 0.5, "globex": 0.3, "initech": 0.2},
+        prompt_median=8, prompt_lo=4, prompt_hi=16,
+        max_new_lo=4, max_new_hi=8)
+    reqs = materialize(trace, vocab_size=cfg.vocab_size, seed=args.seed + 1,
+                       num_codebooks=(cfg.num_codebooks
+                                      if cfg.frontend == "audio" else 0))
+
+    fleet = FleetManager.build(
+        cfg, params, chips=args.chips,
+        fleet=FleetConfig(min_replicas=1, max_replicas=args.max_replicas,
+                          slots=2, max_len=64, prompt_buckets=(8, 16),
+                          tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5),
+        slo=SLO(p95_target_s=1.5, queue_high_per_slot=1.0,
+                up_cooldown_s=1.0, down_cooldown_s=2.0, idle_drain_s=3.0),
+        batch_jobs=[(1, 30), (1, 30)])
 
     t0 = time.perf_counter()
-    results = engine.run_to_completion()
+    report = fleet.run_trace(reqs)
     wall = time.perf_counter() - t0
-    toks = sum(len(r.tokens) for r in results.values())
-    meter.record(tenant="serve-demo", kind="decode",
-                 steps=engine.stats["decode_steps"], chips=1, wall_s=wall)
 
-    print(f"{len(results)}/{args.requests} requests, {toks} tokens in "
-          f"{wall:.2f}s ({toks / wall:.1f} tok/s)")
-    print(f"engine: {engine.stats['prefills']} prefills, "
-          f"{engine.stats['decode_steps']} decode steps "
-          f"(batching factor {toks / max(engine.stats['decode_steps'], 1):.2f} "
-          f"tokens/step)")
-    for rid in sorted(results)[:3]:
-        print(f"  request {rid}: {results[rid].tokens[:8]}...")
-    print(f"billed: ${meter.total_usd():.6f}")
-    assert len(results) == args.requests
+    print(f"{report.served}/{report.requests} requests, {report.tokens} "
+          f"tokens over {report.duration_s:.1f} virtual s "
+          f"({wall:.1f}s real) | p50 {report.latency_p50_s:.2f}s "
+          f"p99 {report.latency_p99_s:.2f}s")
+    print(f"elasticity: {report.scale_ups} scale-ups / "
+          f"{report.lease_releases} lease releases / "
+          f"{report.preemptions} batch preemptions "
+          f"({report.batch['resumes']} checkpoint-resumes), "
+          f"{report.serving_chip_s:.1f} serving chip-seconds")
+    print("timeline:")
+    for t, what in fleet.timeline:
+        print(f"  [{t:6.2f}s] {what}")
+    print("router:", fleet.router.stats)
+    meter = fleet.service.meter
+    print("per-tenant ledger (aggregated across replicas):")
+    for tenant in sorted(report.tokens_by_tenant):
+        print(f"  {tenant:<10} {report.metered_by_tenant[tenant]:>5} tokens")
+    print(f"  {'fleet-op':<10} {meter.total_steps('serve_decode', 'fleet-op'):>5} "
+          f"decode steps billed (${meter.total_usd('fleet-op'):.6f})")
+
+    assert report.served == report.requests
+    assert report.reconciled, "per-tenant ledger must reconcile across replicas"
+    assert report.scale_ups >= 1 and report.lease_releases >= 1
+    meter.check_invariants()
 
 
 if __name__ == "__main__":

@@ -28,7 +28,7 @@ from __future__ import annotations
 import dataclasses
 import itertools
 import time
-from typing import Any
+from typing import Any, Callable
 
 from repro.core import accounting, container as xcontainer, recompile, scheduler
 
@@ -151,6 +151,7 @@ class InvocationService:
         *,
         mesh=None,
         runtime_s: float = 3600.0,
+        tenant_of: Callable[[int], str] | None = None,
     ) -> "ServingExecutor":
         """Acquire a SERVICE-class lease whose deployment boots a serving
         engine (build ``cont`` with ``repro.serving.service.serving_container``).
@@ -169,7 +170,8 @@ class InvocationService:
             tenant, cont, profile, mesh=mesh, runtime_s=runtime_s,
             klass=scheduler.JobClass.SERVICE)
         engine = factory(lease.deployment)
-        return ServingExecutor(service=self, lease=lease, engine=engine)
+        return ServingExecutor(service=self, lease=lease, engine=engine,
+                               tenant_of=tenant_of)
 
     def release(self, lease: Lease) -> None:
         """Scale to zero: free the chips; keep the warm artifact cached."""
@@ -177,6 +179,13 @@ class InvocationService:
             lease.active = False
             self.cluster.cancel(lease.job.job_id)
             self.cluster.run(until=self.cluster.now)
+            # the lease's chips MUST be back in the free pool (or already
+            # re-granted to a queued job by the schedule pass) — a lease that
+            # releases without its job letting go of chips is a chip leak
+            assert lease.job.granted_chips == 0, (
+                f"lease {lease.lease_id}: job {lease.job.job_id} still holds "
+                f"{lease.job.granted_chips} chips after release")
+            self.cluster.check_invariants()
 
     # ------------------------------------------------------------------
     def active_leases(self, tenant: str | None = None) -> list[Lease]:
@@ -201,13 +210,24 @@ class ServingExecutor:
       * ``serve_tokens``: the per-token usage line (the FaaS billing quantum
         lifted to continuous batching) — queryable via
         ``Meter.served_tokens(tenant)``.
+
+    Multi-tenant fleets set ``tenant_of`` (request_id -> tenant): decode
+    steps stay billed to the lease holder (the fleet operator pays for the
+    chips), while each served token is attributed to the tenant whose request
+    produced it — so per-tenant totals reconcile across replicas.
+
+    The executor is a context manager: ``with service.acquire_serving(...)
+    as ex: ...`` releases the lease on exit even on error, so chips always
+    return to the cluster free pool.
     """
 
-    def __init__(self, service: InvocationService, lease: Lease, engine: Any):
+    def __init__(self, service: InvocationService, lease: Lease, engine: Any,
+                 tenant_of: Callable[[int], str] | None = None):
         self.service = service
         self.lease = lease
         self.engine = engine
-        self._metered_tokens = 0
+        self.tenant_of = tenant_of
+        self._tokens_billed: dict[int, int] = {}  # request_id -> tokens billed
         self._metered_steps = 0
 
     def warmup(self) -> dict | None:
@@ -220,6 +240,15 @@ class ServingExecutor:
         if not self.lease.active:
             raise RuntimeError(f"lease {self.lease.lease_id} is released")
         self.engine.submit(request)
+
+    def step(self) -> int:
+        """One engine iteration through the lease (the fleet tick path;
+        ``run`` remains the drain-to-completion path). Returns the number of
+        host-visible active slots. Call ``meter_flush`` periodically to bill
+        the accumulated delta."""
+        if not self.lease.active:
+            raise RuntimeError(f"lease {self.lease.lease_id} is released")
+        return self.engine.step()
 
     def run(self, max_steps: int = 10_000) -> dict:
         """Drain the engine and meter the usage delta. Returns the engine's
@@ -236,30 +265,58 @@ class ServingExecutor:
     def unserved(self) -> int:
         return self.engine.stats.get("unserved", 0)
 
+    def meter_flush(self, wall_s: float = 0.0) -> None:
+        """Bill the usage delta since the last flush (decode steps to the
+        lease holder, served tokens to each originating tenant). The fleet
+        calls this on its own cadence with virtual wall time; ``run`` calls
+        it with the measured drain wall time."""
+        self._meter(wall_s)
+
     def _meter(self, wall_s: float) -> None:
         try:
             art = self.lease.deployment.artifact("decode")
         except KeyError:
             art = None
         steps = self.engine.stats["decode_steps"] - self._metered_steps
-        tokens = sum(
-            len(r.tokens) for r in self.engine.results.values()
-        ) - self._metered_tokens
         job_id = f"lease-{self.lease.lease_id}"
         if steps > 0:
+            if wall_s <= 0.0 and art is not None:
+                # shutdown-path flush with no measured window: bill the
+                # delta at the roofline-modeled step time (same rule as
+                # `invoke` on simulated hardware) instead of zero chip-time
+                wall_s = model_step_time(art) * steps
             self.service.meter.record(
                 tenant=self.lease.tenant, kind="serve_decode", steps=steps,
                 chips=self.lease.chips, wall_s=wall_s, artifact=art,
                 job_id=job_id)
             self._metered_steps += steps
-        if tokens > 0:
+        # per-request token deltas, grouped by originating tenant (the lease
+        # holder when no tenant_of map is installed)
+        deltas: dict[str, int] = {}
+        for rid, res in self.engine.results.items():
+            served = len(res.tokens)
+            billed = self._tokens_billed.get(rid, 0)
+            if served > billed:
+                tenant = self.tenant_of(rid) if self.tenant_of else self.lease.tenant
+                deltas[tenant] = deltas.get(tenant, 0) + served - billed
+                self._tokens_billed[rid] = served
+        for tenant, tokens in sorted(deltas.items()):
             # pure usage-count line: wall already billed on the decode line
             self.service.meter.record(
-                tenant=self.lease.tenant, kind="serve_tokens", steps=tokens,
+                tenant=tenant, kind="serve_tokens", steps=tokens,
                 chips=self.lease.chips, wall_s=0.0, job_id=job_id)
-            self._metered_tokens += tokens
         self.service.stats["invocations"] += 1
 
     def release(self) -> None:
-        """Scale to zero; the warm deployment stays cached for re-acquire."""
+        """Scale to zero; the warm deployment stays cached for re-acquire.
+        Any unbilled served tokens are flushed first so the ledger never
+        loses usage on shutdown."""
+        if self.lease.active:
+            self.meter_flush()
         self.service.release(self.lease)
+
+    def __enter__(self) -> "ServingExecutor":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.release()

@@ -22,6 +22,12 @@ This module implements a deterministic discrete-event cluster scheduler:
   * elasticity: jobs may declare ``min_chips``; under pressure the scheduler
     starts them shrunk (elastic scale-down), growing at the next event — the
     FaaS "scale to zero / scale out" behavior lifted to parallel jobs.
+  * preemption: ``preempt()`` evicts a RUNNING BATCH job for a
+    latency-sensitive arrival (the interactive/batch coexistence story).
+    Listeners fire *before* the chips are taken (a graceful checkpoint
+    window — the fleet wires this to FTManager), progress is credited
+    against the walltime limit, and the job is requeued at its class
+    priority to restart when chips free up.
   * the state machine is event-driven with no global clock sweep — event
     handlers touch only per-job + free-pool state, which is what makes the
     design "parallelizable" (shardable by pool) per the paper.
@@ -70,6 +76,9 @@ class Job:
     end_s: float | None = None
     granted_chips: int = 0
     preemptions: int = 0
+    # bumped on every preemption; start/finish events record it so a stale
+    # "finish" from a pre-preemption incarnation can't kill the restarted job
+    incarnation: int = 0
 
     def __post_init__(self):
         if self.min_chips <= 0:
@@ -88,8 +97,10 @@ class Job:
 class Event:
     time: float
     seq: int
-    kind: str = dataclasses.field(compare=False)  # submit | finish | cancel | fail
+    kind: str = dataclasses.field(compare=False)  # submit | finish | cancel | fail | preempt
     job_id: int = dataclasses.field(compare=False)
+    # job incarnation the event was issued against (finish events only)
+    ref: int = dataclasses.field(compare=False, default=0)
 
 
 class Cluster:
@@ -147,6 +158,14 @@ class Cluster:
         """External failure event (node crash) — consumed by ft/manager."""
         self._push(Event(self.now if at is None else at, next(self._seq), "fail", job_id))
 
+    def preempt(self, job_id: int, at: float | None = None) -> None:
+        """Evict a RUNNING preemptible job: listeners get a ("preempt", job)
+        callback *before* the chips are released (the graceful checkpoint
+        window), elapsed runtime is credited against the walltime limit, and
+        the job is requeued PENDING at its class priority. SERVICE jobs are
+        leases and are never preempted (no-op)."""
+        self._push(Event(self.now if at is None else at, next(self._seq), "preempt", job_id))
+
     # ------------------------------------------------------------------
     # event loop
     # ------------------------------------------------------------------
@@ -174,6 +193,16 @@ class Cluster:
     def events_pending(self) -> bool:
         return bool(self._events)
 
+    def advance_to(self, t: float) -> None:
+        """Process every event due by `t`, then move the virtual clock to `t`
+        even if the event queue empties first (``run(until=...)`` stops
+        advancing once there are no events, which would freeze utilization
+        accounting through idle stretches — the fleet tick loop needs the
+        clock to keep integrating busy-chip seconds)."""
+        self.run(until=t)
+        if self.now < t:
+            self._advance_clock(t)
+
     def _advance_clock(self, t: float) -> None:
         if t < self.now:
             t = self.now  # never go backwards (late-submitted events)
@@ -184,10 +213,7 @@ class Cluster:
     # ------------------------------------------------------------------
     # handlers
     # ------------------------------------------------------------------
-    def _on_submit(self, ev: Event) -> None:
-        job = self.jobs[ev.job_id]
-        if job.state != JobState.PENDING:
-            return
+    def _enqueue(self, job: Job) -> None:
         # insertion keeping class priority then FCFS
         idx = len(self.pending)
         for i, jid in enumerate(self.pending):
@@ -196,11 +222,39 @@ class Cluster:
                 break
         self.pending.insert(idx, job.job_id)
 
+    def _on_submit(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state != JobState.PENDING:
+            return
+        self._enqueue(job)
+
     def _on_finish(self, ev: Event) -> None:
         job = self.jobs[ev.job_id]
-        if job.state != JobState.RUNNING:
+        if job.state != JobState.RUNNING or ev.ref != job.incarnation:
+            # ref mismatch: a finish scheduled before a preemption landing
+            # after the restart — the restarted incarnation has its own
             return
         self._release(job, JobState.DONE)
+
+    def _on_preempt(self, ev: Event) -> None:
+        job = self.jobs[ev.job_id]
+        if job.state != JobState.RUNNING or job.is_service:
+            return
+        # graceful window: chips still held while listeners checkpoint
+        for fn in self.listeners:
+            fn("preempt", job)
+        elapsed = self.now - (job.start_s or 0.0)
+        # progress up to the preemption checkpoint is credited: the restart
+        # only owes the remainder of the declared walltime
+        job.runtime_s = max(job.runtime_s - elapsed, 1e-9)
+        job.incarnation += 1
+        self.free_chips += job.granted_chips
+        self.running.discard(job.job_id)
+        job.granted_chips = 0
+        job.state = JobState.PENDING
+        job.start_s = None
+        job.preemptions += 1
+        self._enqueue(job)
 
     def _on_cancel(self, ev: Event) -> None:
         job = self.jobs[ev.job_id]
@@ -237,7 +291,8 @@ class Cluster:
         self.running.add(job.job_id)
         self.pending.remove(job.job_id)
         if not job.is_service:  # services run until cancelled
-            self._push(Event(self.now + job.runtime_s, next(self._seq), "finish", job.job_id))
+            self._push(Event(self.now + job.runtime_s, next(self._seq), "finish",
+                             job.job_id, ref=job.incarnation))
         for fn in self.listeners:
             fn("start", job)
 
@@ -336,6 +391,9 @@ class Cluster:
         if self.now <= 0:
             return 0.0
         return self.utilization_chip_s / (self.total_chips * self.now)
+
+    def total_preemptions(self) -> int:
+        return sum(j.preemptions for j in self.jobs.values())
 
     def mean_wait(self, klass: JobClass | None = None) -> float:
         waits = [

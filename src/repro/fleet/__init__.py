@@ -1,0 +1,21 @@
+"""Elastic serving fleet: multi-replica control plane over the scheduler,
+invocation, and engine layers (docs/fleet.md).
+
+  * :mod:`repro.fleet.manager`    — FleetManager / Replica / BatchWorkload
+  * :mod:`repro.fleet.router`     — load + affinity admission routing
+  * :mod:`repro.fleet.autoscaler` — SLO-driven scale-up / scale-to-min policy
+  * :mod:`repro.fleet.traffic`    — deterministic seeded workload traces
+"""
+from repro.fleet.autoscaler import SLO, Autoscaler
+from repro.fleet.manager import (BatchWorkload, FleetConfig, FleetManager,
+                                 FleetReport, Replica, ReplicaState)
+from repro.fleet.router import FleetRequest, Router
+from repro.fleet.traffic import (TraceRequest, bursty_trace, diurnal_trace,
+                                 materialize, steady_trace)
+
+__all__ = [
+    "SLO", "Autoscaler", "BatchWorkload", "FleetConfig", "FleetManager",
+    "FleetReport", "FleetRequest", "Replica", "ReplicaState", "Router",
+    "TraceRequest", "bursty_trace", "diurnal_trace", "materialize",
+    "steady_trace",
+]

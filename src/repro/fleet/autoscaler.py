@@ -1,0 +1,112 @@
+"""SLO-driven autoscaling policy for the serving fleet.
+
+Pure decision logic — no engines, no scheduler — so the policy is unit
+testable and the manager stays the only place with side effects. Two input
+signals, two SLO knobs:
+
+  * **queue pressure**: queued requests per serving slot above
+    ``queue_high_per_slot`` means admission is falling behind — scale up
+    *before* latency degrades (queue depth leads p95 by construction).
+  * **tail latency**: windowed p95 of completed-request latency above
+    ``p95_target_s`` means the SLO is already being violated — scale up.
+
+Scale-down is deliberately slower than scale-up (classic asymmetric
+hysteresis): the fleet must be *sustained* idle — no queue, busy-slot
+fraction under ``low_util`` — for ``idle_drain_s`` before one replica is
+drained, and consecutive scale-downs are spaced by ``down_cooldown_s``.
+Scale-ups only need ``up_cooldown_s`` (roughly one boot time) between them
+so a burst can ramp the fleet to max in a few windows.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+__all__ = ["SLO", "Autoscaler"]
+
+
+@dataclasses.dataclass(frozen=True)
+class SLO:
+    """The fleet's service-level objective and scaling hysteresis knobs."""
+
+    p95_target_s: float = 1.5      # windowed p95 completion latency target
+    queue_high_per_slot: float = 1.0  # queued requests per serving slot
+    low_util: float = 0.25         # busy-slot fraction considered idle
+    window_s: float = 8.0          # latency observation window
+    min_window_samples: int = 4    # p95 needs this many completions
+    up_cooldown_s: float = 1.0     # >= one boot time: let the new replica land
+    down_cooldown_s: float = 4.0
+    idle_drain_s: float = 3.0      # sustained idle before draining a replica
+
+
+class Autoscaler:
+    """Decides "up" / "down" / None from fleet metrics snapshots."""
+
+    def __init__(self, slo: SLO | None = None, min_replicas: int = 1,
+                 max_replicas: int = 4):
+        assert 1 <= min_replicas <= max_replicas
+        self.slo = slo or SLO()
+        self.min_replicas = min_replicas
+        self.max_replicas = max_replicas
+        self._window: deque[tuple[float, float]] = deque()  # (done_t, latency)
+        self._last_up = -float("inf")
+        self._last_down = -float("inf")
+        self._idle_since: float | None = None
+        self.decisions: list[tuple[float, str, str]] = []  # (t, action, reason)
+
+    # ------------------------------------------------------------------
+    def record_completion(self, now: float, latency_s: float) -> None:
+        self._window.append((now, latency_s))
+
+    def p95(self, now: float) -> float | None:
+        self._purge(now)
+        if len(self._window) < self.slo.min_window_samples:
+            return None
+        return float(np.percentile([l for _, l in self._window], 95))
+
+    def _purge(self, now: float) -> None:
+        w = self._window
+        while w and w[0][0] < now - self.slo.window_s:
+            w.popleft()
+
+    # ------------------------------------------------------------------
+    def decide(self, now: float, *, serving: int, booting: int,
+               queued: int, busy_slots: int, total_slots: int) -> str | None:
+        """One scaling decision per call. ``serving``/``booting`` are replica
+        counts; ``queued`` is fleet-wide queued requests; ``busy_slots`` /
+        ``total_slots`` are over SERVING replicas only."""
+        slo = self.slo
+        p95 = self.p95(now)
+        active = serving + booting
+
+        if active < self.max_replicas and now - self._last_up >= slo.up_cooldown_s:
+            reason = None
+            if queued > slo.queue_high_per_slot * total_slots:
+                reason = f"queue {queued} > {slo.queue_high_per_slot:g}/slot x {total_slots}"
+            elif p95 is not None and p95 > slo.p95_target_s:
+                reason = f"p95 {p95:.2f}s > target {slo.p95_target_s:g}s"
+            if reason is not None:
+                self._last_up = now
+                self._idle_since = None
+                self.decisions.append((now, "up", reason))
+                return "up"
+
+        idle = queued == 0 and busy_slots <= slo.low_util * total_slots
+        if idle:
+            if self._idle_since is None:
+                self._idle_since = now
+        else:
+            self._idle_since = None
+        if (serving > self.min_replicas and booting == 0
+                and self._idle_since is not None
+                and now - self._idle_since >= slo.idle_drain_s
+                and now - self._last_down >= slo.down_cooldown_s):
+            self._last_down = now
+            self.decisions.append(
+                (now, "down",
+                 f"idle {now - self._idle_since:.1f}s "
+                 f"(busy {busy_slots}/{total_slots}, queue 0)"))
+            return "down"
+        return None

@@ -1,0 +1,590 @@
+"""Fleet control plane: N replica serving engines behind SERVICE leases,
+SLO-driven elasticity, and interactive/batch coexistence via preemption.
+
+This is the cluster-level layer the paper's allocation-model principle asks
+for: long-running, performance-sensitive serving gets FaaS-style elasticity
+("the flexibility and efficient resource utilization of serverless") without
+giving up the leased, warm, compiled-data-plane execution model.
+
+  * :class:`FleetManager` owns the replicas. Each replica is a
+    ``ServingEngine`` booted behind its **own SERVICE lease** from
+    ``InvocationService`` — so the warm-deployment cache (compiled decode
+    artifact) and the engine program cache (jitted data-plane bundle) are
+    shared across replicas, and every replica surfaces its specialization
+    manifest at boot.
+  * Requests are placed by the affinity :class:`~repro.fleet.router.Router`;
+    completions feed the :class:`~repro.fleet.autoscaler.Autoscaler`, whose
+    "up" decisions acquire a new lease (preempting BATCH training jobs
+    through ``Cluster.preempt`` when the cluster is full — each preemption
+    checkpoints through ``FTManager`` and requeues) and whose "down"
+    decisions drain a replica and **release** its lease back to the free
+    pool (scale-to-min).
+  * Time is virtual: the fleet advances in ``tick_s`` steps, each tick
+    running ONE real fused decode program per replica with work. The same
+    objects run live under ``launch/serve.py --fleet``; latency, chip-second
+    and utilization numbers come from the scheduler's virtual clock, so runs
+    are deterministic given a trace seed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import itertools
+import logging
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.core import recompile, scheduler
+from repro.core.invocation import InvocationService, ServingExecutor
+from repro.fleet.autoscaler import SLO, Autoscaler
+from repro.fleet.router import FleetRequest, Router
+from repro.ft.manager import FTManager
+from repro.serving.engine import Request, _bucket
+
+__all__ = ["FleetConfig", "Replica", "ReplicaState", "BatchWorkload",
+           "FleetManager", "FleetReport"]
+
+logger = logging.getLogger(__name__)
+
+
+class ReplicaState(enum.Enum):
+    BOOTING = "booting"      # lease held, engine warming; accepts (queues) traffic
+    SERVING = "serving"      # in rotation
+    DRAINING = "draining"    # finishes in-flight + queued work, admits nothing
+    RELEASED = "released"    # lease released, chips back in the free pool
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetConfig:
+    tenant: str = "fleet-op"      # the lease holder: pays for chips
+    min_replicas: int = 1
+    max_replicas: int = 4
+    # per-replica engine geometry
+    slots: int = 2
+    max_len: int = 96
+    prompt_buckets: tuple[int, ...] = (16, 32, 48)
+    sync_every: int = 1
+    # virtual-time knobs
+    tick_s: float = 0.05          # one fused decode round per replica per tick
+    warm_boot_s: float = 0.5      # deployment cache hit: engine boot only
+    cold_boot_s: float = 2.0      # first deploy: compile the data plane
+    meter_every_s: float = 2.0    # ledger flush cadence
+    settle_s: float = 40.0        # sim horizon past the last arrival
+
+
+class Replica:
+    """One serving engine behind its own SERVICE lease."""
+
+    def __init__(self, replica_id: int, executor: ServingExecutor, *,
+                 boot_until_s: float, started_s: float, boot: str):
+        self.replica_id = replica_id
+        self.executor = executor
+        self.engine = executor.engine
+        self.state = ReplicaState.BOOTING
+        self.boot = boot  # "warm" | "cold" (deployment cache hit or miss)
+        self.boot_until_s = boot_until_s
+        self.started_s = started_s
+        self.released_s: float | None = None
+        self.chips = executor.lease.job.granted_chips
+        self.hot_buckets: set[int] = set()
+        self.manifest: dict | None = None
+        self.last_flush_s = started_s
+        self.harvested = 0  # results already seen by FleetManager._harvest
+
+    # ---- router protocol ----
+    @property
+    def accepting(self) -> bool:
+        return self.state in (ReplicaState.BOOTING, ReplicaState.SERVING)
+
+    def outstanding_tokens(self) -> int:
+        """Queued + remaining in-flight decode tokens — the router's load
+        signal."""
+        eng = self.engine
+        queued = sum(r.max_new_tokens for r in eng.queue)
+        inflight = sum(
+            max(r.max_new_tokens - len(eng.generated[i]), 0)
+            for i, r in enumerate(eng.active) if r is not None)
+        return queued + inflight
+
+    def bucket_for(self, prompt_len: int) -> int:
+        return _bucket(prompt_len, self.engine.prompt_buckets)
+
+    # ---- manager internals ----
+    def has_work(self) -> bool:
+        eng = self.engine
+        return bool(eng.queue) or any(r is not None for r in eng.active)
+
+    def busy_slots(self) -> int:
+        return sum(r is not None for r in self.engine.active)
+
+
+@dataclasses.dataclass
+class _BatchJob:
+    job: scheduler.Job
+    total_steps: int
+    ft: FTManager
+    progress: float = 0.0   # virtual training steps completed
+    ckpt_step: int = 0      # last committed checkpoint
+
+
+class BatchWorkload:
+    """Preemptible BATCH training jobs sharing the cluster with the fleet.
+
+    Each job's progress advances in virtual time; checkpoints go through the
+    same ``FTManager`` save hook real training uses. The scheduler's graceful
+    preemption window (``Cluster.preempt`` fires listeners *before* taking
+    the chips) triggers a final checkpoint, and when a requeued job restarts,
+    ``FTManager.resume`` restores progress from the last committed step — the
+    paper's interactive/batch coexistence with no lost work.
+    """
+
+    def __init__(self, cluster: scheduler.Cluster, *, tenant: str = "train",
+                 step_s: float = 1.0, ckpt_every: int = 5,
+                 store_factory=None):
+        """``store_factory(job_id) -> CheckpointStore`` makes checkpoints hit
+        real storage; the default keeps them in memory (same FTManager code
+        path, no disk)."""
+        self.cluster = cluster
+        self.tenant = tenant
+        self.step_s = step_s
+        self.ckpt_every = ckpt_every
+        self._store_factory = store_factory
+        self.jobs: dict[int, _BatchJob] = {}
+        self.stats = {"submitted": 0, "checkpoints": 0, "preemptions": 0,
+                      "resumes": 0}
+        cluster.listeners.append(self._on_event)
+
+    def submit(self, *, chips: int, total_steps: int) -> scheduler.Job:
+        job = self.cluster.submit(
+            tenant=self.tenant, chips=chips,
+            runtime_s=total_steps * self.step_s,
+            klass=scheduler.JobClass.BATCH)
+        store = self._store_factory(job.job_id) if self._store_factory else None
+        mem: dict[int, Any] = {}  # in-memory fallback: step -> state
+
+        def save(state, step):
+            if store is not None:
+                store.save(int(step), {"data_step": np.asarray(state["data_step"])},
+                           meta={"job": job.job_id}, blocking=True)
+            else:
+                mem[int(step)] = state
+
+        def make_step(mesh_size):
+            if store is not None:
+                last = store.latest_step() or 0
+            else:
+                last = max(mem) if mem else 0
+            return None, {"data_step": np.asarray(last)}, last
+
+        ft = FTManager(make_step=make_step, save=save,
+                       ckpt_every=self.ckpt_every, min_mesh=1)
+        self.jobs[job.job_id] = _BatchJob(job=job, total_steps=total_steps, ft=ft)
+        self.stats["submitted"] += 1
+        return job
+
+    def _on_event(self, kind: str, job: scheduler.Job) -> None:
+        entry = self.jobs.get(job.job_id)
+        if entry is None:
+            return
+        if kind == "preempt":
+            # graceful window: chips still held — commit a final checkpoint
+            step = int(entry.progress)
+            entry.ckpt_step = entry.ft.checkpoint(
+                {"data_step": np.asarray(step)}, step)
+            self.stats["checkpoints"] += 1
+            self.stats["preemptions"] += 1
+            logger.info("batch job %d preempted at step %d (checkpointed)",
+                        job.job_id, step)
+        elif kind == "start" and job.preemptions > 0:
+            # requeued job restarting: restore from the committed checkpoint
+            _, state, step = entry.ft.resume(job.granted_chips)
+            entry.progress = float(step)
+            self.stats["resumes"] += 1
+            logger.info("batch job %d resumed from checkpoint step %d",
+                        job.job_id, step)
+
+    def tick(self, now: float, dt: float) -> None:
+        for entry in self.jobs.values():
+            if entry.job.state != scheduler.JobState.RUNNING:
+                continue
+            entry.progress = min(entry.progress + dt / self.step_s,
+                                 entry.total_steps)
+            step = int(entry.progress)
+            if step - entry.ckpt_step >= self.ckpt_every:
+                entry.ft.save({"data_step": np.asarray(step)}, step)
+                entry.ckpt_step = step
+                self.stats["checkpoints"] += 1
+
+    def summary(self) -> dict:
+        return {
+            **self.stats,
+            "jobs": {
+                jid: {"state": e.job.state.value, "preemptions": e.job.preemptions,
+                      "progress_steps": round(e.progress, 2),
+                      "total_steps": e.total_steps, "ckpt_step": e.ckpt_step}
+                for jid, e in self.jobs.items()
+            },
+        }
+
+
+@dataclasses.dataclass
+class FleetReport:
+    """Everything a benchmark or CI assertion needs from one fleet run."""
+
+    requests: int
+    served: int
+    tokens: int
+    duration_s: float
+    latency_p50_s: float
+    latency_p95_s: float
+    latency_p99_s: float
+    tokens_per_s: float            # virtual-time throughput
+    serving_chip_s: float          # chip-seconds held by SERVICE leases
+    utilization: float             # cluster busy fraction (all job classes)
+    scale_ups: int
+    scale_downs: int
+    lease_releases: int
+    preemptions: int               # BATCH preemptions triggered by scale-up
+    tokens_by_tenant: dict[str, int]
+    metered_by_tenant: dict[str, int]
+    reconciled: bool               # ledger totals match served tokens per tenant
+    replicas: list[dict]
+    batch: dict
+    decisions: list[tuple[float, str, str]]
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["decisions"] = [[round(t, 3), a, r] for t, a, r in self.decisions]
+        return d
+
+
+class FleetManager:
+    """Owns the replica set and runs the virtual-time serving loop."""
+
+    def __init__(self, service: InvocationService, container, profile,
+                 *, config: FleetConfig | None = None,
+                 autoscaler: Autoscaler | None = None,
+                 router: Router | None = None,
+                 batch: BatchWorkload | None = None):
+        self.service = service
+        self.cluster = service.cluster
+        self.container = container
+        self.profile = profile
+        self.cfg = config or FleetConfig()
+        self.autoscaler = autoscaler or Autoscaler(
+            SLO(), self.cfg.min_replicas, self.cfg.max_replicas)
+        self.router = router or Router()
+        self.batch = batch
+        self.replicas: list[Replica] = []
+        self._rid = itertools.count()
+        self._req_tenant: dict[int, str] = {}
+        self._arrival: dict[int, float] = {}
+        self._completion: dict[int, float] = {}
+        self._req_tokens: dict[int, int] = {}
+        self.counters = {"scale_ups": 0, "scale_downs": 0, "lease_releases": 0,
+                         "preempts_triggered": 0, "scale_up_failures": 0}
+        self.timeline: list[tuple[float, str]] = []
+        self.now = 0.0
+        self._last_meter = 0.0
+
+    # ------------------------------------------------------------------
+    def _by_state(self, *states: ReplicaState) -> list[Replica]:
+        return [r for r in self.replicas if r.state in states]
+
+    def _tenant_of(self, request_id: int) -> str:
+        return self._req_tenant.get(request_id, self.cfg.tenant)
+
+    # ------------------------------------------------------------------
+    # elasticity actions
+    # ------------------------------------------------------------------
+    def scale_up(self, now: float, *, initial: bool = False) -> Replica | None:
+        """Acquire one more SERVICE lease and boot a replica behind it. When
+        the cluster is full, RUNNING BATCH jobs are preempted (youngest
+        first: least progress to requeue) until the lease's job starts; if
+        even preemption can't free enough chips, the lease is released and
+        the attempt recorded as a failure. ``initial`` marks the
+        min-footprint boots at fleet start, which are NOT counted as elastic
+        scale-ups (otherwise the 'did the autoscaler act' assertions in the
+        benchmark/CI would be vacuously true)."""
+        warm_before = self.service.stats["warm_acquires"]
+        ex = self.service.acquire_serving(
+            self.cfg.tenant, self.container, self.profile,
+            tenant_of=self._tenant_of)
+        job = ex.lease.job
+        if job.state != scheduler.JobState.RUNNING:
+            victims = sorted(
+                (self.cluster.jobs[i] for i in self.cluster.running
+                 if self.cluster.jobs[i].klass == scheduler.JobClass.BATCH),
+                key=lambda j: -(j.start_s or 0.0))  # youngest first
+            for victim in victims:
+                self.cluster.preempt(victim.job_id)
+                self.cluster.run(until=self.cluster.now)
+                self.counters["preempts_triggered"] += 1
+                self.timeline.append(
+                    (now, f"preempt batch job {victim.job_id} for scale-up"))
+                if job.state == scheduler.JobState.RUNNING:
+                    break
+        if job.state != scheduler.JobState.RUNNING:
+            ex.release()
+            self.counters["scale_up_failures"] += 1
+            self.timeline.append((now, "scale-up failed: no preemptible capacity"))
+            return None
+        boot = "warm" if self.service.stats["warm_acquires"] > warm_before else "cold"
+        boot_s = self.cfg.warm_boot_s if boot == "warm" else self.cfg.cold_boot_s
+        replica = Replica(next(self._rid), ex, boot_until_s=now + boot_s,
+                          started_s=now, boot=boot)
+        self.replicas.append(replica)
+        if not initial:
+            self.counters["scale_ups"] += 1
+        self.timeline.append(
+            (now, f"{'boot' if initial else 'scale-up'}: replica "
+                  f"{replica.replica_id} ({boot} boot, "
+                  f"lease {ex.lease.lease_id})"))
+        return replica
+
+    def drain(self, replica: Replica, now: float) -> None:
+        """Take a replica out of rotation; its lease is released once the
+        queue and in-flight slots empty."""
+        replica.state = ReplicaState.DRAINING
+        self.router.forget_replica(replica.replica_id)
+        self.timeline.append((now, f"drain: replica {replica.replica_id}"))
+
+    def _release_drained(self, now: float) -> None:
+        for r in self._by_state(ReplicaState.DRAINING):
+            if r.has_work():
+                continue
+            r.executor.meter_flush(max(now - r.last_flush_s, 0.0))
+            r.executor.release()  # asserts chips returned to the free pool
+            r.state = ReplicaState.RELEASED
+            r.released_s = now
+            self.counters["scale_downs"] += 1
+            self.counters["lease_releases"] += 1
+            self.timeline.append(
+                (now, f"release: replica {r.replica_id} lease "
+                      f"{r.executor.lease.lease_id} (scale-to-min)"))
+
+    # ------------------------------------------------------------------
+    # per-tick phases
+    # ------------------------------------------------------------------
+    def submit(self, req: FleetRequest, now: float) -> Replica:
+        self._req_tenant[req.request_id] = req.tenant
+        self._arrival[req.request_id] = req.arrival_s
+        replica = self.router.route(req, self.replicas)
+        replica.hot_buckets.add(replica.bucket_for(req.prompt_len))
+        replica.executor.submit(Request(
+            request_id=req.request_id, prompt=req.prompt,
+            max_new_tokens=req.max_new_tokens, sampling=req.sampling))
+        return replica
+
+    def _promote_boots(self, now: float) -> None:
+        for r in self._by_state(ReplicaState.BOOTING):
+            if now >= r.boot_until_s:
+                r.manifest = r.executor.warmup()
+                r.state = ReplicaState.SERVING
+                self.timeline.append(
+                    (now, f"serving: replica {r.replica_id} warm"))
+
+    def _step_replicas(self, now: float) -> None:
+        for r in self._by_state(ReplicaState.SERVING, ReplicaState.DRAINING):
+            if r.has_work():
+                r.executor.step()
+
+    def _harvest(self, now: float) -> None:
+        done_t = now + self.cfg.tick_s
+        for r in self.replicas:
+            results = r.engine.results
+            if len(results) == r.harvested:
+                continue
+            # results is insertion-ordered and retirement only appends, so
+            # everything past the cursor is new — no full rescan per tick
+            for rid, res in itertools.islice(results.items(), r.harvested, None):
+                self._completion[rid] = done_t
+                self._req_tokens[rid] = len(res.tokens)
+                self.autoscaler.record_completion(
+                    done_t, done_t - self._arrival[rid])
+            r.harvested = len(results)
+
+    def _autoscale(self, now: float) -> None:
+        serving = self._by_state(ReplicaState.SERVING)
+        booting = self._by_state(ReplicaState.BOOTING)
+        queued = sum(len(r.engine.queue)
+                     for r in self._by_state(ReplicaState.BOOTING,
+                                             ReplicaState.SERVING,
+                                             ReplicaState.DRAINING))
+        busy = sum(r.busy_slots() for r in serving)
+        # booting slots count toward queue capacity: a replica already on its
+        # way up shouldn't trigger another scale-up for the same backlog
+        total = sum(r.engine.slots for r in serving + booting)
+        action = self.autoscaler.decide(
+            now, serving=len(serving), booting=len(booting), queued=queued,
+            busy_slots=busy, total_slots=total)
+        if action == "up":
+            self.scale_up(now)
+        elif action == "down" and serving:
+            victim = min(serving,
+                         key=lambda r: (r.outstanding_tokens(), r.replica_id))
+            self.drain(victim, now)
+
+    def _meter_tick(self, now: float) -> None:
+        if now - self._last_meter < self.cfg.meter_every_s:
+            return
+        self._last_meter = now
+        for r in self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING,
+                                ReplicaState.DRAINING):
+            r.executor.meter_flush(max(now - r.last_flush_s, 0.0))
+            r.last_flush_s = now
+
+    # ------------------------------------------------------------------
+    def run_trace(self, requests: Sequence[FleetRequest], *,
+                  until_s: float | None = None) -> FleetReport:
+        """Drive the fleet through a trace in virtual time and return the
+        report. By default runs until every request is served AND the fleet
+        has settled back to ``min_replicas`` (so scale-to-min is part of
+        every run). An explicit ``until_s`` is a hold-until horizon: the
+        fleet keeps simulating (idle at min footprint) to exactly that time,
+        which is what makes chip-second comparisons across allocation
+        policies share one accounting window."""
+        reqs = sorted(requests, key=lambda r: (r.arrival_s, r.request_id))
+        explicit_horizon = until_s is not None
+        horizon = until_s if explicit_horizon else (
+            (reqs[-1].arrival_s if reqs else 0.0) + self.cfg.settle_s)
+        while len(self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING)) \
+                < self.autoscaler.min_replicas:
+            if self.scale_up(0.0, initial=True) is None:
+                raise RuntimeError(
+                    "fleet: cannot boot min_replicas — cluster too small even "
+                    "with BATCH preemption")
+        i, t = 0, 0.0
+        while True:
+            while i < len(reqs) and reqs[i].arrival_s <= t:
+                self.submit(reqs[i], t)
+                i += 1
+            self._promote_boots(t)
+            self._step_replicas(t)
+            self._harvest(t)
+            self._autoscale(t)
+            if self.batch is not None:
+                self.batch.tick(t, self.cfg.tick_s)
+            self._meter_tick(t)
+            self._release_drained(t)
+            self.cluster.advance_to(t)
+            self.now = t
+            done = i >= len(reqs) and len(self._completion) >= len(reqs)
+            settled = (not self._by_state(ReplicaState.BOOTING,
+                                          ReplicaState.DRAINING)
+                       and len(self._by_state(ReplicaState.SERVING))
+                       <= self.autoscaler.min_replicas)
+            if explicit_horizon:
+                if done and t >= horizon:
+                    break
+            elif done and (settled or t >= horizon):
+                break
+            if t >= horizon + 120.0:  # safety: never loop forever
+                logger.warning("fleet: horizon safety stop at t=%.1f "
+                               "(%d/%d served)", t, len(self._completion),
+                               len(reqs))
+                break
+            t += self.cfg.tick_s
+        for r in self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING,
+                                ReplicaState.DRAINING):
+            r.executor.meter_flush(max(t - r.last_flush_s, 0.0))
+            r.last_flush_s = t
+        return self.report()
+
+    def shutdown(self) -> None:
+        """Release every remaining lease (end of the fleet's life); the
+        warm deployment stays cached for the next fleet."""
+        for r in self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING):
+            self.drain(r, self.now)
+        guard = 0
+        while self._by_state(ReplicaState.DRAINING) and guard < 100_000:
+            self._step_replicas(self.now)
+            self._harvest(self.now)
+            self._release_drained(self.now)
+            guard += 1
+
+    # ------------------------------------------------------------------
+    def report(self) -> FleetReport:
+        lats = [self._completion[rid] - self._arrival[rid]
+                for rid in self._completion]
+        tokens_by_tenant: dict[str, int] = {}
+        for rid, n in self._req_tokens.items():
+            tenant = self._tenant_of(rid)
+            tokens_by_tenant[tenant] = tokens_by_tenant.get(tenant, 0) + n
+        metered = {tenant: self.service.meter.served_tokens(tenant)
+                   for tenant in tokens_by_tenant}
+        tokens = sum(self._req_tokens.values())
+        reconciled = (metered == tokens_by_tenant
+                      and self.service.meter.served_tokens() == tokens)
+        self.cluster.check_invariants()
+        self.service.meter.check_invariants()
+        pct = (lambda q: float(np.percentile(lats, q)) if lats else 0.0)
+        serving_chip_s = sum(
+            ((r.released_s if r.released_s is not None else self.now)
+             - r.started_s) * r.chips
+            for r in self.replicas)
+        return FleetReport(
+            requests=len(self._arrival),
+            served=len(self._completion),
+            tokens=tokens,
+            duration_s=self.now,
+            latency_p50_s=pct(50),
+            latency_p95_s=pct(95),
+            latency_p99_s=pct(99),
+            tokens_per_s=tokens / max(self.now, 1e-9),
+            serving_chip_s=serving_chip_s,
+            utilization=self.cluster.utilization(),
+            scale_ups=self.counters["scale_ups"],
+            scale_downs=self.counters["scale_downs"],
+            lease_releases=self.counters["lease_releases"],
+            preemptions=self.counters["preempts_triggered"],
+            tokens_by_tenant=tokens_by_tenant,
+            metered_by_tenant=metered,
+            reconciled=reconciled,
+            replicas=[{
+                "id": r.replica_id,
+                "boot": r.boot,
+                "start_s": round(r.started_s, 3),
+                "end_s": (round(r.released_s, 3)
+                          if r.released_s is not None else None),
+                "state": r.state.value,
+                "tiers": ({api: c["provider"]
+                           for api, c in r.manifest.get("apis", {}).items()}
+                          if r.manifest else None),
+            } for r in self.replicas],
+            batch=self.batch.summary() if self.batch else {},
+            decisions=list(self.autoscaler.decisions),
+        )
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, cfg, params, *, chips: int,
+              fleet: FleetConfig | None = None, slo: SLO | None = None,
+              profile: recompile.SystemProfile | None = None,
+              batch_jobs: Sequence[tuple[int, int]] = (),
+              batch_step_s: float = 1.0, batch_ckpt_every: int = 5,
+              store_factory=None) -> "FleetManager":
+        """Assemble a complete fleet on a fresh cluster: scheduler, invocation
+        service, serving container, optional BATCH coexistence jobs
+        (``batch_jobs`` = [(chips, total_steps), ...])."""
+        from repro.serving.service import serving_container
+
+        fleet = fleet or FleetConfig()
+        profile = profile or recompile.PORTABLE_CPU
+        service = InvocationService(scheduler.Cluster(chips=chips))
+        cont = serving_container(
+            cfg, params, slots=fleet.slots, max_len=fleet.max_len,
+            prompt_buckets=fleet.prompt_buckets, sync_every=fleet.sync_every)
+        batch = None
+        if batch_jobs:
+            batch = BatchWorkload(service.cluster, step_s=batch_step_s,
+                                  ckpt_every=batch_ckpt_every,
+                                  store_factory=store_factory)
+            for bchips, bsteps in batch_jobs:
+                batch.submit(chips=bchips, total_steps=bsteps)
+            service.cluster.run(until=service.cluster.now)
+        return cls(service, cont, profile, config=fleet,
+                   autoscaler=Autoscaler(slo or SLO(), fleet.min_replicas,
+                                         fleet.max_replicas),
+                   batch=batch)

@@ -1,0 +1,104 @@
+"""Admission router: load-aware placement with session and prompt-bucket
+affinity.
+
+The fleet's replicas are not interchangeable at the margin: each engine keeps
+per-slot cache state sized by its prompt buckets and reuses compiled
+programs per (batch, bucket) shape, so a replica that has recently admitted a
+bucket serves that bucket with zero compilation or cache-geometry churn. The
+router therefore places each request by:
+
+  1. **session affinity** — a returning session goes back to its previous
+     replica (conversation caches and per-tenant working set stay hot),
+     unless that replica is overloaded relative to the fleet floor;
+  2. **bucket affinity** — otherwise prefer, among non-overloaded replicas,
+     one whose hot-bucket set already contains the request's prompt bucket;
+  3. **least load** — otherwise the replica with the fewest outstanding
+     decode tokens (queued + remaining in-flight), ties broken by lowest
+     replica id so placement is deterministic.
+
+The router only needs a tiny protocol from a replica: ``replica_id``,
+``accepting``, ``outstanding_tokens()``, ``bucket_for(prompt_len)`` and
+``hot_buckets`` — tests drive it with plain fakes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Sequence
+
+import numpy as np
+
+from repro.serving.sampling import SamplingConfig
+
+__all__ = ["FleetRequest", "Router"]
+
+
+@dataclasses.dataclass
+class FleetRequest:
+    """A serving request addressed to the fleet (not yet to a replica)."""
+
+    request_id: int
+    tenant: str
+    session: str
+    prompt: np.ndarray
+    max_new_tokens: int
+    arrival_s: float
+    sampling: SamplingConfig = dataclasses.field(default_factory=SamplingConfig)
+
+    @property
+    def prompt_len(self) -> int:
+        return int(np.asarray(self.prompt).shape[-1])
+
+
+class Router:
+    """Places :class:`FleetRequest` objects onto fleet replicas."""
+
+    def __init__(self, *, session_affinity: bool = True,
+                 bucket_affinity: bool = True, overload_factor: float = 2.0,
+                 slack_tokens: int = 8):
+        self.session_affinity = session_affinity
+        self.bucket_affinity = bucket_affinity
+        # a replica is "overloaded" for affinity purposes when its load
+        # exceeds overload_factor * fleet_min + slack_tokens: affinity should
+        # bend placement, never create a hotspot
+        self.overload_factor = overload_factor
+        self.slack_tokens = slack_tokens
+        self._sessions: dict[str, int] = {}  # session -> replica_id
+        self.stats = {"routed": 0, "session_hits": 0, "bucket_hits": 0,
+                      "least_loaded": 0}
+
+    def route(self, req: FleetRequest, replicas: Sequence[Any]):
+        """Pick the replica for ``req``; records the session pin. Raises
+        RuntimeError when no replica is accepting (the fleet keeps
+        ``min_replicas`` >= 1, so this means misuse)."""
+        accepting = [r for r in replicas if r.accepting]
+        if not accepting:
+            raise RuntimeError("router: no accepting replicas in the fleet")
+        loads = {r.replica_id: r.outstanding_tokens() for r in accepting}
+        limit = self.overload_factor * min(loads.values()) + self.slack_tokens
+        self.stats["routed"] += 1
+
+        chosen = None
+        if self.session_affinity:
+            rid = self._sessions.get(req.session)
+            if rid is not None and rid in loads and loads[rid] <= limit:
+                chosen = next(r for r in accepting if r.replica_id == rid)
+                self.stats["session_hits"] += 1
+        if chosen is None and self.bucket_affinity:
+            hot = [r for r in accepting
+                   if r.bucket_for(req.prompt_len) in r.hot_buckets
+                   and loads[r.replica_id] <= limit]
+            if hot:
+                chosen = min(hot, key=lambda r: (loads[r.replica_id], r.replica_id))
+                self.stats["bucket_hits"] += 1
+        if chosen is None:
+            chosen = min(accepting,
+                         key=lambda r: (loads[r.replica_id], r.replica_id))
+            self.stats["least_loaded"] += 1
+        self._sessions[req.session] = chosen.replica_id
+        return chosen
+
+    def forget_replica(self, replica_id: int) -> None:
+        """Drop session pins to a draining/released replica so returning
+        sessions re-route instead of chasing a dead replica."""
+        self._sessions = {s: r for s, r in self._sessions.items()
+                          if r != replica_id}

@@ -128,6 +128,21 @@ class FTManager:
         self.ckpt_every = ckpt_every
         self.min_mesh = min_mesh
 
+    # ---- scheduler-preemption surface (used by the serving fleet) ----
+    def checkpoint(self, state: Any, step: int) -> int:
+        """Commit a checkpoint outside the periodic cadence. The scheduler's
+        graceful-preemption window (``Cluster.preempt`` fires listeners before
+        taking the chips) calls this so a BATCH job loses no progress when an
+        interactive scale-up evicts it. Returns the committed step."""
+        self.save(state, step)
+        return step
+
+    def resume(self, mesh_size: int):
+        """Rebuild (step_fn, state, data_step) from the last committed
+        checkpoint — the restart path shared by node failures and
+        preemption-requeue."""
+        return self.make_step(mesh_size)
+
     def run(self, total_steps: int, *, mesh_size: int) -> RunReport:
         events: list[FailureEvent] = []
         restarts = mitigations = 0

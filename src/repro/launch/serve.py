@@ -6,9 +6,16 @@ deployment boots the ``ServingEngine`` (fused data plane: one compiled
 program per decode step, one host sync per step), traffic flows through the
 lease, and every served token lands in the tenant's accounting ledger.
 
+``--fleet`` switches to the elastic multi-replica control plane
+(``repro.fleet``): N leased replicas behind the affinity router, SLO-driven
+autoscaling with BATCH preemption, and per-tenant metering aggregated across
+replicas — the same objects the fleet benchmark simulates, driven live.
+
 Usage:
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --requests 16 --max-new 32
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --fleet [--trace bursty|diurnal|steady] [--max-replicas 4]
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ from repro.serving.engine import Request
 from repro.serving.sampling import SamplingConfig
 from repro.serving.service import serving_container
 
-__all__ = ["run", "main"]
+__all__ = ["run", "run_fleet", "main"]
 
 
 def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
@@ -44,32 +51,40 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
     cont = serving_container(cfg, params, slots=slots, max_len=max_len,
                              prompt_buckets=(32, 64, 128), fused=fused,
                              sync_every=sync_every)
-    service = InvocationService(scheduler.Cluster(chips=profile.chips))
-    executor = service.acquire_serving(tenant, cont, profile)
-    t0 = time.perf_counter()
-    executor.warmup()
-    print(f"warmup (all data-plane programs compiled): "
-          f"{time.perf_counter() - t0:.1f}s")
+    cluster = scheduler.Cluster(chips=profile.chips)
+    service = InvocationService(cluster)
+    # the executor is a context manager: the SERVICE lease is released on
+    # every exit path (shutdown OR error), so the chips always return to the
+    # cluster free pool — a leaked lease would pin them forever
+    with service.acquire_serving(tenant, cont, profile) as executor:
+        t0 = time.perf_counter()
+        executor.warmup()
+        print(f"warmup (all data-plane programs compiled): "
+              f"{time.perf_counter() - t0:.1f}s")
 
-    for i in range(requests):
-        plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
-        if cfg.frontend == "audio":
-            prompt = rng.integers(0, cfg.vocab_size,
-                                  (cfg.num_codebooks, plen), dtype=np.int32)
-        else:
-            prompt = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
-        executor.submit(Request(request_id=i, prompt=prompt,
-                                max_new_tokens=max_new,
-                                sampling=SamplingConfig(temperature=temperature)))
+        for i in range(requests):
+            plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
+            if cfg.frontend == "audio":
+                prompt = rng.integers(0, cfg.vocab_size,
+                                      (cfg.num_codebooks, plen), dtype=np.int32)
+            else:
+                prompt = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
+            executor.submit(Request(request_id=i, prompt=prompt,
+                                    max_new_tokens=max_new,
+                                    sampling=SamplingConfig(temperature=temperature)))
 
-    t0 = time.perf_counter()
-    results = executor.run()
-    wall = time.perf_counter() - t0
-    stats = dict(executor.engine.stats)
-    toks = sum(len(r.tokens) for r in results.values())
-    ledger_tokens = service.meter.served_tokens(tenant)
-    billed = service.meter.total_usd(tenant)
-    executor.release()
+        t0 = time.perf_counter()
+        results = executor.run()
+        wall = time.perf_counter() - t0
+        stats = dict(executor.engine.stats)
+        toks = sum(len(r.tokens) for r in results.values())
+        ledger_tokens = service.meter.served_tokens(tenant)
+        billed = service.meter.total_usd(tenant)
+
+    assert not executor.lease.active
+    assert cluster.free_chips == cluster.total_chips, (
+        f"lease released but {cluster.total_chips - cluster.free_chips} "
+        f"chip(s) missing from the free pool")
 
     print(f"lease {executor.lease.lease_id} ({tenant}): served "
           f"{len(results)}/{requests} requests, {toks} tokens in "
@@ -83,6 +98,56 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
     return {"results": results, "stats": stats, "wall_s": wall,
             "tokens": toks, "ledger_tokens": ledger_tokens,
             "billed_usd": billed, "service": service}
+
+
+def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
+              seed: int = 0, chips: int = 4, min_replicas: int = 1,
+              max_replicas: int = 4, slots: int = 2, max_len: int = 64,
+              duration_s: float = 24.0, batch_jobs: int = 2,
+              batch_steps: int = 30) -> dict:
+    """Drive the elastic fleet live: same control plane the benchmark
+    simulates (repro.fleet), printed as an operator would see it."""
+    from repro import fleet as fl
+
+    arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
+    cfg = configs.get_config(arch)
+    params = transformer.init_model(jax.random.key(seed), cfg)
+    makers = {"bursty": fl.bursty_trace, "diurnal": fl.diurnal_trace,
+              "steady": fl.steady_trace}
+    trace = makers[trace_kind](seed=seed, duration_s=duration_s,
+                               prompt_median=8, prompt_lo=4, prompt_hi=16,
+                               max_new_lo=4, max_new_hi=8)
+    reqs = fl.materialize(trace, vocab_size=cfg.vocab_size, seed=seed + 1,
+                          num_codebooks=(cfg.num_codebooks
+                                         if cfg.frontend == "audio" else 0))
+    fleet_cfg = fl.FleetConfig(min_replicas=min_replicas,
+                               max_replicas=max_replicas, slots=slots,
+                               max_len=max_len, prompt_buckets=(8, 16),
+                               tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5)
+    fm = fl.FleetManager.build(
+        cfg, params, chips=chips, fleet=fleet_cfg,
+        batch_jobs=[(1, batch_steps)] * batch_jobs)
+    t0 = time.perf_counter()
+    report = fm.run_trace(reqs)
+    wall = time.perf_counter() - t0
+
+    print(f"fleet[{arch} x{trace_kind}]: {report.served}/{report.requests} "
+          f"requests, {report.tokens} tokens over {report.duration_s:.1f} "
+          f"virtual s ({wall:.1f}s real) | p50 {report.latency_p50_s:.2f}s "
+          f"p99 {report.latency_p99_s:.2f}s | {report.serving_chip_s:.1f} "
+          f"serving chip-s, utilization {report.utilization:.0%}")
+    print(f"elasticity: {report.scale_ups} scale-ups, {report.scale_downs} "
+          f"scale-downs, {report.lease_releases} lease releases, "
+          f"{report.preemptions} batch preemptions "
+          f"({report.batch.get('resumes', 0)} checkpoint-resumes)")
+    for t, what in fm.timeline:
+        print(f"  [{t:7.2f}s] {what}")
+    for tenant in sorted(report.tokens_by_tenant):
+        print(f"ledger[{tenant}]: {report.metered_by_tenant[tenant]} tokens "
+              f"metered (${fm.service.meter.total_usd(tenant):.6f})")
+    assert report.served == report.requests
+    assert report.reconciled, "per-tenant ledger does not reconcile"
+    return {"report": report, "manager": fm}
 
 
 def main() -> None:
@@ -99,7 +164,24 @@ def main() -> None:
     ap.add_argument("--sync-every", type=int, default=1)
     ap.add_argument("--unfused", action="store_true",
                     help="legacy host-loop data plane (before/after reference)")
+    ap.add_argument("--fleet", action="store_true",
+                    help="elastic multi-replica fleet mode")
+    ap.add_argument("--trace", default="bursty",
+                    choices=["bursty", "diurnal", "steady"])
+    ap.add_argument("--duration", type=float, default=24.0)
+    ap.add_argument("--chips", type=int, default=4)
+    ap.add_argument("--min-replicas", type=int, default=1)
+    ap.add_argument("--max-replicas", type=int, default=4)
+    ap.add_argument("--batch-jobs", type=int, default=2)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.fleet:
+        run_fleet(args.arch, trace_kind=args.trace, smoke=args.smoke,
+                  seed=args.seed, chips=args.chips,
+                  min_replicas=args.min_replicas,
+                  max_replicas=args.max_replicas,
+                  duration_s=args.duration, batch_jobs=args.batch_jobs)
+        return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
               prompt_len=args.prompt_len, smoke=args.smoke,

@@ -82,6 +82,126 @@ def _pow2(n: int) -> int:
     return 1 << (n - 1).bit_length()
 
 
+class _Programs:
+    """The compiled data-plane program bundle for one (arch config, slot
+    geometry, kernel-tier set).
+
+    Every program the engine executes is pure in (params, state, ctrl), so
+    nothing engine-instance-specific is baked into a trace — which means the
+    bundle can be SHARED across engine instances. That is what makes a fleet
+    replica boot *warm*: the first engine for a geometry pays trace+compile,
+    every later replica (and every re-boot after a scale-to-zero release)
+    reuses the same jitted programs, the serving analogue of the
+    warm-deployment cache in ``InvocationService``.
+
+    The cache key includes the hook binding's chosen providers: programs
+    traced under one kernel tier must never serve an engine bound to another.
+    """
+
+    def __init__(self, cfg, slots: int, max_len: int):
+        dt = jnp.dtype(cfg.activ_dtype)
+        # per-leaf slot/batch axis, found structurally: the axis whose extent
+        # tracks the state batch size (probe batch=1 vs batch=2 shapes)
+        p1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dt))
+        p2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dt))
+
+        def _axis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
+
+        state_axes = jax.tree.map(_axis, p1, p2)
+
+        @jax.jit
+        def fused_step(params, key, states, ctrl):
+            """decode + sample + length update + done flags, one program."""
+            active = ctrl["active"]
+            lengths = ctrl["lengths"] + active.astype(jnp.int32)
+            key, sub = jax.random.split(key)
+            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
+            toks, new_states, _ = transformer.decode_and_sample(
+                params, cfg, ctrl["last"], states, lengths, sub,
+                lambda k, lg: sample_batched(k, lg, sp))
+            gen = ctrl["gen"] + active.astype(jnp.int32)
+            first = toks if toks.ndim == 1 else toks[:, 0]
+            done = active & (
+                (gen >= ctrl["max_new"])
+                | ((ctrl["eos"] >= 0) & (first == ctrl["eos"]))
+                | (lengths >= max_len))
+            amask = active if toks.ndim == 1 else active[:, None]
+            toks = jnp.where(amask, toks, 0)
+            packed = jnp.concatenate([
+                toks.reshape(slots, -1),
+                active.astype(jnp.int32)[:, None],
+                done.astype(jnp.int32)[:, None],
+            ], axis=1)
+            new_ctrl = dict(
+                ctrl,
+                lengths=jnp.where(done, 0, lengths),
+                active=active & ~done,
+                gen=gen,
+                last=toks,
+            )
+            return key, new_states, new_ctrl, packed
+
+        self.fused_step = fused_step
+
+        @functools.partial(jax.jit, static_argnums=(2,))
+        def prefill_batch(params, tokens, max_len_):
+            # tokens: (N, Sb) padded bucket batch ((N, K, Sb) audio)
+            return transformer.prefill(params, cfg, tokens, max_len_)
+
+        self.prefill_batch = prefill_batch
+
+        self.sample_first = jax.jit(sample_batched)
+
+        @jax.jit
+        def assign(states, batch_states, ctrl, src, slot, length, first_tok,
+                   temp, topk, max_new, eos):
+            """Scatter prefilled request `src` of a batched prefill into
+            engine slot `slot`, and arm its control-block entries."""
+            def put(ax, dst, s):
+                row = jax.lax.dynamic_index_in_dim(s, src, ax, keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(
+                    dst, row.astype(dst.dtype), slot, ax)
+            new_states = jax.tree.map(put, state_axes, states, batch_states)
+            new_ctrl = dict(
+                ctrl,
+                lengths=ctrl["lengths"].at[slot].set(length),
+                active=ctrl["active"].at[slot].set(True),
+                gen=ctrl["gen"].at[slot].set(1),
+                temp=ctrl["temp"].at[slot].set(temp),
+                topk=ctrl["topk"].at[slot].set(topk),
+                max_new=ctrl["max_new"].at[slot].set(max_new),
+                eos=ctrl["eos"].at[slot].set(eos),
+                last=ctrl["last"].at[slot].set(first_tok),
+            )
+            return new_states, new_ctrl
+
+        self.assign = assign
+
+        @jax.jit
+        def decode(params, tokens, states, lengths):
+            return transformer.decode_step(params, cfg, tokens, states, lengths)
+
+        self.decode = decode  # legacy (unfused) step
+
+
+_PROGRAMS: dict[tuple, _Programs] = {}
+
+
+def _programs_for(cfg, slots: int, max_len: int,
+                  binding: hooks.Binding | None) -> _Programs:
+    tiers = (None if binding is None
+             else tuple(sorted(binding.providers().items())))
+    key = (cfg, slots, max_len, tiers)
+    prog = _PROGRAMS.get(key)
+    if prog is None:
+        prog = _PROGRAMS[key] = _Programs(cfg, slots, max_len)
+    return prog
+
+
 class ServingEngine:
     """Continuous-batching engine for one deployed model.
 
@@ -156,93 +276,14 @@ class ServingEngine:
             "unserved": 0,
         }
 
-        # per-leaf slot/batch axis, found structurally: the axis whose extent
-        # tracks the state batch size (probe batch=1 vs batch=2 shapes)
-        p1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dt))
-        p2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dt))
-
-        def _axis(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
-
-        state_axes = jax.tree.map(_axis, p1, p2)
-
-        # ---- compiled programs ----
-        @jax.jit
-        def _fused_step(params, key, states, ctrl):
-            """decode + sample + length update + done flags, one program."""
-            active = ctrl["active"]
-            lengths = ctrl["lengths"] + active.astype(jnp.int32)
-            key, sub = jax.random.split(key)
-            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
-            toks, new_states, _ = transformer.decode_and_sample(
-                params, cfg, ctrl["last"], states, lengths, sub,
-                lambda k, lg: sample_batched(k, lg, sp))
-            gen = ctrl["gen"] + active.astype(jnp.int32)
-            first = toks if toks.ndim == 1 else toks[:, 0]
-            done = active & (
-                (gen >= ctrl["max_new"])
-                | ((ctrl["eos"] >= 0) & (first == ctrl["eos"]))
-                | (lengths >= max_len))
-            amask = active if toks.ndim == 1 else active[:, None]
-            toks = jnp.where(amask, toks, 0)
-            packed = jnp.concatenate([
-                toks.reshape(slots, -1),
-                active.astype(jnp.int32)[:, None],
-                done.astype(jnp.int32)[:, None],
-            ], axis=1)
-            new_ctrl = dict(
-                ctrl,
-                lengths=jnp.where(done, 0, lengths),
-                active=active & ~done,
-                gen=gen,
-                last=toks,
-            )
-            return key, new_states, new_ctrl, packed
-
-        self._fused_step = _fused_step
-
-        @functools.partial(jax.jit, static_argnums=(2,))
-        def _prefill_batch(params, tokens, max_len):
-            # tokens: (N, Sb) padded bucket batch ((N, K, Sb) audio)
-            return transformer.prefill(params, cfg, tokens, max_len)
-
-        self._prefill_batch = _prefill_batch
-
-        self._sample_first = jax.jit(sample_batched)
-
-        @jax.jit
-        def _assign(states, batch_states, ctrl, src, slot, length, first_tok,
-                    temp, topk, max_new, eos):
-            """Scatter prefilled request `src` of a batched prefill into
-            engine slot `slot`, and arm its control-block entries."""
-            def put(ax, dst, s):
-                row = jax.lax.dynamic_index_in_dim(s, src, ax, keepdims=False)
-                return jax.lax.dynamic_update_index_in_dim(
-                    dst, row.astype(dst.dtype), slot, ax)
-            new_states = jax.tree.map(put, state_axes, states, batch_states)
-            new_ctrl = dict(
-                ctrl,
-                lengths=ctrl["lengths"].at[slot].set(length),
-                active=ctrl["active"].at[slot].set(True),
-                gen=ctrl["gen"].at[slot].set(1),
-                temp=ctrl["temp"].at[slot].set(temp),
-                topk=ctrl["topk"].at[slot].set(topk),
-                max_new=ctrl["max_new"].at[slot].set(max_new),
-                eos=ctrl["eos"].at[slot].set(eos),
-                last=ctrl["last"].at[slot].set(first_tok),
-            )
-            return new_states, new_ctrl
-
-        self._assign = _assign
-
-        @jax.jit
-        def _decode(params, tokens, states, lengths):
-            return transformer.decode_step(params, cfg, tokens, states, lengths)
-
-        self._decode = _decode  # legacy (unfused) step
+        # ---- compiled programs: shared per (cfg, geometry, tier-set) so
+        # replica boots after the first are warm (see _Programs) ----
+        progs = _programs_for(cfg, slots, max_len, binding)
+        self._fused_step = progs.fused_step
+        self._prefill_batch = progs.prefill_batch
+        self._sample_first = progs.sample_first
+        self._assign = progs.assign
+        self._decode = progs.decode  # legacy (unfused) step
 
     # ------------------------------------------------------------------
     def _bound(self):

@@ -1,0 +1,383 @@
+"""Elastic serving fleet: router affinity, SLO autoscaler policy, trace
+determinism, batch checkpoint-preempt-resume, per-tenant metering across
+replicas, shared engine program cache, and the end-to-end control plane."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import recompile, scheduler
+from repro.core.invocation import InvocationService
+from repro.fleet import (SLO, Autoscaler, BatchWorkload, FleetConfig,
+                         FleetManager, FleetRequest, ReplicaState, Router,
+                         bursty_trace, diurnal_trace, materialize)
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.service import serving_container
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+# ----------------------------------------------------------------------
+# router
+# ----------------------------------------------------------------------
+
+class FakeReplica:
+    def __init__(self, rid, load=0, accepting=True, hot=()):
+        self.replica_id = rid
+        self.load = load
+        self.accepting = accepting
+        self.hot_buckets = set(hot)
+
+    def outstanding_tokens(self):
+        return self.load
+
+    def bucket_for(self, plen):
+        return 16 if plen <= 16 else 64
+
+
+def _req(session="s0", plen=8, rid=0):
+    return FleetRequest(request_id=rid, tenant="t", session=session,
+                        prompt=np.zeros(plen, np.int32), max_new_tokens=4,
+                        arrival_s=0.0)
+
+
+def test_router_least_loaded_deterministic_ties():
+    r = Router(session_affinity=False, bucket_affinity=False)
+    reps = [FakeReplica(0, load=10), FakeReplica(1, load=2), FakeReplica(2, load=2)]
+    assert r.route(_req(), reps).replica_id == 1  # least load, lowest id wins tie
+
+
+def test_router_skips_non_accepting():
+    r = Router()
+    reps = [FakeReplica(0, load=0, accepting=False), FakeReplica(1, load=50)]
+    assert r.route(_req(), reps).replica_id == 1
+    with pytest.raises(RuntimeError):
+        r.route(_req(), [FakeReplica(0, accepting=False)])
+
+
+def test_router_session_affinity_sticks_until_overloaded():
+    r = Router(slack_tokens=4, overload_factor=2.0)
+    reps = [FakeReplica(0, load=0), FakeReplica(1, load=0)]
+    first = r.route(_req(session="alice"), reps)
+    # returning session sticks even when the other replica is now emptier
+    # (load 3 is within overload_factor * floor + slack = 4)
+    reps[first.replica_id].load = 3
+    again = r.route(_req(session="alice", rid=1), reps)
+    assert again.replica_id == first.replica_id
+    assert r.stats["session_hits"] == 1
+    # ... but not when the pinned replica is overloaded vs the fleet floor
+    reps[first.replica_id].load = 100
+    spilled = r.route(_req(session="alice", rid=2), reps)
+    assert spilled.replica_id != first.replica_id
+
+
+def test_router_bucket_affinity_prefers_hot_replica():
+    r = Router(session_affinity=False)
+    cold = FakeReplica(0, load=0)
+    hot = FakeReplica(1, load=2, hot=(16,))
+    assert r.route(_req(plen=8), [cold, hot]).replica_id == 1
+    assert r.stats["bucket_hits"] == 1
+    # a long prompt (bucket 64) has no hot replica -> least loaded
+    assert r.route(_req(plen=40, rid=1), [cold, hot]).replica_id == 0
+
+
+def test_router_forget_replica_unpins_sessions():
+    r = Router()
+    reps = [FakeReplica(0), FakeReplica(1, load=1)]
+    assert r.route(_req(session="bob"), reps).replica_id == 0
+    r.forget_replica(0)
+    reps[0].accepting = False
+    assert r.route(_req(session="bob", rid=1), reps).replica_id == 1
+
+
+# ----------------------------------------------------------------------
+# autoscaler
+# ----------------------------------------------------------------------
+
+def test_autoscaler_scales_up_on_queue_pressure_with_cooldown():
+    a = Autoscaler(SLO(queue_high_per_slot=1.0, up_cooldown_s=1.0), 1, 4)
+    up = a.decide(0.0, serving=1, booting=0, queued=5, busy_slots=2, total_slots=2)
+    assert up == "up"
+    # cooldown suppresses an immediate second scale-up
+    assert a.decide(0.5, serving=1, booting=1, queued=9, busy_slots=2,
+                    total_slots=2) is None
+    assert a.decide(1.5, serving=1, booting=1, queued=9, busy_slots=2,
+                    total_slots=4) == "up"
+
+
+def test_autoscaler_respects_max_and_min():
+    a = Autoscaler(SLO(idle_drain_s=0.0, down_cooldown_s=0.0), 1, 2)
+    assert a.decide(0.0, serving=2, booting=0, queued=100, busy_slots=4,
+                    total_slots=4) is None  # at max
+    # at min: sustained idle still never drains below min_replicas
+    assert a.decide(1.0, serving=1, booting=0, queued=0, busy_slots=0,
+                    total_slots=2) is None
+
+
+def test_autoscaler_scales_up_on_p95_violation():
+    a = Autoscaler(SLO(p95_target_s=1.0, queue_high_per_slot=100.0,
+                       min_window_samples=4), 1, 4)
+    for i in range(4):
+        a.record_completion(1.0, 3.0)
+    assert a.decide(1.0, serving=1, booting=0, queued=0, busy_slots=2,
+                    total_slots=2) == "up"
+    # completions age out of the window -> no p95 signal -> no scale-up
+    b = Autoscaler(SLO(p95_target_s=1.0, queue_high_per_slot=100.0,
+                       window_s=2.0), 1, 4)
+    for i in range(4):
+        b.record_completion(0.0, 3.0)
+    assert b.decide(10.0, serving=1, booting=0, queued=0, busy_slots=2,
+                    total_slots=2) is None
+
+
+def test_autoscaler_drains_only_after_sustained_idle():
+    slo = SLO(idle_drain_s=2.0, down_cooldown_s=0.0, low_util=0.25)
+    a = Autoscaler(slo, 1, 4)
+    assert a.decide(0.0, serving=3, booting=0, queued=0, busy_slots=0,
+                    total_slots=6) is None  # idle starts counting
+    assert a.decide(1.0, serving=3, booting=0, queued=0, busy_slots=0,
+                    total_slots=6) is None  # not sustained yet
+    # load returning resets the idle clock
+    a.decide(1.5, serving=3, booting=0, queued=4, busy_slots=6, total_slots=6)
+    assert a.decide(2.5, serving=3, booting=0, queued=0, busy_slots=0,
+                    total_slots=6) is None
+    assert a.decide(5.0, serving=3, booting=0, queued=0, busy_slots=0,
+                    total_slots=6) == "down"
+
+
+# ----------------------------------------------------------------------
+# traffic
+# ----------------------------------------------------------------------
+
+def test_traces_are_deterministic_and_seed_sensitive():
+    kw = dict(duration_s=30.0, base_rate=0.5, burst_rate=5.0,
+              bursts=((5.0, 10.0),))
+    t1, t2 = bursty_trace(seed=7, **kw), bursty_trace(seed=7, **kw)
+    assert t1 == t2
+    assert bursty_trace(seed=8, **kw) != t1
+    d1, d2 = diurnal_trace(seed=3), diurnal_trace(seed=3)
+    assert d1 == d2
+
+
+def test_bursty_trace_is_denser_inside_the_burst():
+    tr = bursty_trace(seed=0, duration_s=30.0, base_rate=0.2, burst_rate=8.0,
+                      bursts=((10.0, 15.0),))
+    inside = sum(1 for r in tr if 10.0 <= r.arrival_s < 15.0)
+    outside = len(tr) - inside
+    assert inside > outside  # 5s of burst dominates 25s of trickle
+
+
+def test_trace_fields_respect_bounds_and_mix():
+    tr = bursty_trace(seed=1, duration_s=40.0, base_rate=2.0, burst_rate=2.0,
+                      bursts=(), prompt_lo=4, prompt_hi=16, max_new_lo=3,
+                      max_new_hi=9, tenants={"a": 0.8, "b": 0.2})
+    assert tr and all(4 <= r.prompt_len <= 16 for r in tr)
+    assert all(3 <= r.max_new_tokens <= 9 for r in tr)
+    assert {r.tenant for r in tr} <= {"a", "b"}
+    # sessions recur (affinity raw material) and stay within their tenant
+    assert any(r1.session == r2.session
+               for i, r1 in enumerate(tr) for r2 in tr[i + 1:])
+    assert all(r.session.startswith(r.tenant) for r in tr)
+
+
+def test_materialize_builds_submittable_requests():
+    cfg, _ = _model()
+    tr = bursty_trace(seed=2, duration_s=10.0, base_rate=1.0, burst_rate=1.0,
+                      bursts=(), prompt_lo=4, prompt_hi=16)
+    reqs = materialize(tr, vocab_size=cfg.vocab_size, seed=3)
+    assert [r.request_id for r in reqs] == list(range(len(reqs)))
+    assert all(r.prompt.dtype == np.int32 for r in reqs)
+    assert all(r.prompt.shape == (t.prompt_len,) for r, t in zip(reqs, tr))
+    # deterministic payloads too
+    again = materialize(tr, vocab_size=cfg.vocab_size, seed=3)
+    assert all(np.array_equal(a.prompt, b.prompt) for a, b in zip(reqs, again))
+
+
+# ----------------------------------------------------------------------
+# engine program cache (warm replica boots)
+# ----------------------------------------------------------------------
+
+def test_engines_share_compiled_program_bundle_per_geometry():
+    cfg, params = _model()
+    e1 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
+    e2 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
+    assert e1._fused_step is e2._fused_step  # same jit program object
+    assert e1._prefill_batch is e2._prefill_batch
+    e3 = ServingEngine(cfg, params, slots=4, max_len=64, prompt_buckets=(8, 16))
+    assert e3._fused_step is not e1._fused_step  # geometry changes the key
+
+
+def test_shared_programs_keep_engine_state_isolated():
+    cfg, params = _model()
+    e1 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
+    e2 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
+    rng = np.random.default_rng(0)
+    for i in range(2):
+        e1.submit(Request(request_id=i,
+                          prompt=rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32),
+                          max_new_tokens=3))
+    r1 = e1.run_to_completion()
+    assert sorted(r1) == [0, 1]
+    assert e2.results == {} and not any(e2.active)  # untouched by e1's traffic
+
+
+# ----------------------------------------------------------------------
+# batch workload: checkpoint through FTManager on preempt, resume on restart
+# ----------------------------------------------------------------------
+
+def _drive(cluster, bw, until, dt=0.5):
+    t = cluster.now
+    while t < until:
+        t += dt
+        bw.tick(t, dt)
+        cluster.advance_to(t)
+
+
+def test_batch_preempt_checkpoints_and_resumes():
+    cluster = scheduler.Cluster(chips=1)
+    bw = BatchWorkload(cluster, step_s=1.0, ckpt_every=2)
+    job = bw.submit(chips=1, total_steps=10)
+    cluster.run(until=0.0)
+    _drive(cluster, bw, 5.0)
+    entry = bw.jobs[job.job_id]
+    assert entry.progress == pytest.approx(5.0)
+    assert entry.ckpt_step >= 2  # periodic cadence ran
+    cluster.preempt(job.job_id)
+    cluster.run(until=cluster.now)
+    # graceful window checkpointed the exact preemption step, then the free
+    # chip restarted the job, which resumed from that checkpoint
+    assert bw.stats["preemptions"] == 1 and bw.stats["resumes"] == 1
+    assert entry.ckpt_step == 5
+    assert entry.progress == pytest.approx(5.0)
+    assert job.state == scheduler.JobState.RUNNING
+    _drive(cluster, bw, 12.0)
+    assert job.state == scheduler.JobState.DONE
+    assert entry.progress == pytest.approx(10.0)
+
+
+def test_batch_checkpoints_through_real_store(tmp_path):
+    from repro.checkpoint.store import CheckpointStore
+    cluster = scheduler.Cluster(chips=1)
+    stores = {}
+
+    def factory(job_id):
+        stores[job_id] = CheckpointStore(str(tmp_path / f"job-{job_id}"), keep=2)
+        return stores[job_id]
+
+    bw = BatchWorkload(cluster, step_s=1.0, ckpt_every=2, store_factory=factory)
+    job = bw.submit(chips=1, total_steps=8)
+    cluster.run(until=0.0)
+    _drive(cluster, bw, 3.0)
+    cluster.preempt(job.job_id)
+    cluster.run(until=cluster.now)
+    store = stores[job.job_id]
+    assert store.latest_step() == 3  # preemption checkpoint committed to disk
+    like = {"data_step": np.asarray(0)}
+    tree, meta = store.restore(like)
+    assert int(tree["data_step"]) == 3 and meta["job"] == job.job_id
+
+
+# ----------------------------------------------------------------------
+# per-tenant metering through one lease
+# ----------------------------------------------------------------------
+
+def test_executor_attributes_tokens_per_request_tenant():
+    cfg, params = _model()
+    cont = serving_container(cfg, params, slots=2, max_len=64,
+                             prompt_buckets=(8, 16))
+    profile = recompile.PORTABLE_CPU
+    service = InvocationService(scheduler.Cluster(chips=profile.chips))
+    owners = {0: "acme", 1: "globex", 2: "acme"}
+    with service.acquire_serving("fleet-op", cont, profile,
+                                 tenant_of=owners.__getitem__) as ex:
+        rng = np.random.default_rng(0)
+        for i in range(3):
+            ex.submit(Request(
+                request_id=i,
+                prompt=rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32),
+                max_new_tokens=3))
+        results = ex.run()
+        tok = {rid: len(r.tokens) for rid, r in results.items()}
+        assert service.meter.served_tokens("acme") == tok[0] + tok[2]
+        assert service.meter.served_tokens("globex") == tok[1]
+        # chips billed to the lease holder, not the request tenants
+        assert service.meter.total_steps("serve_decode", "fleet-op") == \
+            ex.engine.stats["decode_steps"]
+        assert service.meter.total_steps("serve_decode", "acme") == 0
+    # context manager released the lease on exit
+    assert not ex.lease.active
+    assert service.cluster.free_chips == service.cluster.total_chips
+
+
+# ----------------------------------------------------------------------
+# the fleet, end to end
+# ----------------------------------------------------------------------
+
+def test_fleet_end_to_end_scales_preempts_and_reconciles():
+    cfg, params = _model()
+    fleet_cfg = FleetConfig(min_replicas=1, max_replicas=2, slots=2,
+                            max_len=64, prompt_buckets=(8, 16), tick_s=0.1,
+                            warm_boot_s=0.3, cold_boot_s=0.6, settle_s=20.0)
+    slo = SLO(p95_target_s=1.0, queue_high_per_slot=1.0, up_cooldown_s=0.5,
+              down_cooldown_s=1.0, idle_drain_s=2.0)
+    trace = bursty_trace(seed=0, duration_s=10.0, base_rate=0.3,
+                         burst_rate=6.0, bursts=((2.0, 6.0),),
+                         prompt_median=8, prompt_lo=4, prompt_hi=16,
+                         max_new_lo=4, max_new_hi=6)
+    reqs = materialize(trace, vocab_size=cfg.vocab_size, seed=1)
+    # 2 chips total: min replica + one batch job -> the second replica can
+    # only come from preemption
+    fm = FleetManager.build(cfg, params, chips=2, fleet=fleet_cfg, slo=slo,
+                            batch_jobs=[(1, 20)])
+    report = fm.run_trace(reqs)
+
+    assert report.served == report.requests == len(reqs)
+    # elastic scale-ups only: the initial min-footprint boot is not counted
+    assert report.scale_ups >= 1
+    assert report.preemptions >= 1          # scale-up had to evict the batch job
+    assert report.batch["checkpoints"] >= 1
+    assert report.batch["resumes"] >= 1     # batch resumed after scale-to-min
+    assert report.lease_releases >= 1       # scale-to-min released a lease
+    assert report.reconciled                # per-tenant ledger == served tokens
+    assert sum(report.metered_by_tenant.values()) == report.tokens
+    # warm-deployment cache: only the first replica deploy is cold
+    assert fm.service.stats["cold_acquires"] == 1
+    assert fm.service.stats["warm_acquires"] >= 1
+    # every promoted replica surfaced its specialization manifest
+    assert all(r["tiers"] for r in report.replicas if r["state"] != "booting")
+    # settled back to the min footprint with the batch job re-running
+    assert len([r for r in fm.replicas if r.state == ReplicaState.SERVING]) == 1
+    fm.cluster.check_invariants()
+
+    # shutdown releases the last lease; every serving chip returns
+    fm.shutdown()
+    assert all(r.state == ReplicaState.RELEASED for r in fm.replicas)
+    assert not fm.service.active_leases()
+
+
+def test_fleet_runs_are_deterministic():
+    cfg, params = _model()
+
+    def one_run():
+        fleet_cfg = FleetConfig(min_replicas=1, max_replicas=2, slots=2,
+                                max_len=64, prompt_buckets=(8, 16), tick_s=0.1,
+                                warm_boot_s=0.3, cold_boot_s=0.6)
+        trace = bursty_trace(seed=5, duration_s=6.0, base_rate=0.5,
+                             burst_rate=4.0, bursts=((1.0, 3.0),),
+                             prompt_median=8, prompt_lo=4, prompt_hi=16,
+                             max_new_lo=3, max_new_hi=5)
+        reqs = materialize(trace, vocab_size=cfg.vocab_size, seed=6)
+        fm = FleetManager.build(cfg, params, chips=3, fleet=fleet_cfg)
+        rep = fm.run_trace(reqs)
+        return (rep.served, rep.tokens, rep.latency_p50_s, rep.latency_p99_s,
+                rep.scale_ups, rep.lease_releases, rep.serving_chip_s)
+
+    assert one_run() == one_run()

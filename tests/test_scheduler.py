@@ -127,3 +127,4 @@ def test_no_backfill_mode_is_strict_fcfs():
     small = c.submit(tenant="c", chips=10, runtime_s=1)
     c.run(until=1.0)
     assert small.state == JobState.PENDING  # no jumping without backfill
+

@@ -1,0 +1,135 @@
+"""Scheduler edge paths: cancel/fail against non-running jobs, the
+preemption lifecycle (graceful checkpoint window, runtime credit, stale
+finish invalidation, class-priority requeue), and elastic/backfill
+interactions. Split from test_scheduler.py so these run even where
+`hypothesis` is unavailable."""
+import pytest
+
+from repro.core.scheduler import Cluster, JobClass, JobState
+
+
+def test_cancel_while_pending_removes_from_queue():
+    c = Cluster(chips=10)
+    c.submit(tenant="a", chips=10, runtime_s=50)
+    waiting = c.submit(tenant="b", chips=10, runtime_s=10)
+    c.run(until=1.0)
+    assert waiting.state == JobState.PENDING
+    c.cancel(waiting.job_id)
+    c.run(until=2.0)
+    assert waiting.state == JobState.CANCELLED
+    assert waiting.job_id not in c.pending
+    assert waiting.start_s is None and waiting.granted_chips == 0
+    c.check_invariants()
+
+
+def test_fail_while_pending_is_noop():
+    c = Cluster(chips=10)
+    c.submit(tenant="a", chips=10, runtime_s=5)
+    waiting = c.submit(tenant="b", chips=10, runtime_s=1)
+    c.fail(waiting.job_id, at=1.0)  # crash report for a job not yet placed
+    c.run()
+    assert waiting.state == JobState.DONE  # ran normally once chips freed
+    c.check_invariants()
+
+
+def test_preempt_releases_chips_and_requeues():
+    c = Cluster(chips=8)
+    j = c.submit(tenant="t", chips=8, runtime_s=100, klass=JobClass.BATCH)
+    c.run(until=10.0)
+    assert j.state == JobState.RUNNING
+    seen = []
+    # listener fires inside the graceful window: chips still granted
+    c.listeners.append(lambda kind, job: seen.append((kind, job.granted_chips)))
+    c.preempt(j.job_id)
+    c.run(until=10.0)
+    assert ("preempt", 8) in seen
+    assert j.preemptions == 1
+    # requeued with elapsed runtime credited, then restarted (chips free)
+    assert j.state == JobState.RUNNING and j.start_s == 10.0
+    assert j.runtime_s == pytest.approx(90.0)
+    c.run()
+    assert j.state == JobState.DONE
+    assert j.end_s == pytest.approx(100.0)
+    c.check_invariants()
+
+
+def test_preempt_service_is_noop():
+    c = Cluster(chips=4)
+    s = c.submit(tenant="svc", chips=4, runtime_s=1.0, klass=JobClass.SERVICE)
+    c.run(until=1.0)
+    c.preempt(s.job_id)
+    c.run(until=2.0)
+    assert s.state == JobState.RUNNING and s.preemptions == 0
+
+
+def test_stale_finish_does_not_kill_restarted_incarnation():
+    c = Cluster(chips=4)
+    batch = c.submit(tenant="b", chips=4, runtime_s=10, klass=JobClass.BATCH)
+    c.run(until=2.0)
+    # an interactive job arrives first, then the preemption: the requeued
+    # batch job waits behind it past its ORIGINAL finish time (t=10)
+    hog = c.submit(tenant="i", chips=4, runtime_s=8, at=4.0,
+                   klass=JobClass.INTERACTIVE)
+    c.preempt(batch.job_id, at=4.0)
+    c.run(until=5.0)
+    assert batch.state == JobState.PENDING and hog.state == JobState.RUNNING
+    c.run(until=11.0)  # past the stale finish event at t=10
+    assert batch.state != JobState.DONE  # stale finish ignored
+    c.run()
+    # restarted at t=12 with 6s credit remaining -> done at 18
+    assert batch.state == JobState.DONE
+    assert batch.end_s == pytest.approx(18.0)
+    assert batch.preemptions == 1
+    c.check_invariants()
+
+
+def test_preempt_yields_chips_to_higher_priority_class():
+    c = Cluster(chips=4)
+    batch = c.submit(tenant="b", chips=4, runtime_s=100, klass=JobClass.BATCH)
+    c.run(until=1.0)
+    svc = c.submit(tenant="s", chips=4, runtime_s=1.0, klass=JobClass.SERVICE)
+    c.run(until=1.0)
+    assert svc.state == JobState.PENDING  # cluster full
+    c.preempt(batch.job_id)
+    c.run(until=1.0)
+    # SERVICE outranks the requeued BATCH job in the pending queue
+    assert svc.state == JobState.RUNNING
+    assert batch.state == JobState.PENDING
+    c.cancel(svc.job_id, at=5.0)
+    c.run(until=6.0)
+    assert batch.state == JobState.RUNNING  # resumed once the lease released
+    c.check_invariants()
+
+
+def test_preempted_job_outranks_elastic_grow_then_grow_on_cancel():
+    c = Cluster(chips=10)
+    rigid = c.submit(tenant="a", chips=6, runtime_s=100, klass=JobClass.BATCH)
+    elastic = c.submit(tenant="b", chips=8, runtime_s=50, min_chips=2,
+                       klass=JobClass.BATCH)
+    c.run(until=0.0)
+    assert elastic.granted_chips == 4  # shrunk start
+    c.preempt(rigid.job_id, at=5.0)
+    c.run(until=5.0)
+    # the requeued job is the queue head: it restarts with its full
+    # allocation rather than losing chips to the elastic grow pass
+    assert rigid.state == JobState.RUNNING and rigid.granted_chips == 6
+    assert rigid.preemptions == 1
+    assert elastic.granted_chips == 4
+    c.cancel(rigid.job_id, at=6.0)
+    c.run(until=6.0)
+    assert elastic.granted_chips == 8  # grew once the chips truly freed
+    c.check_invariants()
+
+
+def test_backfill_preserves_head_reservation_with_mixed_classes():
+    c = Cluster(chips=100)
+    c.submit(tenant="a", chips=80, runtime_s=100)
+    head = c.submit(tenant="b", chips=100, runtime_s=10)
+    fits = c.submit(tenant="c", chips=20, runtime_s=50)   # ends before t=100
+    late = c.submit(tenant="d", chips=20, runtime_s=500)  # would delay head
+    c.run(until=1.0)
+    assert fits.state == JobState.RUNNING
+    assert late.state == JobState.PENDING
+    c.run(until=150.0)
+    assert head.start_s == pytest.approx(100.0)  # reservation honored
+    c.check_invariants()

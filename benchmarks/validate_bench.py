@@ -1,0 +1,179 @@
+"""Schema-validate committed BENCH_*.json files and gate headline-metric
+regressions against a freshly generated candidate set.
+
+Two modes (both pure stdlib — no jsonschema dependency in the image):
+
+  schema check (always):
+      every committed BENCH_*.json must parse and carry its benchmark's
+      required fields with sane types/ranges — a half-written or
+      hand-mangled benchmark artifact fails CI at the door.
+
+  regression gate (``--candidate DIR``):
+      compares the candidate run's headline metrics against the committed
+      baselines and FAILS when one regresses beyond its threshold, printing
+      the comparison table either way. Tracked headlines:
+
+        * serving tok/s (fused)     — advisory only (wall clock on a CI
+                                      runner vs a baseline from different
+                                      hardware never gates)
+        * serving fused speedup     — same-machine ratio, 20%
+        * fleet p99 latency         — virtual-time (deterministic), 20%
+        * prefix prefill reduction  — token-count ratio (deterministic), 20%
+
+    PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def _get(d: dict, path: str):
+    cur = d
+    for part in path.split("."):
+        if isinstance(cur, list):
+            cur = cur[int(part)]
+        elif isinstance(cur, dict):
+            if part not in cur:
+                raise KeyError(path)
+            cur = cur[part]
+        else:
+            raise KeyError(path)
+    return cur
+
+
+# benchmark name -> [(field path, type, predicate description, predicate)]
+_SCHEMAS = {
+    "BENCH_serving.json": [
+        ("benchmark", str, "== serving_throughput",
+         lambda v: v == "serving_throughput"),
+        ("arch", str, "non-empty", bool),
+        ("fused_speedup", (int, float), "> 1", lambda v: v > 1),
+        ("modes", list, ">= 2 modes", lambda v: len(v) >= 2),
+        ("modes.0.tok_s", (int, float), "> 0", lambda v: v > 0),
+        ("modes.1.tok_s", (int, float), "> 0", lambda v: v > 0),
+        ("modes.1.syncs_per_step", (int, float), "== 1 (fused contract)",
+         lambda v: v == 1.0),
+    ],
+    "BENCH_fleet.json": [
+        ("benchmark", str, "== fleet_scaling",
+         lambda v: v == "fleet_scaling"),
+        ("scenarios.autoscaled.latency_p99_s", (int, float), "> 0",
+         lambda v: v > 0),
+        ("scenarios.autoscaled.reconciled", bool, "ledger reconciles",
+         lambda v: v is True),
+        ("scenarios.autoscaled.served", int, "> 0", lambda v: v > 0),
+        ("scenarios.autoscaled.scale_ups", int, ">= 1", lambda v: v >= 1),
+    ],
+    "BENCH_prefix.json": [
+        ("benchmark", str, "== prefix_reuse", lambda v: v == "prefix_reuse"),
+        ("prefill_reduction", (int, float), ">= 2 (headline claim)",
+         lambda v: v >= 2.0),
+        ("scenarios.shared_prefix.token_parity", bool, "parity holds",
+         lambda v: v is True),
+        ("scenarios.multi_turn.token_parity", bool, "parity holds",
+         lambda v: v is True),
+        ("fleet.prefix_affinity_routes", int, "> 0", lambda v: v > 0),
+        ("fleet.hit_rate", (int, float), "> 0", lambda v: v > 0),
+    ],
+}
+
+# (label, file, json path, direction, allowed fractional regression)
+# tol=None -> advisory only: absolute tok/s compares a CI runner's wall
+# clock against a baseline generated on different hardware, so it is shown
+# in the table but never gates; the serving gate is the same-machine
+# fused-vs-legacy speedup RATIO, and fleet p99 / prefix reduction are
+# virtual-time / token-count metrics (deterministic across machines).
+_HEADLINES = [
+    ("serving tok/s (fused)", "BENCH_serving.json", "modes.1.tok_s",
+     "higher", None),
+    ("serving fused speedup", "BENCH_serving.json", "fused_speedup",
+     "higher", 0.20),
+    ("fleet p99 latency (virtual s)", "BENCH_fleet.json",
+     "scenarios.autoscaled.latency_p99_s", "lower", 0.20),
+    ("prefix prefill reduction", "BENCH_prefix.json", "prefill_reduction",
+     "higher", 0.20),
+]
+
+
+def validate_schema(root: pathlib.Path) -> list[str]:
+    errors = []
+    for fname, rules in _SCHEMAS.items():
+        path = root / fname
+        if not path.exists():
+            errors.append(f"{fname}: missing")
+            continue
+        try:
+            data = json.loads(path.read_text())
+        except json.JSONDecodeError as e:
+            errors.append(f"{fname}: invalid JSON ({e})")
+            continue
+        for field, typ, desc, pred in rules:
+            try:
+                val = _get(data, field)
+            except (KeyError, IndexError):
+                errors.append(f"{fname}: missing field {field!r}")
+                continue
+            if not isinstance(val, typ):
+                errors.append(
+                    f"{fname}: {field} has type {type(val).__name__}, "
+                    f"expected {typ}")
+            elif not pred(val):
+                errors.append(f"{fname}: {field}={val!r} violates '{desc}'")
+    return errors
+
+
+def compare(baseline_root: pathlib.Path, candidate_root: pathlib.Path) -> list[str]:
+    failures = []
+    w = max(len(h[0]) for h in _HEADLINES)
+    print(f"\n{'headline metric':<{w}}  {'baseline':>10}  {'candidate':>10} "
+          f"{'delta':>8}  {'allowed':>8}  verdict")
+    print("-" * (w + 52))
+    for label, fname, field, direction, tol in _HEADLINES:
+        base = _get(json.loads((baseline_root / fname).read_text()), field)
+        cand = _get(json.loads((candidate_root / fname).read_text()), field)
+        if direction == "higher":
+            regression = (base - cand) / base if base else 0.0
+        else:
+            regression = (cand - base) / base if base else 0.0
+        bad = tol is not None and regression > tol
+        verdict = "REGRESSED" if bad else ("info" if tol is None else "ok")
+        allowed = "     -- " if tol is None else f"{tol:>7.0%}"
+        print(f"{label:<{w}}  {base:>10.3f}  {cand:>10.3f} "
+              f"{-regression:>+7.1%}  {allowed}  {verdict}")
+        if bad:
+            failures.append(
+                f"{label}: {base:.3f} -> {cand:.3f} "
+                f"({regression:.1%} worse, allowed {tol:.0%})")
+    return failures
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--candidate", default=None,
+                    help="directory with freshly generated BENCH_*.json to "
+                         "gate against the baseline")
+    args = ap.parse_args()
+
+    baseline = pathlib.Path(args.baseline)
+    errors = validate_schema(baseline)
+    for e in errors:
+        print(f"schema: {e}", file=sys.stderr)
+    if args.candidate:
+        cand = pathlib.Path(args.candidate)
+        errors += [f"candidate {e}" for e in validate_schema(cand)]
+        if not errors:
+            errors += compare(baseline, cand)
+    if errors:
+        print(f"\nvalidate_bench: {len(errors)} failure(s)", file=sys.stderr)
+        raise SystemExit(1)
+    print("\nvalidate_bench OK"
+          + ("" if args.candidate else " (schema only)"))
+
+
+if __name__ == "__main__":
+    main()

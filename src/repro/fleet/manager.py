@@ -65,6 +65,8 @@ class FleetConfig:
     max_len: int = 96
     prompt_buckets: tuple[int, ...] = (16, 32, 48)
     sync_every: int = 1
+    # radix prefix-cache byte budget per replica (0 disables KV reuse)
+    prefix_cache_mb: float = 16.0
     # virtual-time knobs
     tick_s: float = 0.05          # one fused decode round per replica per tick
     warm_boot_s: float = 0.5      # deployment cache hit: engine boot only
@@ -109,6 +111,15 @@ class Replica:
 
     def bucket_for(self, prompt_len: int) -> int:
         return _bucket(prompt_len, self.engine.prompt_buckets)
+
+    def cached_prefix_len(self, prompt) -> int:
+        """Longest usable cached prefix this replica advertises for the
+        router's prefix-affinity layer (0 when the cache is disabled)."""
+        cache = self.engine.prefix_cache
+        if cache is None:
+            return 0
+        t = np.asarray(prompt)
+        return cache.match(t, limit=t.shape[-1] - 1).usable
 
     # ---- manager internals ----
     def has_work(self) -> bool:
@@ -249,6 +260,7 @@ class FleetReport:
     tokens_by_tenant: dict[str, int]
     metered_by_tenant: dict[str, int]
     reconciled: bool               # ledger totals match served tokens per tenant
+    prefix_cache: dict             # fleet-wide prefix reuse + router affinity
     replicas: list[dict]
     batch: dict
     decisions: list[tuple[float, str, str]]
@@ -524,6 +536,37 @@ class FleetManager:
             ((r.released_s if r.released_s is not None else self.now)
              - r.started_s) * r.chips
             for r in self.replicas)
+
+        def _replica_prefix(r: Replica) -> dict | None:
+            eng = r.engine
+            if eng.prefix_cache is None:
+                return None
+            h, m = eng.stats["prefix_hits"], eng.stats["prefix_misses"]
+            return {
+                "hits": h,
+                "misses": m,
+                "hit_rate": round(h / max(h + m, 1), 4),
+                "hit_tokens": eng.stats["prefix_hit_tokens"],
+                "prefill_tokens": eng.stats["prefill_tokens"],
+                **{k: v for k, v in eng.prefix_cache.report().items()
+                   if k in ("nodes", "bytes", "evictions", "inserts")},
+            }
+
+        per_replica_prefix = {r.replica_id: _replica_prefix(r)
+                              for r in self.replicas}
+        agg = [p for p in per_replica_prefix.values() if p]
+        hits = sum(p["hits"] for p in agg)
+        misses = sum(p["misses"] for p in agg)
+        prefix_summary = {
+            "enabled": bool(agg),
+            "hits": hits,
+            "misses": misses,
+            "hit_rate": round(hits / max(hits + misses, 1), 4),
+            "hit_tokens": sum(p["hit_tokens"] for p in agg),
+            "prefill_tokens": sum(p["prefill_tokens"] for p in agg),
+            "prefix_affinity_routes": self.router.stats.get("prefix_hits", 0),
+            "session_affinity_routes": self.router.stats.get("session_hits", 0),
+        }
         return FleetReport(
             requests=len(self._arrival),
             served=len(self._completion),
@@ -542,6 +585,7 @@ class FleetManager:
             tokens_by_tenant=tokens_by_tenant,
             metered_by_tenant=metered,
             reconciled=reconciled,
+            prefix_cache=prefix_summary,
             replicas=[{
                 "id": r.replica_id,
                 "boot": r.boot,
@@ -549,6 +593,7 @@ class FleetManager:
                 "end_s": (round(r.released_s, 3)
                           if r.released_s is not None else None),
                 "state": r.state.value,
+                "prefix": per_replica_prefix[r.replica_id],
                 "tiers": ({api: c["provider"]
                            for api, c in r.manifest.get("apis", {}).items()}
                           if r.manifest else None),
@@ -575,7 +620,8 @@ class FleetManager:
         service = InvocationService(scheduler.Cluster(chips=chips))
         cont = serving_container(
             cfg, params, slots=fleet.slots, max_len=fleet.max_len,
-            prompt_buckets=fleet.prompt_buckets, sync_every=fleet.sync_every)
+            prompt_buckets=fleet.prompt_buckets, sync_every=fleet.sync_every,
+            prefix_cache_bytes=int(fleet.prefix_cache_mb * (1 << 20)) or None)
         batch = None
         if batch_jobs:
             batch = BatchWorkload(service.cluster, step_s=batch_step_s,

@@ -1,28 +1,42 @@
-"""Admission router: load-aware placement with session and prompt-bucket
-affinity.
+"""Admission router: load-aware placement with session, prefix, and
+prompt-bucket affinity.
 
 The fleet's replicas are not interchangeable at the margin: each engine keeps
-per-slot cache state sized by its prompt buckets and reuses compiled
-programs per (batch, bucket) shape, so a replica that has recently admitted a
-bucket serves that bucket with zero compilation or cache-geometry churn. The
-router therefore places each request by:
+per-slot cache state sized by its prompt buckets, reuses compiled programs
+per (batch, bucket) shape, and (when enabled) holds a radix prefix cache of
+prompt KV/recurrent state, so a replica that has recently served a prompt
+family serves it again with less prefill compute and zero compilation churn.
+The router therefore places each request by:
 
   1. **session affinity** — a returning session goes back to its previous
      replica (conversation caches and per-tenant working set stay hot),
      unless that replica is overloaded relative to the fleet floor;
-  2. **bucket affinity** — otherwise prefer, among non-overloaded replicas,
+  2. **prefix affinity** — otherwise prefer, among non-overloaded replicas,
+     the one advertising the longest cached prefix of this prompt (its
+     radix prefix cache can skip that much prefill). Ranked above bucket
+     affinity because a prefix hit saves real compute, not just a
+     compilation;
+  3. **bucket affinity** — otherwise prefer, among non-overloaded replicas,
      one whose hot-bucket set already contains the request's prompt bucket;
-  3. **least load** — otherwise the replica with the fewest outstanding
+  4. **least load** — otherwise the replica with the fewest outstanding
      decode tokens (queued + remaining in-flight), ties broken by lowest
      replica id so placement is deterministic.
 
 The router only needs a tiny protocol from a replica: ``replica_id``,
-``accepting``, ``outstanding_tokens()``, ``bucket_for(prompt_len)`` and
-``hot_buckets`` — tests drive it with plain fakes.
+``accepting``, ``outstanding_tokens()``, ``bucket_for(prompt_len)``,
+``hot_buckets`` and (optionally) ``cached_prefix_len(prompt)`` — tests drive
+it with plain fakes.
+
+Session pins are recorded only when session affinity is enabled, and the pin
+map is an LRU bounded by ``max_sessions``: a long-lived fleet serving an
+unbounded stream of one-shot sessions must not grow host memory without
+bound (the bug this bound fixed: ``_sessions`` grew by one entry per session
+forever, even with affinity disabled).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Any, Sequence
 
 import numpy as np
@@ -53,23 +67,28 @@ class Router:
     """Places :class:`FleetRequest` objects onto fleet replicas."""
 
     def __init__(self, *, session_affinity: bool = True,
-                 bucket_affinity: bool = True, overload_factor: float = 2.0,
-                 slack_tokens: int = 8):
+                 prefix_affinity: bool = True, bucket_affinity: bool = True,
+                 overload_factor: float = 2.0, slack_tokens: int = 8,
+                 max_sessions: int = 4096):
         self.session_affinity = session_affinity
+        self.prefix_affinity = prefix_affinity
         self.bucket_affinity = bucket_affinity
         # a replica is "overloaded" for affinity purposes when its load
         # exceeds overload_factor * fleet_min + slack_tokens: affinity should
         # bend placement, never create a hotspot
         self.overload_factor = overload_factor
         self.slack_tokens = slack_tokens
-        self._sessions: dict[str, int] = {}  # session -> replica_id
-        self.stats = {"routed": 0, "session_hits": 0, "bucket_hits": 0,
-                      "least_loaded": 0}
+        self.max_sessions = max_sessions
+        self._sessions: OrderedDict[str, int] = OrderedDict()  # LRU pin map
+        self.stats = {"routed": 0, "session_hits": 0, "prefix_hits": 0,
+                      "bucket_hits": 0, "least_loaded": 0,
+                      "sessions_evicted": 0}
 
     def route(self, req: FleetRequest, replicas: Sequence[Any]):
-        """Pick the replica for ``req``; records the session pin. Raises
-        RuntimeError when no replica is accepting (the fleet keeps
-        ``min_replicas`` >= 1, so this means misuse)."""
+        """Pick the replica for ``req``; records the session pin (only when
+        session affinity is on). Raises RuntimeError when no replica is
+        accepting (the fleet keeps ``min_replicas`` >= 1, so this means
+        misuse)."""
         accepting = [r for r in replicas if r.accepting]
         if not accepting:
             raise RuntimeError("router: no accepting replicas in the fleet")
@@ -83,6 +102,20 @@ class Router:
             if rid is not None and rid in loads and loads[rid] <= limit:
                 chosen = next(r for r in accepting if r.replica_id == rid)
                 self.stats["session_hits"] += 1
+        if chosen is None and self.prefix_affinity:
+            cands = []
+            for r in accepting:
+                if loads[r.replica_id] > limit:
+                    continue
+                fn = getattr(r, "cached_prefix_len", None)
+                plen = int(fn(req.prompt)) if fn is not None else 0
+                if plen > 0:
+                    cands.append((plen, r))
+            if cands:
+                best = max(p for p, _ in cands)
+                chosen = min((r for p, r in cands if p == best),
+                             key=lambda r: (loads[r.replica_id], r.replica_id))
+                self.stats["prefix_hits"] += 1
         if chosen is None and self.bucket_affinity:
             hot = [r for r in accepting
                    if r.bucket_for(req.prompt_len) in r.hot_buckets
@@ -94,11 +127,21 @@ class Router:
             chosen = min(accepting,
                          key=lambda r: (loads[r.replica_id], r.replica_id))
             self.stats["least_loaded"] += 1
-        self._sessions[req.session] = chosen.replica_id
+        if self.session_affinity:
+            self._sessions[req.session] = chosen.replica_id
+            self._sessions.move_to_end(req.session)
+            while len(self._sessions) > self.max_sessions:
+                self._sessions.popitem(last=False)
+                self.stats["sessions_evicted"] += 1
         return chosen
+
+    def forget_session(self, session: str) -> None:
+        """Drop one session's pin (e.g. when the fleet learns the session
+        completed); returning sessions simply re-route."""
+        self._sessions.pop(session, None)
 
     def forget_replica(self, replica_id: int) -> None:
         """Drop session pins to a draining/released replica so returning
         sessions re-route instead of chasing a dead replica."""
-        self._sessions = {s: r for s, r in self._sessions.items()
-                          if r != replica_id}
+        self._sessions = OrderedDict(
+            (s, r) for s, r in self._sessions.items() if r != replica_id)

@@ -131,6 +131,48 @@ def decode_attention(
 
 
 # ---------------------------------------------------------------------------
+# chunk attention (suffix-continuation prefill against a KV cache)
+# ---------------------------------------------------------------------------
+def chunk_attention(
+    q: jax.Array,
+    k_cache: jax.Array,
+    v_cache: jax.Array,
+    *,
+    positions: jax.Array,
+    window: int | None = None,
+    scale: float | None = None,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    """Multi-token continuation attention: a chunk of queries at absolute
+    per-row ``positions`` attends a full KV cache (prefix entries restored
+    from a prefix cache plus the chunk's own entries already scattered in).
+
+    q: (B, Sq, Hq, Dh); k_cache, v_cache: (B, L, Hkv, Dh);
+    positions: (B, Sq) int32 absolute position of each query.
+    Cache slot j is visible to query i iff j <= positions[b, i]
+    (causality over the whole cache, not just the chunk); window limits
+    attention to the trailing `window` positions. Returns (B, Sq, Hq, Dh).
+    """
+    b, sq, hq, dh = q.shape
+    lkv = k_cache.shape[1]
+    scale = scale if scale is not None else dh**-0.5
+    kx = _gqa_expand(k_cache, hq).astype(jnp.float32)
+    vx = _gqa_expand(v_cache, hq).astype(jnp.float32)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32), kx) * scale
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    kpos = jnp.arange(lkv)[None, None, :]
+    qpos = positions[:, :, None]
+    mask = kpos <= qpos
+    if window is not None:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask[:, None], logits, _NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, vx)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
 # first-order linear recurrence:  h_t = a_t * h_{t-1} + x_t
 # ---------------------------------------------------------------------------
 def linear_recurrence(
@@ -238,6 +280,12 @@ def _register() -> None:
         "decode_attention(q(B,Hq,D), k_cache(B,S,Hkv,D), v_cache, *, lengths(B,),"
         " window, scale, logit_softcap) -> (B,Hq,D)",
         decode_attention,
+    )
+    hooks.register_api(
+        "chunk_attention",
+        "chunk_attention(q(B,Sq,Hq,D), k_cache(B,L,Hkv,D), v_cache, *,"
+        " positions(B,Sq), window, scale, logit_softcap) -> (B,Sq,Hq,D)",
+        chunk_attention,
     )
     hooks.register_api(
         "linear_recurrence",

@@ -40,7 +40,8 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         slots: int = 4, max_len: int = 256, prompt_len: int = 24,
         smoke: bool = True, temperature: float = 0.0, seed: int = 0,
         tenant: str = "serve-demo", fused: bool = True,
-        sync_every: int = 1) -> dict:
+        sync_every: int = 1, prefix_cache_mb: float = 0.0,
+        shared_prefix_len: int = 0) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
@@ -50,7 +51,9 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
     profile = recompile.PORTABLE_CPU
     cont = serving_container(cfg, params, slots=slots, max_len=max_len,
                              prompt_buckets=(32, 64, 128), fused=fused,
-                             sync_every=sync_every)
+                             sync_every=sync_every,
+                             prefix_cache_bytes=int(prefix_cache_mb * (1 << 20))
+                             or None)
     cluster = scheduler.Cluster(chips=profile.chips)
     service = InvocationService(cluster)
     # the executor is a context manager: the SERVICE lease is released on
@@ -62,13 +65,15 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         print(f"warmup (all data-plane programs compiled): "
               f"{time.perf_counter() - t0:.1f}s")
 
+        lead = (cfg.num_codebooks,) if cfg.frontend == "audio" else ()
+        sys_prompt = rng.integers(0, cfg.vocab_size,
+                                  lead + (shared_prefix_len,), dtype=np.int32)
         for i in range(requests):
             plen = int(rng.integers(prompt_len // 2, prompt_len + 1))
-            if cfg.frontend == "audio":
-                prompt = rng.integers(0, cfg.vocab_size,
-                                      (cfg.num_codebooks, plen), dtype=np.int32)
-            else:
-                prompt = rng.integers(0, cfg.vocab_size, (plen,), dtype=np.int32)
+            prompt = rng.integers(0, cfg.vocab_size, lead + (plen,),
+                                  dtype=np.int32)
+            if shared_prefix_len:
+                prompt = np.concatenate([sys_prompt, prompt], axis=-1)
             executor.submit(Request(request_id=i, prompt=prompt,
                                     max_new_tokens=max_new,
                                     sampling=SamplingConfig(temperature=temperature)))
@@ -92,6 +97,11 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
           f"prefills {stats['prefills']} ({stats['prefill_calls']} calls) "
           f"decode steps {stats['decode_steps']} "
           f"syncs/step {stats['host_syncs_decode'] / max(stats['decode_steps'], 1):.2f}")
+    if prefix_cache_mb:
+        hits, misses = stats["prefix_hits"], stats["prefix_misses"]
+        print(f"prefix cache: {hits}/{hits + misses} hits "
+              f"({stats['prefix_hit_tokens']} prompt tokens restored, "
+              f"{stats['prefill_tokens']} padded positions prefilled)")
     print(f"ledger[{tenant}]: {ledger_tokens} tokens metered, "
           f"${billed:.6f} billed across "
           f"{len([b for b in service.meter.bills if b.tenant == tenant])} line items")
@@ -104,7 +114,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               seed: int = 0, chips: int = 4, min_replicas: int = 1,
               max_replicas: int = 4, slots: int = 2, max_len: int = 64,
               duration_s: float = 24.0, batch_jobs: int = 2,
-              batch_steps: int = 30) -> dict:
+              batch_steps: int = 30, prefix_cache_mb: float = 16.0,
+              shared_prefix_len: int = 0, multi_turn: bool = False) -> dict:
     """Drive the elastic fleet live: same control plane the benchmark
     simulates (repro.fleet), printed as an operator would see it."""
     from repro import fleet as fl
@@ -119,11 +130,14 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                max_new_lo=4, max_new_hi=8)
     reqs = fl.materialize(trace, vocab_size=cfg.vocab_size, seed=seed + 1,
                           num_codebooks=(cfg.num_codebooks
-                                         if cfg.frontend == "audio" else 0))
+                                         if cfg.frontend == "audio" else 0),
+                          shared_prefix_len=shared_prefix_len,
+                          multi_turn=multi_turn, max_prompt_len=max_len // 2)
     fleet_cfg = fl.FleetConfig(min_replicas=min_replicas,
                                max_replicas=max_replicas, slots=slots,
-                               max_len=max_len, prompt_buckets=(8, 16),
-                               tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5)
+                               max_len=max_len, prompt_buckets=(8, 16, 32),
+                               tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5,
+                               prefix_cache_mb=prefix_cache_mb)
     fm = fl.FleetManager.build(
         cfg, params, chips=chips, fleet=fleet_cfg,
         batch_jobs=[(1, batch_steps)] * batch_jobs)
@@ -140,6 +154,12 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
           f"scale-downs, {report.lease_releases} lease releases, "
           f"{report.preemptions} batch preemptions "
           f"({report.batch.get('resumes', 0)} checkpoint-resumes)")
+    pc = report.prefix_cache
+    if pc.get("enabled"):
+        print(f"prefix cache: {pc['hits']}/{pc['hits'] + pc['misses']} hits "
+              f"({pc['hit_tokens']} tokens restored) | router: "
+              f"{pc['prefix_affinity_routes']} prefix-affinity routes, "
+              f"{pc['session_affinity_routes']} session routes")
     for t, what in fm.timeline:
         print(f"  [{t:7.2f}s] {what}")
     for tenant in sorted(report.tokens_by_tenant):
@@ -173,6 +193,14 @@ def main() -> None:
     ap.add_argument("--min-replicas", type=int, default=1)
     ap.add_argument("--max-replicas", type=int, default=4)
     ap.add_argument("--batch-jobs", type=int, default=2)
+    ap.add_argument("--prefix-cache-mb", type=float, default=16.0,
+                    help="radix prefix-cache byte budget per engine/replica "
+                         "(0 disables KV reuse)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="tokens of shared system prompt prepended to every "
+                         "request (per tenant in fleet mode)")
+    ap.add_argument("--multi-turn", action="store_true",
+                    help="fleet sessions extend their previous prompt")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.fleet:
@@ -180,13 +208,18 @@ def main() -> None:
                   seed=args.seed, chips=args.chips,
                   min_replicas=args.min_replicas,
                   max_replicas=args.max_replicas,
-                  duration_s=args.duration, batch_jobs=args.batch_jobs)
+                  duration_s=args.duration, batch_jobs=args.batch_jobs,
+                  prefix_cache_mb=args.prefix_cache_mb,
+                  shared_prefix_len=args.shared_prefix,
+                  multi_turn=args.multi_turn)
         return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
               prompt_len=args.prompt_len, smoke=args.smoke,
               temperature=args.temperature, tenant=args.tenant,
-              fused=not args.unfused, sync_every=args.sync_every)
+              fused=not args.unfused, sync_every=args.sync_every,
+              prefix_cache_mb=args.prefix_cache_mb,
+              shared_prefix_len=args.shared_prefix)
     assert len(out["results"]) == args.requests
     assert out["ledger_tokens"] == out["tokens"]
 

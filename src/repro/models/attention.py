@@ -119,6 +119,39 @@ def init_state(cfg, batch: int, max_len: int, dtype):
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
+def prefill_chunk(p, cfg, x, positions, state, start, lengths, *,
+                  window: int | None = None):
+    """Continue a prefill from per-row offset ``start``: the chunk's K/V are
+    scattered into the existing cache at absolute positions and the chunk's
+    queries attend the whole cache (restored prefix + chunk) with absolute
+    causality — the suffix-only half of prefix-cache reuse.
+
+    x: (B, Sc, D) pre-normed (right-padded chunk); positions: (B, Sc)
+    absolute positions start + [0..Sc); lengths: (B,) total valid entries
+    after the chunk (start + real chunk length). Pad rows (chunk index >=
+    lengths - start) are dropped from the cache write and produce garbage
+    outputs the caller ignores.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    max_len = state["k"].shape[1]
+    valid = jnp.arange(s)[None, :] < (lengths - start)[:, None]
+    idx = jnp.where(valid, positions, max_len)  # out-of-range pads -> dropped
+    bidx = jnp.arange(b)[:, None]
+    k_cache = state["k"].at[bidx, idx].set(k.astype(state["k"].dtype),
+                                           mode="drop")
+    v_cache = state["v"].at[bidx, idx].set(v.astype(state["v"].dtype),
+                                           mode="drop")
+    k_cache = sharding.constraint(k_cache, "batch", "kv_seq", "kv_heads", None)
+    v_cache = sharding.constraint(v_cache, "batch", "kv_seq", "kv_heads", None)
+    o = hooks.call(
+        "chunk_attention", q, k_cache, v_cache, positions=positions,
+        window=window, logit_softcap=cfg.logit_softcap,
+    )
+    y = layers.linear(p["wo"], o.reshape(b, s, -1))
+    return y, {"k": k_cache, "v": v_cache}
+
+
 def decode(p, cfg, x, state, lengths, *, window: int | None = None):
     """Single-token decode. x: (B, D); lengths: (B,) valid entries *including*
     the current token, which is written at index lengths-1."""

@@ -106,6 +106,42 @@ def init_state(cfg, batch: int, max_len: int, dtype):
     }
 
 
+def prefill_chunk(p, cfg, x, positions, state, start, lengths, *, window=None):
+    """Continuation prefill against the compressed-latent cache: the chunk's
+    latents are scattered in at absolute positions, the whole cache is
+    decompressed to naive K/V, and the chunk's queries attend it with
+    absolute causality (see attention.prefill_chunk for the contract)."""
+    del window
+    m = cfg.mla
+    b, s, _ = x.shape
+    max_len = state["ckv"].shape[1]
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    valid = jnp.arange(s)[None, :] < (lengths - start)[:, None]
+    idx = jnp.where(valid, positions, max_len)  # out-of-range pads -> dropped
+    bidx = jnp.arange(b)[:, None]
+    ckv = state["ckv"].at[bidx, idx].set(
+        c_kv.astype(state["ckv"].dtype), mode="drop")
+    krope = state["krope"].at[bidx, idx].set(
+        k_rope[:, :, 0, :].astype(state["krope"].dtype), mode="drop")
+    ckv = sharding.constraint(ckv, "batch", "kv_seq", None)
+    krope = sharding.constraint(krope, "batch", "kv_seq", None)
+    k_nope = layers.linear(p["w_uk"], ckv).reshape(
+        b, max_len, cfg.num_heads, m.qk_nope_head_dim)
+    v = layers.linear(p["w_uv"], ckv).reshape(
+        b, max_len, cfg.num_heads, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(krope[:, :, None, :],
+                          (b, max_len, cfg.num_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    o = hooks.call("chunk_attention", q, k, v, positions=positions, scale=scale)
+    y = layers.linear(p["wo"], o.reshape(b, s, -1))
+    return y, {"ckv": ckv, "krope": krope}
+
+
 def decode(p, cfg, x, state, lengths, *, window=None):
     """Absorbed-form decode. x: (B, D); cache = latent (576/token for V3)."""
     del window

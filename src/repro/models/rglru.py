@@ -111,6 +111,39 @@ def init_state(cfg, batch: int, max_len: int, dtype):
     }
 
 
+def prefill_chunk(p, cfg, x, positions, state, start, lengths, *, window=None):
+    """Continuation prefill: run the conv + RG-LRU over a chunk starting from
+    an existing recurrent state (``h`` folded into the first step, conv tail
+    carried through), and return the state at each row's last *real* chunk
+    position (rows are right-padded to the chunk bucket)."""
+    del positions, window
+    r = cfg.rglru
+    b, s, _ = x.shape
+    u_pre = layers.linear(p["lru_in"], x)  # (B, Sc, W) pre-conv
+    u, _ = layers.conv1d(p["conv"], u_pre, state["conv"])
+    gate = jax.nn.gelu(layers.linear(p["lru_gate"], x).astype(jnp.float32))
+    ig, log_a, scale = _gates(p, cfg, u)
+    xin = scale * ig * u.astype(jnp.float32)
+    # fold the initial state into the first step (h_1 = a_1 h_0 + x_1), same
+    # f32 numerics as the reference recurrence's h0 handling
+    xin = xin.at[:, 0].add(jnp.exp(log_a[:, 0]) * state["h"])
+    xin = xin.astype(x.dtype)
+    a = jnp.exp(log_a).astype(x.dtype)
+    h = hooks.call("linear_recurrence", a, xin)
+    y = (h.astype(jnp.float32) * gate).astype(x.dtype)
+    out = layers.linear(p["lru_out"], y)
+    # ragged state: per-row gather at the last real chunk position; the conv
+    # tail is the window of pre-conv inputs ending there (prefix tail + chunk)
+    sl = lengths - start  # (B,) real chunk lengths >= 1
+    h_t = jnp.take_along_axis(h, (sl - 1)[:, None, None], axis=1)[:, 0]
+    w = r.conv_width - 1
+    ctx = jnp.concatenate([state["conv"].astype(u_pre.dtype), u_pre], axis=1)
+    tail_idx = sl[:, None] + jnp.arange(w)[None, :]  # ctx[sl : sl+w] per row
+    conv_tail = jnp.take_along_axis(ctx, tail_idx[:, :, None], axis=1)
+    return out, {"h": h_t.astype(jnp.float32),
+                 "conv": conv_tail.astype(state["conv"].dtype)}
+
+
 def decode(p, cfg, x, state, lengths, *, window=None):
     """Single-step recurrent update. x: (B, D)."""
     del lengths, window

@@ -28,31 +28,39 @@ from repro.models import attention, ffn, frontends, layers, mla, moe, rglru, xls
 # Mixer dispatch table
 # ---------------------------------------------------------------------------
 class _MixerAdapter:
-    def __init__(self, init, apply, prefill, init_state, decode):
+    def __init__(self, init, apply, prefill, init_state, decode,
+                 prefill_chunk):
         self.init = init
         self.apply = apply
         self.prefill = prefill
         self.init_state = init_state
         self.decode = decode
+        # continuation prefill from an existing state at a per-row position
+        # offset (the suffix-only half of prefix-cache reuse)
+        self.prefill_chunk = prefill_chunk
 
 
 _MIXERS: dict[str, _MixerAdapter] = {
     "global_attn": _MixerAdapter(
         attention.init, attention.apply, attention.prefill,
-        attention.init_state, attention.decode),
+        attention.init_state, attention.decode, attention.prefill_chunk),
     "local_attn": _MixerAdapter(
         attention.init, attention.apply, attention.prefill,
-        attention.init_state, attention.decode),
+        attention.init_state, attention.decode, attention.prefill_chunk),
     "mla": _MixerAdapter(
-        mla.init, mla.apply, mla.prefill, mla.init_state, mla.decode),
+        mla.init, mla.apply, mla.prefill, mla.init_state, mla.decode,
+        mla.prefill_chunk),
     "rglru": _MixerAdapter(
-        rglru.init, rglru.apply, rglru.prefill, rglru.init_state, rglru.decode),
+        rglru.init, rglru.apply, rglru.prefill, rglru.init_state,
+        rglru.decode, rglru.prefill_chunk),
     "mlstm": _MixerAdapter(
         xlstm.init_mlstm, xlstm.apply_mlstm, xlstm.prefill_mlstm,
-        xlstm.init_mlstm_state, xlstm.decode_mlstm),
+        xlstm.init_mlstm_state, xlstm.decode_mlstm,
+        xlstm.prefill_mlstm_chunk),
     "slstm": _MixerAdapter(
         xlstm.init_slstm, xlstm.apply_slstm, xlstm.prefill_slstm,
-        xlstm.init_slstm_state, xlstm.decode_slstm),
+        xlstm.init_slstm_state, xlstm.decode_slstm,
+        xlstm.prefill_slstm_chunk),
 }
 
 
@@ -119,6 +127,24 @@ def prefill_block(p, cfg, spec, x, positions, max_len):
             f, _ = _apply_ffn(p, cfg, spec, layers.norm(p["norm2"], x))
             x = x + f
     return sharding.constraint(x, "batch", "seq", "embed"), state
+
+
+def prefill_chunk_block(p, cfg, spec, x, positions, state, start, lengths):
+    """Like prefill_block but continues from an existing mixer state at a
+    per-row position offset (positions: (B, Sc) absolute)."""
+    n1 = layers.norm(p["norm1"], x)
+    h, new_state = _MIXERS[spec.mixer].prefill_chunk(
+        p["mixer"], cfg, n1, positions, state, start, lengths,
+        window=_window(cfg, spec))
+    if cfg.parallel_residual and spec.ffn != "none":
+        f, _ = _apply_ffn(p, cfg, spec, n1)
+        x = x + h + f
+    else:
+        x = x + h
+        if spec.ffn != "none":
+            f, _ = _apply_ffn(p, cfg, spec, layers.norm(p["norm2"], x))
+            x = x + f
+    return sharding.constraint(x, "batch", "seq", "embed"), new_state
 
 
 def init_block_state(cfg, spec, batch, max_len, dtype):
@@ -313,6 +339,72 @@ def prefill(params, cfg, tokens, max_len: int, *, patch_embeds=None):
     if cfg.frontend == "audio":
         return logits[:, :, 0], states, lengths
     return logits[:, 0], states, lengths
+
+
+def prefill_chunk(params, cfg, tokens, states, start, lengths):
+    """Continue a prefill from per-row position ``start``: process a
+    (right-padded) token chunk at absolute positions [start, start+Sc) on top
+    of existing serving ``states`` (e.g. a prefix restored from a prefix
+    cache; fresh init_states + start=0 gives a plain ragged prefill).
+
+    tokens: (B, Sc) int32 ((B, K, Sc) audio), each row's real suffix at the
+    FRONT, zero-padded at the tail; start: (B,) int32 prefix lengths already
+    in ``states``; lengths: (B,) int32 total valid entries after the chunk
+    (start + real chunk length, >= start + 1).
+
+    Returns (logits at each row's last real position (B, V) f32 ((B, K, V)
+    audio), new_states, lengths).
+    """
+    if cfg.frontend == "vlm":
+        raise NotImplementedError(
+            "chunked prefill does not support the vlm frontend")
+    if cfg.frontend == "audio":
+        x = frontends.audio_embed(params["codebook_embed"], tokens)
+    else:
+        x = layers.embed(params["embed"], tokens)
+    x = x.astype(jnp.dtype(cfg.activ_dtype))
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model**0.5, x.dtype)
+    b, s = x.shape[:2]
+    positions = start[:, None] + jnp.arange(s, dtype=jnp.int32)[None, :]
+    if cfg.pos == "sinusoidal":
+        d = cfg.d_model
+        pos = positions[..., None].astype(jnp.float32)  # (B, Sc, 1)
+        dim = jnp.arange(0, d, 2, dtype=jnp.float32)[None, None, :]
+        inv = jnp.exp(-dim * jnp.log(10000.0) / d)
+        ang = pos * inv
+        pe = jnp.zeros((b, s, d), jnp.float32)
+        pe = pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
+        x = x + pe.astype(x.dtype)
+    x = sharding.constraint(x, "batch", "seq", "embed")
+
+    new_prefix = []
+    for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
+        x, st2 = prefill_chunk_block(p, cfg, spec, x, positions, st, start,
+                                     lengths)
+        new_prefix.append(st2)
+
+    new_scan = states["scan"]
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_states = xs
+            outs = []
+            for j, spec in enumerate(cfg.pattern):
+                x, st2 = prefill_chunk_block(
+                    layer_params[j], cfg, spec, x, positions, layer_states[j],
+                    start, lengths)
+                outs.append(st2)
+            return x, tuple(outs)
+
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], states["scan"]))
+
+    last = (lengths - start - 1)[:, None, None]  # each row's last real chunk pos
+    x_last = jnp.take_along_axis(x, last, axis=1)  # (B, 1, D)
+    logits = lm_logits(params, cfg, x_last)
+    new_states = {"prefix": tuple(new_prefix), "scan": new_scan}
+    if cfg.frontend == "audio":
+        return logits[:, :, 0], new_states, lengths
+    return logits[:, 0], new_states, lengths
 
 
 def decode_step(params, cfg, tokens, states, lengths):

@@ -133,6 +133,80 @@ def init_mlstm_state(cfg, batch: int, max_len: int, dtype):
     }
 
 
+def prefill_mlstm_chunk(p, cfg, x, positions, state, start, lengths, *,
+                        window=None):
+    """Continuation prefill: stabilized parallel mLSTM over a chunk with an
+    initial (C, n, m) state. The initial state enters every chunk position t
+    with log-decay ``m0 + sum_{u<=t} log f_u`` and the per-row stabilizer is
+    the max over that and the within-chunk decays, so the math matches the
+    exact decode recursion step-by-step. Rows are right-padded: pad
+    positions get f=1 / i=-inf so they neither decay nor contribute, which
+    makes the final cumulative quantities land at each row's real length."""
+    del positions, window
+    b, s, _ = x.shape
+    di, h, dh = _mlstm_dims(cfg)
+    f32 = jnp.float32
+    inner = layers.linear(p["up_proj"], x)
+    z = layers.linear(p["up_gate"], x)
+    c_seq, _ = layers.conv1d(p["conv"], inner, state["conv"])
+    cx = jax.nn.silu(c_seq)
+    q = _blocked_linear(p["wq_in"], cx).reshape(b, s, h, dh)
+    k = _blocked_linear(p["wk_in"], cx).reshape(b, s, h, dh)
+    v = _blocked_linear(p["wv_in"], inner).reshape(b, s, h, dh)
+    ig = layers.linear(p["wi_in"], inner).astype(f32)
+    fg = layers.linear(p["wf_in"], inner).astype(f32) + 3.0
+
+    sl = lengths - start  # (B,) real chunk lengths
+    pad = jnp.arange(s)[None, :] >= sl[:, None]  # (B, S)
+    log_f = jax.nn.log_sigmoid(fg)
+    log_f = jnp.where(pad[..., None], 0.0, log_f)   # pads: no decay
+    ig = jnp.where(pad[..., None], -1e30, ig)       # pads: no contribution
+    log_f_cum = jnp.cumsum(log_f, axis=1)  # (B, S, H)
+
+    qf = q.astype(f32) * dh**-0.5
+    kf = k.astype(f32)
+    vf = v.astype(f32)
+    # within-chunk decays + initial-state decay, shared row stabilizer
+    log_d = (log_f_cum[:, :, None, :] - log_f_cum[:, None, :, :]
+             + ig[:, None, :, :])  # (B, T, S, H)
+    tpos = jnp.arange(s)[:, None]
+    spos = jnp.arange(s)[None, :]
+    log_d = jnp.where((spos <= tpos)[None, :, :, None], log_d, -1e30)
+    g_init = state["m"][:, None, :] + log_f_cum  # (B, T, H)
+    m_row = jnp.maximum(jnp.max(log_d, axis=2), g_init)  # (B, T, H)
+    d = jnp.exp(log_d - m_row[:, :, None, :])
+    scores = jnp.einsum("bthd,bshd->btsh", qf, kf) * d
+    init_w = jnp.exp(g_init - m_row)  # (B, T, H)
+    num = (jnp.einsum("btsh,bshd->bthd", scores, vf)
+           + init_w[..., None] * jnp.einsum(
+               "bthd,bhdv->bthv", qf, state["c"]))
+    den = (jnp.sum(scores, axis=2)
+           + init_w * jnp.einsum("bthd,bhd->bth", qf, state["n"]))
+    denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_row))
+    o = (num / denom[..., None]).reshape(b, s, di)
+    o = layers.norm(p["head_norm"], o.astype(x.dtype))
+    y = o * jax.nn.silu(z.astype(f32)).astype(o.dtype)
+    out = layers.linear(p["down_proj"], y)
+
+    # final state at each row's real length (pads are transparent, so the
+    # last cumulative values ARE the values at position sl-1)
+    f_total = log_f_cum[:, -1, :]  # (B, H)
+    g = ig + (log_f_cum[:, -1:, :] - log_f_cum)  # (B, S, H)
+    m_chunk = jnp.max(g, axis=1)  # (B, H)
+    m_t = jnp.maximum(state["m"] + f_total, m_chunk)
+    w = jnp.exp(g - m_t[:, None, :])  # (B, S, H); pads -> 0
+    carry = jnp.exp(state["m"] + f_total - m_t)  # (B, H) initial-state decay
+    c_t = (carry[..., None, None] * state["c"]
+           + jnp.einsum("bsh,bshd,bshv->bhdv", w, kf, vf))
+    n_t = carry[..., None] * state["n"] + jnp.einsum("bsh,bshd->bhd", w, kf)
+    cw = cfg.xlstm.conv_width - 1
+    ctx = jnp.concatenate([state["conv"].astype(inner.dtype), inner], axis=1)
+    tail_idx = sl[:, None] + jnp.arange(cw)[None, :]
+    conv_tail = jnp.take_along_axis(ctx, tail_idx[:, :, None], axis=1)
+    return out, {"c": c_t, "n": n_t, "m": m_t,
+                 "conv": conv_tail.astype(state["conv"].dtype)}
+
+
 def decode_mlstm(p, cfg, x, state, lengths, *, window=None):
     """Exact recurrent mLSTM step. x: (B, D)."""
     del lengths, window
@@ -286,6 +360,53 @@ def init_slstm_state(cfg, batch: int, max_len: int, dtype):
         "m": jnp.full((batch, d), -1e30, f32),
         "conv": jnp.zeros((batch, cfg.xlstm.conv_width - 1, d), dtype),
     }
+
+
+def prefill_slstm_chunk(p, cfg, x, positions, state, start, lengths, *,
+                        window=None):
+    """Continuation prefill: the sequential sLSTM scan seeded with the
+    existing carry; emits the carry at every step so each right-padded row's
+    state is gathered at its real length."""
+    del positions, window
+    b, s, d = x.shape
+    h_heads = cfg.num_heads
+    f32 = jnp.float32
+    cx_seq, _ = layers.conv1d(p["conv"], x, state["conv"])
+    cx = jax.nn.silu(cx_seq)
+    sp = p["slstm"]
+    zt = (layers.linear(sp["wz"], x) + sp["bz"]).astype(f32)
+    it = (layers.linear(sp["wi"], cx) + sp["bi"]).astype(f32)
+    ft = (layers.linear(sp["wf"], cx) + sp["bf"]).astype(f32)
+    ot = (layers.linear(sp["wo"], x) + sp["bo"]).astype(f32)
+
+    def step(carry, gates):
+        hh, cc, nn, mm = carry
+        z_t, i_t, f_t, o_t = gates
+        hh, cc, nn, mm = _slstm_cell(sp, hh, cc, nn, mm, z_t, i_t, f_t, o_t,
+                                     h_heads)
+        return (hh, cc, nn, mm), (hh, cc, nn, mm)
+
+    init = (state["h"], state["c"], state["n"], state["m"])
+    gates_t = tuple(jnp.moveaxis(g, 1, 0) for g in (zt, it, ft, ot))
+    _, (hs, cs, ns, ms) = jax.lax.scan(step, init, gates_t)
+    h_seq = jnp.moveaxis(hs, 0, 1)  # (B, S, D) f32
+    y = layers.norm(p["head_norm"], h_seq.astype(x.dtype))
+    g = layers.linear(p["ffn_gate"], y)
+    u = layers.linear(p["ffn_up"], y)
+    out = layers.linear(p["ffn_down"],
+                        jax.nn.gelu(g.astype(f32)).astype(u.dtype) * u)
+
+    sl = lengths - start  # (B,) real chunk lengths
+    gi = (sl - 1)[:, None, None]
+    gather = lambda seq: jnp.take_along_axis(
+        jnp.moveaxis(seq, 0, 1), gi, axis=1)[:, 0]
+    cw = cfg.xlstm.conv_width - 1
+    ctx = jnp.concatenate([state["conv"].astype(x.dtype), x], axis=1)
+    tail_idx = sl[:, None] + jnp.arange(cw)[None, :]
+    conv_tail = jnp.take_along_axis(ctx, tail_idx[:, :, None], axis=1)
+    return out, {"h": gather(hs), "c": gather(cs), "n": gather(ns),
+                 "m": gather(ms),
+                 "conv": conv_tail.astype(state["conv"].dtype)}
 
 
 def decode_slstm(p, cfg, x, state, lengths, *, window=None):

@@ -15,10 +15,14 @@ Design (vLLM-shape, JAX-native):
     a single packed "tokens | active | done" row batch per step (or one
     stacked fetch every ``sync_every`` steps). Nothing slow on the data
     path, per the paper's Invocation principle.
-  * batched admission: all admissible queued requests sharing a prompt
+  * batched admission: all admissible queued requests sharing a *suffix*
     bucket prefill in ONE batched program call (batch padded to a power of
     two so the compiled-program count stays bounded at
-    #buckets x log2(slots)+1).
+    #buckets x log2(slots)+1). Prompts are right-padded (absolute positions
+    [0, L)), so with the optional radix prefix cache
+    (``prefix_cache_bytes``) admission restores the longest cached prefix
+    with a jitted scatter and prefills ONLY the suffix tokens — the largest
+    prefill-compute lever under shared system prompts / multi-turn traffic.
   * slot admission writes the prefilled per-slot state into the batched
     state tree with a jitted scatter (`_assign`), so admission is O(state of
     one slot), not O(whole cache).
@@ -44,6 +48,7 @@ import numpy as np
 
 from repro.core import hooks
 from repro.models import transformer
+from repro.serving.prefix_cache import PrefixCache, StateOps
 from repro.serving.sampling import (SamplingConfig, SamplingParams, sample,
                                     sample_batched)
 
@@ -147,12 +152,27 @@ class _Programs:
 
         self.fused_step = fused_step
 
-        @functools.partial(jax.jit, static_argnums=(2,))
-        def prefill_batch(params, tokens, max_len_):
-            # tokens: (N, Sb) padded bucket batch ((N, K, Sb) audio)
-            return transformer.prefill(params, cfg, tokens, max_len_)
+        @jax.jit
+        def prefill_chunk(params, tokens, states, start, lengths):
+            # tokens: (N, Sc) right-padded suffix chunk ((N, K, Sc) audio);
+            # states: batch state tree with any cached prefix already
+            # restored at [0, start) per row; full prefill is start == 0
+            return transformer.prefill_chunk(params, cfg, tokens, states,
+                                             start, lengths)
 
-        self.prefill_batch = prefill_batch
+        self.prefill_chunk = prefill_chunk
+
+        dt_ = dt
+
+        @functools.partial(jax.jit, static_argnums=(0,))
+        def init_batch(n):
+            return transformer.init_states(cfg, n, max_len, dt_)
+
+        self.init_batch = init_batch
+
+        # structure-aware extract/restore programs for the prefix cache
+        # (shared across engine instances like every other program here)
+        self.state_ops = StateOps(cfg, max_len, dt)
 
         self.sample_first = jax.jit(sample_batched)
 
@@ -210,6 +230,18 @@ class ServingEngine:
     sync_every: fetch the packed per-step result every k fused steps (k > 1
         trades per-token latency for k-fold fewer host<->device syncs; slots
         that finish mid-window idle until the next sync).
+    prefix_cache_bytes: byte budget for the radix prefix cache (None/0
+        disables reuse). With a cache, admission looks up the longest cached
+        prefix of each prompt, scatters its per-layer state into the batch
+        with a jitted restore, prefills only the suffix, and donates the
+        full-prompt state back to the tree (ref-counted while the slot
+        serves, LRU-evicted under the budget).
+
+    Prompts are RIGHT-padded into their bucket (real tokens at positions
+    [0, L), pads at the tail, dropped from the caches): absolute positions
+    are what make a shared token prefix produce identical state regardless
+    of total prompt length — and, as a bonus, pad tokens no longer pollute
+    attention the way the old left-pad layout let them.
     """
 
     def __init__(
@@ -225,6 +257,7 @@ class ServingEngine:
         sync_every: int = 1,
         binding: hooks.Binding | None = None,
         manifest: dict | None = None,
+        prefix_cache_bytes: int | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -269,21 +302,31 @@ class ServingEngine:
         self.stats = {
             "prefills": 0,          # requests prefilled
             "prefill_calls": 0,     # batched prefill program executions
+            "prefill_tokens": 0,    # padded token-positions run through prefill
             "decode_steps": 0,
             "retired": 0,
             "host_syncs_decode": 0,  # blocking device->host syncs on the decode path
             "host_syncs_admit": 0,   # blocking syncs during admission
             "unserved": 0,
+            "prefix_hits": 0,        # admissions that reused a cached prefix
+            "prefix_misses": 0,      # cache enabled but no usable prefix
+            "prefix_hit_tokens": 0,  # prompt tokens restored instead of prefilled
         }
 
         # ---- compiled programs: shared per (cfg, geometry, tier-set) so
         # replica boots after the first are warm (see _Programs) ----
         progs = _programs_for(cfg, slots, max_len, binding)
         self._fused_step = progs.fused_step
-        self._prefill_batch = progs.prefill_batch
+        self._prefill_chunk = progs.prefill_chunk
+        self._init_batch = progs.init_batch
         self._sample_first = progs.sample_first
         self._assign = progs.assign
         self._decode = progs.decode  # legacy (unfused) step
+
+        self.prefix_cache = (
+            PrefixCache(progs.state_ops, capacity_bytes=prefix_cache_bytes)
+            if prefix_cache_bytes else None)
+        self._slot_pins: list = [None] * slots
 
     # ------------------------------------------------------------------
     def _bound(self):
@@ -325,17 +368,30 @@ class ServingEngine:
         key = jax.random.key(0)
         zero_tok = self._zero_tokens(1)[0]
         for npad in npads:
+            states = self._init_batch(npad)
+            start = jnp.zeros((npad,), jnp.int32)
+            lens = jnp.ones((npad,), jnp.int32)
             for sb in self.prompt_buckets:
                 if self.cfg.frontend == "audio":
                     toks = jnp.zeros((npad, self.cfg.num_codebooks, sb), jnp.int32)
                 else:
                     toks = jnp.zeros((npad, sb), jnp.int32)
-                logits, bstates, _ = self._prefill_batch(
-                    self.params, toks, self.max_len)
+                logits, bstates, _ = self._prefill_chunk(
+                    self.params, toks, states, start, lens)
             self._sample_first(
                 key, logits, SamplingParams.from_configs([SamplingConfig()] * npad))
             self._assign(self.states, bstates, self.ctrl, 0, 0, 0, zero_tok,
                          0.0, 0, _NO_LIMIT, -1)
+            if self.prefix_cache is not None:
+                # prefix-cache device ops: one extract/restore program per
+                # pow2 block length per batch geometry
+                ops = self.prefix_cache.ops
+                p, zero = 1, jnp.int32(0)
+                while p <= self.max_len:
+                    blk = ops.extract_pos(p, bstates, zero, zero)
+                    ops.restore_pos(p, states, blk, zero, zero, zero)
+                    p <<= 1
+                ops.restore_snap(states, ops.extract_snap(bstates, zero), zero)
         jax.block_until_ready(self.states)
 
     # ------------------------------------------------------------------
@@ -359,60 +415,111 @@ class ServingEngine:
         return [i for i, r in enumerate(self.active) if r is None]
 
     # ------------------------------------------------------------------
-    # Admission: batched prefill per prompt bucket
+    # Admission: longest-cached-prefix lookup -> restore -> suffix-only
+    # batched prefill, one program call per suffix bucket
     # ------------------------------------------------------------------
     def _admit(self) -> None:
         """Prefill queued requests into free slots, one batched prefill call
-        per prompt bucket (legacy mode admits one request per call, matching
-        the seed engine's behavior for before/after comparison)."""
-        free = self._free_slots()
-        take = min(len(free), len(self.queue))
-        if not take:
-            return
-        reqs = [self.queue.popleft() for _ in range(take)]
-        groups: dict[int, list[Request]] = {}
-        for req in reqs:
-            sb = _bucket(np.asarray(req.prompt).shape[-1], self.prompt_buckets)
-            groups.setdefault(sb, []).append(req)
-        for sb, rs in groups.items():
-            if self.fused:
-                self._admit_group(sb, rs, free)
-            else:
-                for r in rs:
-                    self._admit_group(sb, [r], free)
+        per suffix bucket (legacy mode admits one request per call, matching
+        the seed engine's behavior for before/after comparison).
 
-    def _admit_group(self, sb: int, reqs: list[Request], free: list[int]) -> None:
-        n = len(reqs)
+        Requests that retire *at* admission (max_new_tokens <= 1, or no
+        decode room) never occupy a slot, so the loop keeps refilling from
+        the queue until the slots are saturated or the queue drains — a
+        retired-at-admission request must not cost a slot a full engine
+        step of idleness.
+        """
+        while True:
+            free = self._free_slots()
+            take = min(len(free), len(self.queue))
+            if not take:
+                return
+            entries = []
+            for _ in range(take):
+                req = self.queue.popleft()
+                entries.append((req,) + self._lookup_prefix(req))
+            groups: dict[int, list[tuple]] = {}
+            for e in entries:
+                req, _, start = e
+                suffix = np.asarray(req.prompt).shape[-1] - start
+                groups.setdefault(
+                    _bucket(suffix, self.prompt_buckets), []).append(e)
+            for sc, es in groups.items():
+                if self.fused:
+                    self._admit_group(sc, es, free)
+                else:
+                    for e in es:
+                        self._admit_group(sc, [e], free)
+
+    def _lookup_prefix(self, req: Request):
+        """-> (match, start): the longest usable cached prefix and the pin
+        protecting it through admission (start == 0: miss / disabled)."""
+        if self.prefix_cache is None:
+            return None, 0
+        prompt = np.asarray(req.prompt, np.int32)
+        # always prefill at least the last prompt token: its logits seed the
+        # first sampled token
+        match = self.prefix_cache.match(prompt, limit=prompt.shape[-1] - 1)
+        if match.usable <= 0:
+            self.stats["prefix_misses"] += 1
+            return None, 0
+        self.prefix_cache.acquire(match.path[-1][0])  # pin through admission
+        self.stats["prefix_hits"] += 1
+        self.stats["prefix_hit_tokens"] += match.usable
+        return match, match.usable
+
+    def _admit_group(self, sc: int, entries: list[tuple], free: list[int]) -> None:
+        n = len(entries)
         npad = _pow2(n)  # bound compiled-program count per bucket
         if self.cfg.frontend == "audio":
-            batch = np.zeros((npad, self.cfg.num_codebooks, sb), np.int32)
+            batch = np.zeros((npad, self.cfg.num_codebooks, sc), np.int32)
         else:
-            batch = np.zeros((npad, sb), np.int32)
-        for i, req in enumerate(reqs):
+            batch = np.zeros((npad, sc), np.int32)
+        starts = np.zeros((npad,), np.int32)
+        lens = np.ones((npad,), np.int32)  # pad rows: 1 valid pos at start 0
+        bstates = self._init_batch(npad)
+        for i, (req, match, start) in enumerate(entries):
             prompt = np.asarray(req.prompt, np.int32)
-            # left-pad: keeps the *suffix* alignment the decode path expects
-            # (cache slots [0, sb) filled, real prompt at the tail)
-            batch[i, ..., sb - prompt.shape[-1]:] = prompt
-        logits, batch_states, _ = self._prefill_batch(
-            self.params, jnp.asarray(batch), self.max_len)
+            # right-pad: real suffix at the front, absolute positions
+            # [start, L) — see the class docstring for why
+            batch[i, ..., : prompt.shape[-1] - start] = prompt[..., start:]
+            starts[i] = start
+            lens[i] = prompt.shape[-1]
+            if start > 0:
+                # restore re-walks the radix tree itself: `match` may be
+                # stale if an earlier group's insert split a node on its path
+                bstates = self.prefix_cache.restore(prompt, bstates, i, start)
+        logits, bstates, _ = self._prefill_chunk(
+            self.params, jnp.asarray(batch), bstates,
+            jnp.asarray(starts), jnp.asarray(lens))
         self.stats["prefill_calls"] += 1
         self.stats["prefills"] += n
+        self.stats["prefill_tokens"] += npad * sc
 
-        pad_cfg = [r.sampling for r in reqs] + [SamplingConfig()] * (npad - n)
+        pad_cfg = [e[0].sampling for e in entries] \
+            + [SamplingConfig()] * (npad - n)
         self.rng, sub = jax.random.split(self.rng)
         first = self._sample_first(sub, logits, SamplingParams.from_configs(pad_cfg))
         first_host = np.asarray(jax.device_get(first))
         self.stats["host_syncs_admit"] += 1
 
-        for i, req in enumerate(reqs):
-            # prefill token + safe decode steps left in the cache after the
-            # prompt's (padded) bucket
-            room = self.max_len - sb + 1
+        for i, (req, match, start) in enumerate(entries):
+            plen = int(np.asarray(req.prompt).shape[-1])
+            pin = None
+            if self.prefix_cache is not None:
+                # donate the full-prompt state back to the radix tree and
+                # swap the admission pin for one on the (deeper) donated node
+                pin = self.prefix_cache.acquire(
+                    self.prefix_cache.insert(req.prompt, bstates, i, match))
+                if match is not None:
+                    self.prefix_cache.release(match.path[-1][0])
+            # prefill token + decode steps until the cache fills at max_len
+            room = self.max_len - plen + 1
             if room < req.max_new_tokens:
                 logger.warning(
-                    "request %s: prompt bucket %d leaves room for %d of the "
+                    "request %s: prompt length %d leaves room for %d of the "
                     "%d requested tokens (engine max_len=%d) — output will "
-                    "be truncated", req.request_id, sb, room,
+                    "be truncated", req.request_id, plen, room,
                     req.max_new_tokens, self.max_len)
             if req.max_new_tokens <= 1 or room <= 1:
                 # the prefill logits already yielded the only (or only
@@ -422,15 +529,18 @@ class ServingEngine:
                     tokens=[self._row_out(first_host[i])],
                     decode_steps=0)
                 self.stats["retired"] += 1
+                if pin is not None:
+                    self.prefix_cache.release(pin)
                 continue
             slot = free.pop(0)
             self.states, self.ctrl = self._assign(
-                self.states, batch_states, self.ctrl, i, slot, sb, first[i],
+                self.states, bstates, self.ctrl, i, slot, plen, first[i],
                 float(req.sampling.temperature), int(req.sampling.top_k),
                 int(req.max_new_tokens),
                 -1 if req.eos_id is None else int(req.eos_id))
             self.active[slot] = req
             self.generated[slot] = [self._row_out(first_host[i])]
+            self._slot_pins[slot] = pin
 
     def _row_out(self, row: np.ndarray):
         return tuple(int(x) for x in row) if row.ndim else int(row)
@@ -456,6 +566,9 @@ class ServingEngine:
                 lengths=self.ctrl["lengths"].at[slot].set(0),
                 active=self.ctrl["active"].at[slot].set(False),
             )
+        if self._slot_pins[slot] is not None:
+            self.prefix_cache.release(self._slot_pins[slot])
+            self._slot_pins[slot] = None
         self.stats["retired"] += 1
 
     # ------------------------------------------------------------------

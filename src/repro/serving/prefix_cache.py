@@ -1,0 +1,415 @@
+"""Ref-counted radix prefix cache for serving KV / recurrent state.
+
+Thousands of fine-grained serving requests share prompt prefixes (system
+prompts, multi-turn conversations). Re-prefilling those shared tokens is
+exactly the redundant work the paper's Invocation principle says must not sit
+on a lean transactional data path — so the engine caches the per-layer state
+a prefix produced and restores it with one scatter instead of recomputing it.
+
+Layout:
+
+  * a **radix tree** over prompt token sequences (columns of a (K, S) int32
+    array — K=1 for text, K=num_codebooks for audio). Each edge owns the
+    state its token span produced:
+      - *positional* state leaves (KV caches, MLA latents — any leaf with a
+        ``max_len``-extent axis, found structurally) are stored as per-edge
+        slices along that axis, padded to a power of two so the restore /
+        extract scatter programs stay bounded at log2(max_len) shapes;
+      - *non-positional* leaves (RG-LRU ``h``/conv tails, xLSTM (C, n, m))
+        are **boundary snapshots**, valid only at the edge's end. Archs with
+        such leaves can only reuse prefixes at snapshot boundaries; pure-KV
+        archs reuse at arbitrary token granularity (edges split on demand).
+  * **ref-counting**: a slot serving a request pins the deepest node of the
+    prefix it used (hit or insert) until the request retires; eviction never
+    touches a pinned leaf, and interior nodes are protected by their
+    children (leaf-only eviction).
+  * **LRU eviction under a byte budget**: every hit/insert touches its path;
+    when the byte budget is exceeded the least-recently-used unpinned leaf
+    is dropped (repeatedly — freeing a leaf may expose its parent).
+
+All device work (extract on insert, scatter on restore) goes through
+:class:`StateOps`, whose jitted programs are shared per (cfg, max_len) via
+the engine's ``_Programs`` bundle — fleet replicas share them the same way
+they share the decode program. Tree bookkeeping is pure host-side control
+plane.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+
+__all__ = ["PrefixCache", "PrefixMatch", "StateOps"]
+
+
+def _pow2(n: int) -> int:
+    return 1 << max(n - 1, 0).bit_length()
+
+
+def _tree_bytes(tree) -> int:
+    return sum(int(np.prod(l.shape)) * l.dtype.itemsize
+               for l in jax.tree.leaves(tree))
+
+
+class StateOps:
+    """Structure-aware device ops over a serving-state pytree.
+
+    Finds, per state leaf, the batch axis (extent tracks the state batch
+    size) and the positional axis (extent tracks ``max_len``; -1 when the
+    leaf has none, e.g. recurrent state). Provides jitted extract/restore
+    programs whose shape space is bounded: one program per power-of-two
+    block length per batch geometry.
+    """
+
+    def __init__(self, cfg, max_len: int, dtype):
+        s1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dtype))
+        s2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dtype))
+        sl = jax.eval_shape(
+            lambda: transformer.init_states(cfg, 2, max_len + 1, dtype))
+
+        def baxis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
+
+        def paxis(a, b):
+            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+                if x != y:
+                    return i
+            return -1  # no positional axis: boundary-snapshot leaf
+
+        self.batch_axes = jax.tree.map(baxis, s1, s2)
+        self.pos_axes = jax.tree.map(paxis, s2, sl)
+        self.has_snap = any(p == -1 for p in jax.tree.leaves(self.pos_axes))
+        self.max_len = max_len
+
+        @functools.partial(jax.jit, static_argnums=(0,))
+        def extract_pos(p, batch_states, row, start):
+            """Positional-leaf slices [start, start+p) of one batch row,
+            positional axis leading. Rows past the valid span hold garbage
+            the matching restore drops via ``true_len``."""
+            def f(ba, pa, leaf):
+                if pa == -1:
+                    return jnp.zeros((0,), leaf.dtype)
+                lf = jnp.moveaxis(leaf, (ba, pa), (0, 1))[row]
+                idx = jnp.clip(start + jnp.arange(p), 0, lf.shape[0] - 1)
+                return jnp.take(lf, idx, axis=0)
+            return jax.tree.map(f, self.batch_axes, self.pos_axes, batch_states)
+
+        @functools.partial(jax.jit, static_argnums=(0,))
+        def restore_pos(p, states, block, row, start, true_len):
+            """Scatter a stored block into row ``row`` at positions
+            [start, start+true_len); the block's pow2 padding is dropped."""
+            def f(ba, pa, leaf, blk):
+                if pa == -1:
+                    return leaf
+                lf = jnp.moveaxis(leaf, (ba, pa), (0, 1))
+                ar = jnp.arange(p)
+                idx = jnp.where(ar < true_len, start + ar, lf.shape[1])
+                lf = lf.at[row, idx].set(blk.astype(lf.dtype), mode="drop")
+                return jnp.moveaxis(lf, (0, 1), (ba, pa))
+            return jax.tree.map(f, self.batch_axes, self.pos_axes, states, block)
+
+        @jax.jit
+        def extract_snap(batch_states, row):
+            def f(ba, pa, leaf):
+                if pa != -1:
+                    return jnp.zeros((0,), leaf.dtype)
+                return jnp.moveaxis(leaf, ba, 0)[row]
+            return jax.tree.map(f, self.batch_axes, self.pos_axes, batch_states)
+
+        @jax.jit
+        def restore_snap(states, snap, row):
+            def f(ba, pa, leaf, sn):
+                if pa != -1:
+                    return leaf
+                lf = jnp.moveaxis(leaf, ba, 0)
+                lf = lf.at[row].set(sn.astype(lf.dtype))
+                return jnp.moveaxis(lf, 0, ba)
+            return jax.tree.map(f, self.batch_axes, self.pos_axes, states, snap)
+
+        self.extract_pos = extract_pos
+        self.restore_pos = restore_pos
+        self.extract_snap = extract_snap
+        self.restore_snap = restore_snap
+
+    def split_block(self, block, true_len: int, m: int):
+        """Split a stored positional block at offset m -> (head, tail),
+        each re-padded to its own pow2 length. Eager (splits are rare,
+        control-plane-only)."""
+        ph, pt = _pow2(m), _pow2(true_len - m)
+
+        def head(pa, blk):
+            return blk if pa == -1 else blk[:ph]
+
+        def tail(pa, blk):
+            if pa == -1:
+                return blk
+            cut = blk[m:min(m + pt, blk.shape[0])]
+            if cut.shape[0] < pt:
+                cut = jnp.pad(cut, [(0, pt - cut.shape[0])]
+                              + [(0, 0)] * (cut.ndim - 1))
+            return cut
+
+        return (jax.tree.map(head, self.pos_axes, block),
+                jax.tree.map(tail, self.pos_axes, block))
+
+
+class _Node:
+    __slots__ = ("tokens", "children", "parent", "block", "true_len",
+                 "snap", "ref", "last_use", "nbytes", "depth_end")
+
+    def __init__(self, tokens: np.ndarray, parent: "_Node | None"):
+        self.tokens = tokens          # (K, seg) edge label
+        self.children: dict[tuple, _Node] = {}
+        self.parent = parent
+        self.block: Any = None        # positional slices, pow2-padded
+        self.true_len = int(tokens.shape[-1])
+        self.snap: Any = None         # boundary snapshot (or None)
+        self.ref = 0
+        self.last_use = 0
+        self.nbytes = 0
+        self.depth_end = 0            # absolute token depth at edge end
+
+    @property
+    def depth_start(self) -> int:
+        return self.depth_end - self.true_len
+
+
+@dataclasses.dataclass
+class PrefixMatch:
+    """Result of a radix lookup: the raw matched path plus the usable
+    (restorable) depth — constrained to snapshot boundaries for archs with
+    non-positional state and to ``limit`` (the engine always prefills at
+    least the prompt's last token to obtain logits)."""
+
+    path: list  # [(node, cols_used)]
+    raw_len: int
+    usable: int
+    snap_node: "_Node | None"
+
+
+class PrefixCache:
+    """Radix prefix cache over prompt tokens; see module docstring."""
+
+    def __init__(self, ops: StateOps, *, capacity_bytes: int):
+        self.ops = ops
+        self.capacity_bytes = int(capacity_bytes)
+        self.root = _Node(np.zeros((1, 0), np.int32), None)
+        self.bytes = 0
+        self.nodes = 0
+        self._tick = 0
+        self.stats = {"inserts": 0, "splits": 0, "evictions": 0,
+                      "evicted_bytes": 0, "snapshot_upgrades": 0}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _norm(prompt) -> np.ndarray:
+        t = np.asarray(prompt, np.int32)
+        return t[None, :] if t.ndim == 1 else t
+
+    def _touch(self, path) -> None:
+        self._tick += 1
+        for node, _ in path:
+            node.last_use = self._tick
+
+    # ------------------------------------------------------------------
+    def match(self, prompt, *, limit: int | None = None) -> PrefixMatch:
+        """Longest cached prefix of ``prompt``. ``limit`` caps the usable
+        depth (engine passes len(prompt)-1 so the suffix is never empty)."""
+        toks = self._norm(prompt)
+        length = toks.shape[-1]
+        if limit is None:
+            limit = length
+        path: list = []
+        node, depth = self.root, 0
+        while depth < length:
+            child = node.children.get(tuple(int(v) for v in toks[:, depth]))
+            if child is None:
+                break
+            seg = child.true_len
+            span = toks[:, depth:depth + seg]
+            w = span.shape[-1]
+            eq = np.all(child.tokens[:, :w] == span, axis=0)  # (w,) per column
+            m = w if eq.all() else int(np.argmax(~eq))
+            if m == 0:
+                break
+            path.append((child, m))
+            depth += m
+            if m < seg:
+                break
+            node = child
+        usable, snap_node, d = 0, None, 0
+        for n, cols in path:
+            end = d + cols
+            if self.ops.has_snap:
+                if cols == n.true_len and n.snap is not None and end <= limit:
+                    usable, snap_node = end, n
+            else:
+                usable = min(end, limit)
+            d = end
+        return PrefixMatch(path=path, raw_len=depth, usable=usable,
+                           snap_node=snap_node)
+
+    # ------------------------------------------------------------------
+    def restore(self, prompt, states, row: int, start: int):
+        """Scatter the cached prefix [0, start) of ``prompt`` into batch row
+        ``row`` of ``states``. Re-walks the tree rather than trusting a
+        caller-held :class:`PrefixMatch`: between the lookup that chose
+        ``start`` and this restore, an earlier admission group's insert may
+        have SPLIT a node on the path (re-slicing its blocks), and a stale
+        path would silently restore only part of the prefix. Splits preserve
+        content and the lookup's pin protects the path from eviction, so the
+        fresh walk always re-finds at least ``start`` usable tokens."""
+        match = self.match(prompt, limit=start)
+        assert match.usable >= start, (
+            f"cached prefix vanished between lookup and restore "
+            f"({match.usable} < {start})")
+        self._touch(match.path)
+        remaining = start
+        for node, cols in match.path:
+            if remaining <= 0:
+                break
+            take = min(cols, remaining)
+            states = self.ops.restore_pos(
+                _pow2(node.true_len), states, node.block,
+                jnp.int32(row), jnp.int32(node.depth_start), jnp.int32(take))
+            remaining -= take
+        if self.ops.has_snap and start > 0:
+            assert match.snap_node is not None
+            assert match.snap_node.depth_end == start
+            states = self.ops.restore_snap(states, match.snap_node.snap,
+                                           jnp.int32(row))
+        return states
+
+    # ------------------------------------------------------------------
+    def _split(self, node: _Node, m: int) -> _Node:
+        """Split ``node``'s edge at offset m; returns the new parent
+        covering [depth_start, depth_start+m). The new interior node has no
+        snapshot (its boundary state was never captured)."""
+        parent = node.parent
+        head_tok = node.tokens[:, :m]
+        head = _Node(head_tok, parent)
+        head.depth_end = node.depth_start + m
+        head.last_use = node.last_use
+        hb, tb = self.ops.split_block(node.block, node.true_len, m)
+        old_bytes = node.nbytes
+        head.block, head.nbytes = hb, _tree_bytes(hb)
+        node.tokens = node.tokens[:, m:]
+        node.true_len -= m
+        node.block = tb
+        node.nbytes = _tree_bytes(tb) + (
+            _tree_bytes(node.snap) if node.snap is not None else 0)
+        node.parent = head
+        parent.children[tuple(int(v) for v in head_tok[:, 0])] = head
+        head.children[tuple(int(v) for v in node.tokens[:, 0])] = node
+        self.bytes += head.nbytes + node.nbytes - old_bytes
+        self.nodes += 1
+        self.stats["splits"] += 1
+        return head
+
+    def insert(self, prompt, batch_states, row: int,
+               match: PrefixMatch | None = None) -> "_Node":
+        """Donate the full-prompt state held in ``batch_states`` row ``row``
+        to the tree, and return the deepest node covering the prompt (the
+        caller pins it with :meth:`acquire` for the request's lifetime)."""
+        toks = self._norm(prompt)
+        length = toks.shape[-1]
+        # re-walk even when the engine hands us its lookup's match: eviction
+        # or a sibling's insert in the same admission batch may have changed
+        # the tree since
+        del match
+        match = self.match(prompt)
+        depth = match.raw_len
+        node = match.path[-1][0] if match.path else self.root
+        if match.path and match.path[-1][1] < node.true_len:
+            node = self._split(node, match.path[-1][1])
+        if depth >= length:
+            # prompt fully covered; attach a snapshot at this boundary if the
+            # arch needs one and it is missing (split nodes start without)
+            if self.ops.has_snap and node.snap is None and node.parent is not None:
+                node.snap = self.ops.extract_snap(batch_states, jnp.int32(row))
+                add = _tree_bytes(node.snap)
+                node.nbytes += add
+                self.bytes += add
+                self.stats["snapshot_upgrades"] += 1
+            self._touch(match.path)
+            node.last_use = self._tick
+            self.evict_to_budget()
+            return node
+        seg = length - depth
+        leaf = _Node(toks[:, depth:], node)
+        leaf.depth_end = length
+        leaf.block = self.ops.extract_pos(
+            _pow2(seg), batch_states, jnp.int32(row), jnp.int32(depth))
+        leaf.nbytes = _tree_bytes(leaf.block)
+        if self.ops.has_snap:
+            leaf.snap = self.ops.extract_snap(batch_states, jnp.int32(row))
+            leaf.nbytes += _tree_bytes(leaf.snap)
+        node.children[tuple(int(v) for v in leaf.tokens[:, 0])] = leaf
+        self.bytes += leaf.nbytes
+        self.nodes += 1
+        self.stats["inserts"] += 1
+        self._touch(match.path + [(leaf, seg)])
+        self.evict_to_budget()
+        return leaf
+
+    # ------------------------------------------------------------------
+    def acquire(self, node: "_Node") -> "_Node":
+        node.ref += 1
+        return node
+
+    def release(self, node: "_Node") -> None:
+        assert node.ref > 0, "prefix-cache release without acquire"
+        node.ref -= 1
+        self.evict_to_budget()
+
+    # ------------------------------------------------------------------
+    def evict_to_budget(self) -> None:
+        """Drop least-recently-used unpinned leaves until under budget.
+        Interior nodes become evictable once their children go. One tree
+        walk + sort evicts a whole batch of leaves (not one walk per
+        eviction); a further pass runs only when evicting a subtree's
+        leaves exposed its interior nodes, so the cost is O(nodes log nodes)
+        per depth level actually drained — the common under-budget call is
+        a single comparison."""
+        while self.bytes > self.capacity_bytes:
+            leaves = sorted(
+                (n for n in self._iter_nodes()
+                 if not n.children and n.ref == 0 and n.parent is not None),
+                key=lambda n: n.last_use)
+            evicted = False
+            for victim in leaves:
+                if self.bytes <= self.capacity_bytes:
+                    break
+                if victim.children:
+                    continue  # gained a child? impossible mid-pass, but safe
+                del victim.parent.children[
+                    tuple(int(v) for v in victim.tokens[:, 0])]
+                self.bytes -= victim.nbytes
+                self.nodes -= 1
+                self.stats["evictions"] += 1
+                self.stats["evicted_bytes"] += victim.nbytes
+                evicted = True
+            if not evicted:
+                return  # everything pinned (or interior): over budget, stuck
+
+    def _iter_nodes(self):
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.parent is not None:
+                yield n
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        return {**self.stats, "nodes": self.nodes, "bytes": self.bytes,
+                "capacity_bytes": self.capacity_bytes}

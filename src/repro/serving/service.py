@@ -31,6 +31,7 @@ def serving_container(
     prompt_buckets: tuple[int, ...] = (32, 128, 512),
     fused: bool = True,
     sync_every: int = 1,
+    prefix_cache_bytes: int | None = None,
     name: str | None = None,
 ) -> xcontainer.XContainer:
     """Build a deployable serving container for one model.
@@ -61,6 +62,7 @@ def serving_container(
         return ServingEngine(
             cfg, params, slots=slots, max_len=max_len,
             prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every,
+            prefix_cache_bytes=prefix_cache_bytes,
             binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),

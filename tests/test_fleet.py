@@ -89,6 +89,76 @@ def test_router_bucket_affinity_prefers_hot_replica():
     assert r.route(_req(plen=40, rid=1), [cold, hot]).replica_id == 0
 
 
+def test_router_no_session_pins_recorded_when_affinity_disabled():
+    """Regression: route() used to record a pin on EVERY call even with
+    session_affinity=False, so _sessions grew by one entry per session
+    forever on a long fleet run."""
+    r = Router(session_affinity=False)
+    reps = [FakeReplica(0), FakeReplica(1, load=1)]
+    for i in range(50):
+        r.route(_req(session=f"s{i}", rid=i), reps)
+    assert len(r._sessions) == 0
+
+
+def test_router_session_pin_map_is_lru_bounded():
+    r = Router(max_sessions=4)
+    reps = [FakeReplica(0), FakeReplica(1, load=1)]
+    for i in range(10):
+        r.route(_req(session=f"s{i}", rid=i), reps)
+    assert len(r._sessions) == 4
+    assert r.stats["sessions_evicted"] == 6
+    # the survivors are the most recent sessions, oldest evicted first
+    assert list(r._sessions) == ["s6", "s7", "s8", "s9"]
+    # an evicted session simply re-routes (no stale pin, no error)
+    r.route(_req(session="s0", rid=100), reps)
+    assert "s0" in r._sessions
+    # forget_session drops a pin explicitly (drop-on-retire hook)
+    r.forget_session("s0")
+    assert "s0" not in r._sessions
+
+
+class PrefixFakeReplica(FakeReplica):
+    def __init__(self, rid, prefix_len=0, **kw):
+        super().__init__(rid, **kw)
+        self._plen = prefix_len
+
+    def cached_prefix_len(self, prompt):
+        return self._plen
+
+
+def test_router_prefix_affinity_prefers_longest_cached_prefix():
+    r = Router(session_affinity=False, bucket_affinity=False)
+    cold = PrefixFakeReplica(0, prefix_len=0)
+    warm = PrefixFakeReplica(1, prefix_len=8, load=2)
+    warmer = PrefixFakeReplica(2, prefix_len=20, load=3)
+    assert r.route(_req(), [cold, warm, warmer]).replica_id == 2
+    assert r.stats["prefix_hits"] == 1
+    # an overloaded replica loses its prefix pull (affinity never hotspots)
+    warmer.load = 100
+    assert r.route(_req(rid=1), [cold, warm, warmer]).replica_id == 1
+    # no cached prefix anywhere -> least loaded
+    warm._plen = warmer._plen = 0
+    assert r.route(_req(rid=2), [cold, warm, warmer]).replica_id == 0
+    assert r.stats["least_loaded"] == 1
+
+
+def test_router_prefix_affinity_ranks_below_session_affinity():
+    r = Router()
+    pinned = PrefixFakeReplica(0, prefix_len=0)
+    prefixy = PrefixFakeReplica(1, prefix_len=0, load=1)
+    first = r.route(_req(session="alice"), [pinned, prefixy])
+    assert first.replica_id == 0  # least loaded on first contact
+    # another replica now advertises a long cached prefix, but the returning
+    # session sticks to its pinned replica (conversation state beats prefix)
+    prefixy._plen = 30
+    again = r.route(_req(session="alice", rid=1), [pinned, prefixy])
+    assert again.replica_id == 0
+    assert r.stats["session_hits"] == 1
+    # a session-less fresh request does follow the prefix signal
+    assert r.route(_req(session="bob", rid=2), [pinned, prefixy]).replica_id == 1
+    assert r.stats["prefix_hits"] == 1
+
+
 def test_router_forget_replica_unpins_sessions():
     r = Router()
     reps = [FakeReplica(0), FakeReplica(1, load=1)]
@@ -210,7 +280,7 @@ def test_engines_share_compiled_program_bundle_per_geometry():
     e1 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
     e2 = ServingEngine(cfg, params, slots=2, max_len=64, prompt_buckets=(8, 16))
     assert e1._fused_step is e2._fused_step  # same jit program object
-    assert e1._prefill_batch is e2._prefill_batch
+    assert e1._prefill_chunk is e2._prefill_chunk
     e3 = ServingEngine(cfg, params, slots=4, max_len=64, prompt_buckets=(8, 16))
     assert e3._fused_step is not e1._fused_step  # geometry changes the key
 

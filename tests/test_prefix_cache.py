@@ -1,0 +1,278 @@
+"""Radix prefix cache: tree mechanics (match/insert/split/refcount/LRU),
+engine-level token parity with reuse enabled, snapshot-boundary semantics for
+recurrent archs, eviction under pressure, and fleet-level prefix affinity."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving.engine import Request, ServingEngine, _programs_for
+from repro.serving.prefix_cache import PrefixCache
+
+MAX_LEN = 64
+
+
+@functools.lru_cache(maxsize=4)
+def _model(arch="qwen2-0.5b"):
+    cfg = configs.get_config(arch + "-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _cache(arch="qwen2-0.5b", capacity=64 << 20):
+    cfg, _ = _model(arch)
+    ops = _programs_for(cfg, 2, MAX_LEN, None).state_ops
+    return PrefixCache(ops, capacity_bytes=capacity), cfg
+
+
+def _fake_states(cfg, n=1):
+    import jax.numpy as jnp
+    return transformer.init_states(cfg, n, MAX_LEN, jnp.dtype(cfg.activ_dtype))
+
+
+def _engine(arch="qwen2-0.5b", cache_bytes=None, **kw):
+    cfg, params = _model(arch)
+    kw = {"slots": 3, "max_len": MAX_LEN, "prompt_buckets": (8, 16, 32), **kw}
+    return cfg, ServingEngine(cfg, params, prefix_cache_bytes=cache_bytes, **kw)
+
+
+def _serve(eng, reqs):
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(request_id=i, prompt=p, max_new_tokens=m))
+    res = eng.run_to_completion()
+    return {k: res[k].tokens for k in sorted(res)}
+
+
+def _shared_prefix_reqs(vocab, n=8, plen=20, seed=0, lead=()):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, vocab, lead + (plen,)).astype(np.int32)
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, lead + (4 + i % 3,)).astype(np.int32)
+        out.append((np.concatenate([sys_prompt, tail], axis=-1), 3 + i % 3))
+    return out
+
+
+# ----------------------------------------------------------------------
+# radix tree mechanics (no engine, structure only)
+# ----------------------------------------------------------------------
+
+def test_radix_insert_match_and_split():
+    cache, cfg = _cache()
+    st = _fake_states(cfg)
+    a = np.array([1, 2, 3, 4, 5], np.int32)
+    cache.insert(a, st, 0)
+    assert cache.nodes == 1
+    m = cache.match(np.array([1, 2, 3, 9], np.int32))
+    assert m.raw_len == 3
+    assert m.usable == 3  # pure-KV arch: arbitrary token granularity
+    # limit caps usable (engine always prefills the last prompt token)
+    assert cache.match(np.array([1, 2, 3, 4, 5], np.int32), limit=4).usable == 4
+    # inserting the divergent prompt splits the edge at the fork
+    cache.insert(np.array([1, 2, 3, 9], np.int32), st, 0)
+    assert cache.stats["splits"] == 1
+    assert cache.nodes == 3  # [1,2,3] + [4,5] + [9]
+    assert cache.match(a).raw_len == 5
+    # exact re-insert adds nothing
+    n = cache.nodes
+    cache.insert(a, st, 0)
+    assert cache.nodes == n
+
+
+def test_radix_no_match_on_cold_tree_and_foreign_prompt():
+    cache, cfg = _cache()
+    st = _fake_states(cfg)
+    assert cache.match(np.array([7, 8], np.int32)).usable == 0
+    cache.insert(np.array([1, 2, 3], np.int32), st, 0)
+    assert cache.match(np.array([7, 8], np.int32)).usable == 0
+
+
+def test_refcount_pins_against_eviction_lru_order():
+    cache, cfg = _cache()
+    st = _fake_states(cfg)
+    n1 = cache.insert(np.array([1, 2, 3, 4], np.int32), st, 0)
+    n2 = cache.insert(np.array([9, 8, 7, 6], np.int32), st, 0)
+    per_node = n1.nbytes
+    cache.acquire(n1)
+    cache.capacity_bytes = per_node  # room for exactly one node
+    cache.evict_to_budget()
+    # n2 is LRU-newer but unpinned; n1 is older but pinned -> n2 evicted
+    assert cache.stats["evictions"] == 1
+    assert cache.match(np.array([1, 2, 3, 4], np.int32)).raw_len == 4
+    assert cache.match(np.array([9, 8, 7, 6], np.int32)).raw_len == 0
+    # release unpins; the next budget pass can evict it
+    cache.release(n1)
+    cache.capacity_bytes = 0
+    cache.evict_to_budget()
+    assert cache.match(np.array([1, 2, 3, 4], np.int32)).raw_len == 0
+    assert cache.bytes == 0 and cache.nodes == 0
+
+
+def test_interior_nodes_survive_until_children_evicted():
+    cache, cfg = _cache()
+    st = _fake_states(cfg)
+    cache.insert(np.array([1, 2, 3, 4], np.int32), st, 0)
+    cache.insert(np.array([1, 2, 3, 9], np.int32), st, 0)  # splits at 3
+    assert cache.nodes == 3
+    cache.capacity_bytes = 0
+    cache.evict_to_budget()  # leaves first, then the exposed interior node
+    assert cache.nodes == 0 and cache.bytes == 0
+
+
+def test_snapshot_boundary_semantics_for_recurrent_arch():
+    """Recurrent state can't be sliced mid-edge: a prefix is only usable at
+    a snapshot boundary (= the end of a previously inserted prompt)."""
+    cache, cfg = _cache("recurrentgemma-9b")
+    assert cache.ops.has_snap
+    st = _fake_states(cfg)
+    full = np.array([1, 2, 3, 4, 5], np.int32)
+    cache.insert(full, st, 0)
+    # mid-edge raw match, but no snapshot at depth 3 -> unusable
+    m = cache.match(np.array([1, 2, 3, 9], np.int32))
+    assert m.raw_len == 3 and m.usable == 0
+    # exact-boundary extension IS usable (the multi-turn case)
+    m2 = cache.match(np.concatenate([full, [7, 7]]).astype(np.int32))
+    assert m2.usable == 5 and m2.snap_node is not None
+    # a later insert landing exactly on a split point upgrades it with a
+    # snapshot, making the shared prefix usable from then on
+    cache.insert(np.array([1, 2, 3, 9], np.int32), st, 0)   # split at 3
+    assert cache.match(np.array([1, 2, 3, 8], np.int32)).usable == 0
+    cache.insert(np.array([1, 2, 3], np.int32), st, 0)      # boundary insert
+    assert cache.stats["snapshot_upgrades"] == 1
+    assert cache.match(np.array([1, 2, 3, 8], np.int32)).usable == 3
+
+
+# ----------------------------------------------------------------------
+# engine integration: parity, stats, eviction under pressure
+# ----------------------------------------------------------------------
+
+def test_engine_shared_prefix_parity_and_savings():
+    cfg, e0 = _engine()
+    reqs = _shared_prefix_reqs(cfg.vocab_size)
+    base = _serve(e0, reqs)
+    cfg, e1 = _engine(cache_bytes=64 << 20)
+    out = _serve(e1, reqs)
+    assert out == base  # token parity is non-negotiable
+    assert e1.stats["prefix_hits"] > 0
+    assert e1.stats["prefix_hit_tokens"] > 0
+    assert e1.stats["prefill_tokens"] < e0.stats["prefill_tokens"]
+    assert e1.prefix_cache.nodes > 0
+
+
+def test_restore_survives_same_batch_split():
+    """Regression: a lookup's PrefixMatch can go stale within one _admit
+    call — an earlier suffix-bucket group's insert may SPLIT a node on the
+    match's path (re-slicing its blocks). restore() must re-walk the tree,
+    or the later group silently restores only the post-split segment and
+    leaves zeros where the prefix head belongs."""
+    cfg, _ = _model()
+    rng = np.random.default_rng(11)
+    base6 = rng.integers(0, cfg.vocab_size, (6,), dtype=np.int32)
+    # same _admit batch, different suffix buckets:
+    #   A diverges at depth 3 -> its insert splits the leaf at 3
+    #   B extends the full leaf -> its (pre-split) match is now stale
+    a = np.concatenate(
+        [base6[:3], rng.integers(0, cfg.vocab_size, (12,))]).astype(np.int32)
+    b = np.concatenate(
+        [base6, rng.integers(0, cfg.vocab_size, (2,))]).astype(np.int32)
+
+    def serve(cache_bytes):
+        _, eng = _engine(cache_bytes=cache_bytes, slots=3)
+        eng.submit(Request(request_id=0, prompt=base6, max_new_tokens=2))
+        eng.run_to_completion()  # seeds the tree with the 6-token leaf
+        eng.submit(Request(request_id=1, prompt=a, max_new_tokens=4))
+        eng.submit(Request(request_id=2, prompt=b, max_new_tokens=4))
+        eng.run_to_completion()
+        return {k: r.tokens for k, r in eng.results.items()}, eng
+
+    base, _ = serve(None)
+    out, eng = serve(64 << 20)
+    assert eng.prefix_cache.stats["splits"] == 1  # the hazard actually fired
+    assert eng.stats["prefix_hits"] == 2
+    assert out == base
+
+
+def test_engine_parity_under_eviction_pressure():
+    cfg, e0 = _engine()
+    reqs = _shared_prefix_reqs(cfg.vocab_size, n=10, seed=3)
+    base = _serve(e0, reqs)
+    # budget sized to a couple of nodes: constant eviction churn mid-stream
+    cfg, e1 = _engine(cache_bytes=40_000)
+    out = _serve(e1, reqs)
+    assert out == base
+    assert e1.prefix_cache.stats["evictions"] > 0
+
+
+def test_engine_multi_turn_parity_recurrent_arch():
+    cfg, _ = _model("recurrentgemma-9b")
+    rng = np.random.default_rng(0)
+    t1 = rng.integers(0, cfg.vocab_size, (12,)).astype(np.int32)
+    t2 = np.concatenate([t1, rng.integers(0, cfg.vocab_size, (6,))]).astype(np.int32)
+    t3 = np.concatenate([t2, rng.integers(0, cfg.vocab_size, (5,))]).astype(np.int32)
+
+    def serve(cache_bytes):
+        _, eng = _engine("recurrentgemma-9b", cache_bytes=cache_bytes, slots=2)
+        for i, p in enumerate([t1, t2, t3]):
+            eng.submit(Request(request_id=i, prompt=p, max_new_tokens=3))
+            eng.run_to_completion()  # turns arrive sequentially
+        return {k: r.tokens for k, r in eng.results.items()}, eng
+
+    base, _ = serve(None)
+    out, eng = serve(64 << 20)
+    assert out == base
+    assert eng.stats["prefix_hits"] == 2  # turns 2 and 3 restore turn n-1
+    assert eng.stats["prefix_hit_tokens"] == len(t1) + len(t2)
+
+
+def test_engine_audio_prefix_parity():
+    cfg, _ = _model("musicgen-medium")
+    reqs = _shared_prefix_reqs(cfg.vocab_size, n=6, plen=12, seed=1,
+                               lead=(cfg.num_codebooks,))
+    _, e0 = _engine("musicgen-medium", slots=2)
+    base = _serve(e0, reqs)
+    _, e1 = _engine("musicgen-medium", cache_bytes=64 << 20, slots=2)
+    out = _serve(e1, reqs)
+    assert out == base
+    assert e1.stats["prefix_hits"] > 0
+
+
+def test_engine_legacy_path_uses_cache_too():
+    cfg, e0 = _engine(fused=False)
+    reqs = _shared_prefix_reqs(cfg.vocab_size, n=6)
+    base = _serve(e0, reqs)
+    cfg, e1 = _engine(cache_bytes=64 << 20, fused=False)
+    out = _serve(e1, reqs)
+    assert out == base
+    assert e1.stats["prefix_hits"] > 0
+
+
+def test_warmup_precompiles_cache_programs():
+    cfg, eng = _engine(cache_bytes=64 << 20, slots=2)
+    eng.warmup()
+    reqs = _shared_prefix_reqs(cfg.vocab_size, n=4)
+    out = _serve(eng, reqs)
+    assert sorted(out) == [0, 1, 2, 3]
+    assert eng.stats["prefix_hits"] > 0
+
+
+def test_slot_pins_release_on_retire():
+    cfg, eng = _engine(cache_bytes=64 << 20)
+    reqs = _shared_prefix_reqs(cfg.vocab_size, n=6)
+    _serve(eng, reqs)
+    assert all(p is None for p in eng._slot_pins)
+    for node in eng.prefix_cache._iter_nodes():
+        assert node.ref == 0, "leaked prefix pin after retirement"
+
+
+def test_max_new_one_request_does_not_leak_pins():
+    cfg, eng = _engine(cache_bytes=64 << 20)
+    prompt = np.arange(10, dtype=np.int32)
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=3))
+    eng.run_to_completion()
+    eng.submit(Request(request_id=1, prompt=prompt, max_new_tokens=1))
+    eng.run_to_completion()
+    for node in eng.prefix_cache._iter_nodes():
+        assert node.ref == 0

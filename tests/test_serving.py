@@ -49,10 +49,12 @@ def test_greedy_engine_matches_manual_decode():
     eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=5))
     result = eng.run_to_completion()[0]
 
-    # manual greedy reference with the left-padded bucket the engine used
-    bucket = 16
-    padded = jnp.pad(jnp.asarray(prompt), (bucket - len(prompt), 0))[None]
-    logits, states, lengths = transformer.prefill(params, cfg, padded, 128)
+    # manual greedy reference: exact-length prefill at absolute positions
+    # [0, L) — the engine's right-aligned layout makes its bucket padding
+    # transparent (pads sit causally after the prompt and are never written
+    # into the caches)
+    logits, states, lengths = transformer.prefill(
+        params, cfg, jnp.asarray(prompt)[None], 128)
     toks = [int(jnp.argmax(logits[0]))]
     cur = jnp.argmax(logits, -1).astype(jnp.int32)
     for _ in range(4):
@@ -198,17 +200,24 @@ def test_slot_recycling_after_eos_retirement():
 def test_overlong_prompt_lands_in_max_len_bucket():
     """A prompt longer than the largest configured bucket but <= max_len pads
     into the implicit max_len bucket instead of crashing on a negative pad.
-    With the bucket consuming the whole cache there is no decode room left,
-    so the request completes with its prefill token (and a logged warning)."""
+    Decode room is governed by the REAL prompt length (right-aligned layout),
+    so a 100-token prompt in a 128-entry cache still gets its 4 tokens."""
     cfg, params, eng = _engine()  # buckets (16, 32), max_len 128
     assert eng.prompt_buckets[-1] == 128
     prompt = np.arange(100, dtype=np.int32) % cfg.vocab_size
     eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=4))
     res = eng.run_to_completion()
-    assert len(res[0].tokens) == 1  # truncated to the available room
+    assert len(res[0].tokens) == 4  # room = max_len - 100 + 1 = 29 >= 4
+    # a prompt that fills the whole cache leaves no decode room: it completes
+    # with its prefill token and a logged truncation warning
+    eng.submit(Request(request_id=1,
+                       prompt=np.arange(128, dtype=np.int32) % cfg.vocab_size,
+                       max_new_tokens=4))
+    res = eng.run_to_completion()
+    assert len(res[1].tokens) == 1
     # beyond max_len is rejected up front
     with pytest.raises(ValueError):
-        eng.submit(Request(request_id=1,
+        eng.submit(Request(request_id=2,
                            prompt=np.zeros(300, np.int32), max_new_tokens=1))
 
 
@@ -225,6 +234,27 @@ def test_max_new_tokens_one_yields_exactly_one_token():
     assert len(res[1].tokens) == 3
     # the 1-token request's first token matches the longer request's first
     assert res[0].tokens[0] == res[1].tokens[0]
+
+
+def test_admission_refills_slots_when_requests_retire_at_admission():
+    """Requests retired AT admission (max_new_tokens=1) must not consume the
+    admission budget: the engine refills from the queue within the same
+    _admit call, so slots are saturated instead of idling a full step."""
+    cfg, params, eng = _engine(slots=2)
+    for i in range(2):  # these retire straight from the prefill logits
+        eng.submit(Request(request_id=i, prompt=np.arange(4, dtype=np.int32),
+                           max_new_tokens=1))
+    for i in range(2, 4):  # these need decode slots
+        eng.submit(Request(request_id=i, prompt=np.arange(6, dtype=np.int32),
+                           max_new_tokens=4))
+    eng.step()
+    # both 1-token requests done AND both slots occupied by the decoders
+    assert sorted(eng.results) == [0, 1]
+    assert sum(r is not None for r in eng.active) == 2, (
+        "slots left idle while the queue was non-empty")
+    res = eng.run_to_completion()
+    assert sorted(res) == [0, 1, 2, 3]
+    assert [len(res[i].tokens) for i in range(4)] == [1, 1, 4, 4]
 
 
 def test_duplicate_request_id_rejected():
@@ -263,6 +293,44 @@ def test_run_to_completion_reports_unserved_on_truncation():
                         max_new_tokens=3))
     eng2.run_to_completion()
     assert eng2.stats["unserved"] == 0
+
+
+def test_audio_eos_parity_fused_vs_legacy():
+    """Audio EOS convention: generation stops when CODEBOOK 0 of a sampled
+    frame equals eos_id. The fused path evaluates this on device
+    (toks[:, 0] == eos inside the jitted step); the legacy host loop checks
+    t[0] on the host — this test pins the two to byte-identical streams
+    (including eos_id=0, sync-window batching, and slot recycling) so a
+    divergence in either side's EOS handling can never land silently."""
+    cfg = configs.get_config("musicgen-medium-smoke")
+    params = transformer.init_model(jax.random.key(1), cfg)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab_size, (cfg.num_codebooks, 4 + i),
+                            dtype=np.int32) for i in range(5)]
+
+    def serve(fused, eos_list, sync_every=1):
+        eng = ServingEngine(cfg, params, slots=2, max_len=32,
+                            prompt_buckets=(8, 16), fused=fused,
+                            sync_every=sync_every)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(request_id=i, prompt=p, max_new_tokens=12,
+                               eos_id=eos_list[i]))
+        res = eng.run_to_completion()
+        return {k: res[k].tokens for k in sorted(res)}
+
+    # harvest real mid-stream codebook-0 values to use as per-request eos ids
+    base = serve(True, [None] * 5)
+    eos = [int(base[i][min(2, len(base[i]) - 1)][0]) for i in range(5)]
+    eos[-1] = 0  # the zero token must behave like any other eos value
+    for sync_every in (1, 4):
+        fused = serve(True, eos, sync_every=sync_every)
+        legacy = serve(False, eos)
+        assert fused == legacy
+    # at least one request actually stopped on EOS (not just max_new)
+    stopped = [i for i in range(5) if len(fused[i]) < 12]
+    assert stopped, "no request hit its EOS token — test vacuous"
+    for i in stopped:
+        assert fused[i][-1][0] == eos[i] or len(fused[i]) == 12
 
 
 def test_audio_batched_admission_and_recycling():

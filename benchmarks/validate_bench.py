@@ -19,6 +19,9 @@ Two modes (both pure stdlib — no jsonschema dependency in the image):
         * serving fused speedup     — same-machine ratio, 20%
         * fleet p99 latency         — virtual-time (deterministic), 20%
         * prefix prefill reduction  — token-count ratio (deterministic), 20%
+        * spec tok/s                — advisory (wall clock, as above)
+        * spec decode speedup       — same-machine ratio, 20%
+        * spec acceptance rate      — deterministic token-count ratio, 20%
 
     PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
 """
@@ -78,6 +81,18 @@ _SCHEMAS = {
         ("fleet.prefix_affinity_routes", int, "> 0", lambda v: v > 0),
         ("fleet.hit_rate", (int, float), "> 0", lambda v: v > 0),
     ],
+    "BENCH_spec.json": [
+        ("benchmark", str, "== speculative", lambda v: v == "speculative"),
+        ("speedup", (int, float), ">= 1.5 (headline claim)",
+         lambda v: v >= 1.5),
+        ("acceptance_rate", (int, float), "in (0, 1]",
+         lambda v: 0 < v <= 1),
+        ("token_parity", bool, "greedy streams byte-identical",
+         lambda v: v is True),
+        ("step_reduction", (int, float), "> 1", lambda v: v > 1),
+        ("modes", list, ">= 2 modes", lambda v: len(v) >= 2),
+        ("modes.1.tpot_p50_s", (int, float), ">= 0", lambda v: v >= 0),
+    ],
 }
 
 # (label, file, json path, direction, allowed fractional regression)
@@ -94,6 +109,10 @@ _HEADLINES = [
     ("fleet p99 latency (virtual s)", "BENCH_fleet.json",
      "scenarios.autoscaled.latency_p99_s", "lower", 0.20),
     ("prefix prefill reduction", "BENCH_prefix.json", "prefill_reduction",
+     "higher", 0.20),
+    ("spec tok/s", "BENCH_spec.json", "modes.1.tok_s", "higher", None),
+    ("spec decode speedup", "BENCH_spec.json", "speedup", "higher", 0.20),
+    ("spec acceptance rate", "BENCH_spec.json", "acceptance_rate",
      "higher", 0.20),
 ]
 

@@ -207,6 +207,12 @@ class ServingExecutor:
       * ``serve_decode``: decode-step executions, billed with FLOPs/bytes
         from the deployment's compiled ``decode`` artifact (the same
         compiled-truth rule the rest of accounting follows).
+      * ``serve_spec_verify``: replaces ``serve_decode`` on speculative
+        engines — billed per decode-equivalent *position* verified (k+1
+        per speculative step), so drafted-but-REJECTED work is still on the
+        lease holder's bill: the tenant pays for the compute the proposer
+        gambled, and the per-tenant token ledger still reconciles because
+        ``serve_tokens`` only ever counts emitted tokens.
       * ``serve_tokens``: the per-token usage line (the FaaS billing quantum
         lifted to continuous batching) — queryable via
         ``Meter.served_tokens(tenant)``.
@@ -229,6 +235,7 @@ class ServingExecutor:
         self.tenant_of = tenant_of
         self._tokens_billed: dict[int, int] = {}  # request_id -> tokens billed
         self._metered_steps = 0
+        self._metered_positions = 0  # speculative verify positions billed
 
     def warmup(self) -> dict | None:
         """Pre-compile the engine's data-plane programs (warm-start).
@@ -279,7 +286,25 @@ class ServingExecutor:
             art = None
         steps = self.engine.stats["decode_steps"] - self._metered_steps
         job_id = f"lease-{self.lease.lease_id}"
-        if steps > 0:
+        speculating = getattr(self.engine, "spec", None) is not None
+        if speculating:
+            # bill decode-equivalent verified POSITIONS, not program steps:
+            # each speculative step runs k+1 positions' worth of target
+            # compute, and the rejected share is real FLOPs the lease
+            # gambled — it must land on the bill even though serve_tokens
+            # never counts it
+            positions = (self.engine.stats["spec_positions"]
+                         - self._metered_positions)
+            if positions > 0:
+                if wall_s <= 0.0 and art is not None:
+                    wall_s = model_step_time(art) * positions
+                self.service.meter.record(
+                    tenant=self.lease.tenant, kind="serve_spec_verify",
+                    steps=positions, chips=self.lease.chips, wall_s=wall_s,
+                    artifact=art, job_id=job_id)
+                self._metered_positions += positions
+            self._metered_steps = self.engine.stats["decode_steps"]
+        elif steps > 0:
             if wall_s <= 0.0 and art is not None:
                 # shutdown-path flush with no measured window: bill the
                 # delta at the roofline-modeled step time (same rule as

@@ -67,6 +67,13 @@ class FleetConfig:
     sync_every: int = 1
     # radix prefix-cache byte budget per replica (0 disables KV reuse)
     prefix_cache_mb: float = 16.0
+    # speculative decoding per replica (0 disables): every engine drafts
+    # spec_k tokens per step and verifies them in one fused program with
+    # lossless rejection sampling; acceptance telemetry lands per replica
+    # in the fleet report
+    spec_k: int = 0
+    spec_proposer: str = "ngram"   # "ngram" | "draft"
+    spec_draft_arch: str | None = None
     # virtual-time knobs
     tick_s: float = 0.05          # one fused decode round per replica per tick
     warm_boot_s: float = 0.5      # deployment cache hit: engine boot only
@@ -250,6 +257,14 @@ class FleetReport:
     latency_p50_s: float
     latency_p95_s: float
     latency_p99_s: float
+    # real wall-clock engine-side latency telemetry (unlike the virtual-time
+    # latencies above): TTFT = submit -> first token on the host, TPOT =
+    # decode wall per output token after the first, aggregated over every
+    # completed request across replicas
+    ttft_p50_s: float
+    ttft_p95_s: float
+    tpot_p50_s: float
+    tpot_p95_s: float
     tokens_per_s: float            # virtual-time throughput
     serving_chip_s: float          # chip-seconds held by SERVICE leases
     utilization: float             # cluster busy fraction (all job classes)
@@ -261,6 +276,7 @@ class FleetReport:
     metered_by_tenant: dict[str, int]
     reconciled: bool               # ledger totals match served tokens per tenant
     prefix_cache: dict             # fleet-wide prefix reuse + router affinity
+    speculative: dict              # fleet-wide draft/accept telemetry
     replicas: list[dict]
     batch: dict
     decisions: list[tuple[float, str, str]]
@@ -554,6 +570,25 @@ class FleetManager:
 
         per_replica_prefix = {r.replica_id: _replica_prefix(r)
                               for r in self.replicas}
+        per_replica_spec = {r.replica_id: r.engine.spec_summary()
+                            for r in self.replicas}
+        sagg = [s for s in per_replica_spec.values() if s]
+        drafted = sum(s["drafted"] for s in sagg)
+        accepted = sum(s["accepted"] for s in sagg)
+        spec_summary = {
+            "enabled": bool(sagg),
+            "drafted": drafted,
+            "accepted": accepted,
+            "acceptance_rate": round(accepted / max(drafted, 1), 4),
+            "steps": sum(s["steps"] for s in sagg),
+        }
+        ttfts, tpots = [], []
+        for r in self.replicas:
+            for res in r.engine.results.values():
+                ttfts.append(res.ttft_s)
+                if len(res.tokens) > 1:
+                    tpots.append(res.tpot_s)
+        rpct = (lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0)
         agg = [p for p in per_replica_prefix.values() if p]
         hits = sum(p["hits"] for p in agg)
         misses = sum(p["misses"] for p in agg)
@@ -575,6 +610,10 @@ class FleetManager:
             latency_p50_s=pct(50),
             latency_p95_s=pct(95),
             latency_p99_s=pct(99),
+            ttft_p50_s=rpct(ttfts, 50),
+            ttft_p95_s=rpct(ttfts, 95),
+            tpot_p50_s=rpct(tpots, 50),
+            tpot_p95_s=rpct(tpots, 95),
             tokens_per_s=tokens / max(self.now, 1e-9),
             serving_chip_s=serving_chip_s,
             utilization=self.cluster.utilization(),
@@ -586,6 +625,7 @@ class FleetManager:
             metered_by_tenant=metered,
             reconciled=reconciled,
             prefix_cache=prefix_summary,
+            speculative=spec_summary,
             replicas=[{
                 "id": r.replica_id,
                 "boot": r.boot,
@@ -594,6 +634,7 @@ class FleetManager:
                           if r.released_s is not None else None),
                 "state": r.state.value,
                 "prefix": per_replica_prefix[r.replica_id],
+                "spec": per_replica_spec[r.replica_id],
                 "tiers": ({api: c["provider"]
                            for api, c in r.manifest.get("apis", {}).items()}
                           if r.manifest else None),
@@ -618,10 +659,16 @@ class FleetManager:
         fleet = fleet or FleetConfig()
         profile = profile or recompile.PORTABLE_CPU
         service = InvocationService(scheduler.Cluster(chips=chips))
+        spec = None
+        if fleet.spec_k > 0:
+            from repro.serving.speculative import SpecConfig
+            spec = SpecConfig(k=fleet.spec_k, proposer=fleet.spec_proposer,
+                              draft_arch=fleet.spec_draft_arch)
         cont = serving_container(
             cfg, params, slots=fleet.slots, max_len=fleet.max_len,
             prompt_buckets=fleet.prompt_buckets, sync_every=fleet.sync_every,
-            prefix_cache_bytes=int(fleet.prefix_cache_mb * (1 << 20)) or None)
+            prefix_cache_bytes=int(fleet.prefix_cache_mb * (1 << 20)) or None,
+            spec=spec)
         batch = None
         if batch_jobs:
             batch = BatchWorkload(service.cluster, step_s=batch_step_s,

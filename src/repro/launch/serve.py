@@ -41,11 +41,18 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         smoke: bool = True, temperature: float = 0.0, seed: int = 0,
         tenant: str = "serve-demo", fused: bool = True,
         sync_every: int = 1, prefix_cache_mb: float = 0.0,
-        shared_prefix_len: int = 0) -> dict:
+        shared_prefix_len: int = 0, spec_k: int = 0,
+        spec_proposer: str = "ngram", draft_arch: str | None = None) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
     params = transformer.init_model(jax.random.key(seed), cfg)
+
+    spec = None
+    if spec_k > 0:
+        from repro.serving.speculative import SpecConfig
+        spec = SpecConfig(k=spec_k, proposer=spec_proposer,
+                          draft_arch=draft_arch)
 
     # control plane: schedule chips, deploy the container, boot the engine
     profile = recompile.PORTABLE_CPU
@@ -53,7 +60,7 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
                              prompt_buckets=(32, 64, 128), fused=fused,
                              sync_every=sync_every,
                              prefix_cache_bytes=int(prefix_cache_mb * (1 << 20))
-                             or None)
+                             or None, spec=spec)
     cluster = scheduler.Cluster(chips=profile.chips)
     service = InvocationService(cluster)
     # the executor is a context manager: the SERVICE lease is released on
@@ -102,6 +109,16 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         print(f"prefix cache: {hits}/{hits + misses} hits "
               f"({stats['prefix_hit_tokens']} prompt tokens restored, "
               f"{stats['prefill_tokens']} padded positions prefilled)")
+    if spec is not None:
+        sm = executor.engine.spec_summary()
+        print(f"speculative[{sm['proposer']} k={sm['k']}]: "
+              f"{sm['accepted']}/{sm['drafted']} drafts accepted "
+              f"({sm['acceptance_rate']:.0%}), "
+              f"{sm['tokens_per_slot_step']:.2f} tokens/slot-step")
+    lat = executor.engine.latency_summary()
+    print(f"latency: ttft p50 {lat['ttft_p50_s'] * 1e3:.1f}ms "
+          f"p95 {lat['ttft_p95_s'] * 1e3:.1f}ms | tpot p50 "
+          f"{lat['tpot_p50_s'] * 1e3:.1f}ms p95 {lat['tpot_p95_s'] * 1e3:.1f}ms")
     print(f"ledger[{tenant}]: {ledger_tokens} tokens metered, "
           f"${billed:.6f} billed across "
           f"{len([b for b in service.meter.bills if b.tenant == tenant])} line items")
@@ -115,7 +132,9 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               max_replicas: int = 4, slots: int = 2, max_len: int = 64,
               duration_s: float = 24.0, batch_jobs: int = 2,
               batch_steps: int = 30, prefix_cache_mb: float = 16.0,
-              shared_prefix_len: int = 0, multi_turn: bool = False) -> dict:
+              shared_prefix_len: int = 0, multi_turn: bool = False,
+              spec_k: int = 0, spec_proposer: str = "ngram",
+              draft_arch: str | None = None) -> dict:
     """Drive the elastic fleet live: same control plane the benchmark
     simulates (repro.fleet), printed as an operator would see it."""
     from repro import fleet as fl
@@ -137,7 +156,9 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                max_replicas=max_replicas, slots=slots,
                                max_len=max_len, prompt_buckets=(8, 16, 32),
                                tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5,
-                               prefix_cache_mb=prefix_cache_mb)
+                               prefix_cache_mb=prefix_cache_mb,
+                               spec_k=spec_k, spec_proposer=spec_proposer,
+                               spec_draft_arch=draft_arch)
     fm = fl.FleetManager.build(
         cfg, params, chips=chips, fleet=fleet_cfg,
         batch_jobs=[(1, batch_steps)] * batch_jobs)
@@ -160,6 +181,13 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               f"({pc['hit_tokens']} tokens restored) | router: "
               f"{pc['prefix_affinity_routes']} prefix-affinity routes, "
               f"{pc['session_affinity_routes']} session routes")
+    sp = report.speculative
+    if sp.get("enabled"):
+        print(f"speculative: {sp['accepted']}/{sp['drafted']} drafts "
+              f"accepted ({sp['acceptance_rate']:.0%}) across "
+              f"{sp['steps']} verify steps")
+    print(f"engine latency: ttft p95 {report.ttft_p95_s * 1e3:.1f}ms | "
+          f"tpot p95 {report.tpot_p95_s * 1e3:.1f}ms (real wall clock)")
     for t, what in fm.timeline:
         print(f"  [{t:7.2f}s] {what}")
     for tenant in sorted(report.tokens_by_tenant):
@@ -201,6 +229,12 @@ def main() -> None:
                          "request (per tenant in fleet mode)")
     ap.add_argument("--multi-turn", action="store_true",
                     help="fleet sessions extend their previous prompt")
+    ap.add_argument("--spec-k", type=int, default=0,
+                    help="speculative decoding: drafts per step (0 disables)")
+    ap.add_argument("--spec-proposer", default="ngram",
+                    choices=["ngram", "draft"])
+    ap.add_argument("--draft-arch", default=None,
+                    help="draft model config id (with --spec-proposer draft)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.fleet:
@@ -211,7 +245,9 @@ def main() -> None:
                   duration_s=args.duration, batch_jobs=args.batch_jobs,
                   prefix_cache_mb=args.prefix_cache_mb,
                   shared_prefix_len=args.shared_prefix,
-                  multi_turn=args.multi_turn)
+                  multi_turn=args.multi_turn, spec_k=args.spec_k,
+                  spec_proposer=args.spec_proposer,
+                  draft_arch=args.draft_arch)
         return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
@@ -219,7 +255,8 @@ def main() -> None:
               temperature=args.temperature, tenant=args.tenant,
               fused=not args.unfused, sync_every=args.sync_every,
               prefix_cache_mb=args.prefix_cache_mb,
-              shared_prefix_len=args.shared_prefix)
+              shared_prefix_len=args.shared_prefix, spec_k=args.spec_k,
+              spec_proposer=args.spec_proposer, draft_arch=args.draft_arch)
     assert len(out["results"]) == args.requests
     assert out["ledger_tokens"] == out["tokens"]
 

@@ -341,20 +341,10 @@ def prefill(params, cfg, tokens, max_len: int, *, patch_embeds=None):
     return logits[:, 0], states, lengths
 
 
-def prefill_chunk(params, cfg, tokens, states, start, lengths):
-    """Continue a prefill from per-row position ``start``: process a
-    (right-padded) token chunk at absolute positions [start, start+Sc) on top
-    of existing serving ``states`` (e.g. a prefix restored from a prefix
-    cache; fresh init_states + start=0 gives a plain ragged prefill).
-
-    tokens: (B, Sc) int32 ((B, K, Sc) audio), each row's real suffix at the
-    FRONT, zero-padded at the tail; start: (B,) int32 prefix lengths already
-    in ``states``; lengths: (B,) int32 total valid entries after the chunk
-    (start + real chunk length, >= start + 1).
-
-    Returns (logits at each row's last real position (B, V) f32 ((B, K, V)
-    audio), new_states, lengths).
-    """
+def _chunk_embed(params, cfg, tokens, start):
+    """Embed a continuation chunk at absolute positions start + [0, Sc).
+    Shared front end of :func:`prefill_chunk` and :func:`verify_chunk`.
+    Returns (x (B, Sc, D), positions (B, Sc))."""
     if cfg.frontend == "vlm":
         raise NotImplementedError(
             "chunked prefill does not support the vlm frontend")
@@ -376,7 +366,24 @@ def prefill_chunk(params, cfg, tokens, states, start, lengths):
         pe = jnp.zeros((b, s, d), jnp.float32)
         pe = pe.at[..., 0::2].set(jnp.sin(ang)).at[..., 1::2].set(jnp.cos(ang))
         x = x + pe.astype(x.dtype)
-    x = sharding.constraint(x, "batch", "seq", "embed")
+    return sharding.constraint(x, "batch", "seq", "embed"), positions
+
+
+def prefill_chunk(params, cfg, tokens, states, start, lengths):
+    """Continue a prefill from per-row position ``start``: process a
+    (right-padded) token chunk at absolute positions [start, start+Sc) on top
+    of existing serving ``states`` (e.g. a prefix restored from a prefix
+    cache; fresh init_states + start=0 gives a plain ragged prefill).
+
+    tokens: (B, Sc) int32 ((B, K, Sc) audio), each row's real suffix at the
+    FRONT, zero-padded at the tail; start: (B,) int32 prefix lengths already
+    in ``states``; lengths: (B,) int32 total valid entries after the chunk
+    (start + real chunk length, >= start + 1).
+
+    Returns (logits at each row's last real position (B, V) f32 ((B, K, V)
+    audio), new_states, lengths).
+    """
+    x, positions = _chunk_embed(params, cfg, tokens, start)
 
     new_prefix = []
     for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
@@ -405,6 +412,82 @@ def prefill_chunk(params, cfg, tokens, states, start, lengths):
     if cfg.frontend == "audio":
         return logits[:, :, 0], new_states, lengths
     return logits[:, 0], new_states, lengths
+
+
+def verify_chunk(params, cfg, tokens, states, start):
+    """Speculative-verification forward: process a (B, C) token chunk at
+    absolute positions [start, start+C) and return the logits at EVERY
+    position — one target forward verifies C = K+1 speculative positions
+    per row (the last accepted token plus K drafted tokens).
+
+    Reuses the :func:`prefill_chunk` per-mixer machinery, so cache writes
+    land at absolute positions and rejected positions are rolled back for
+    free by the right-aligned layout: they sit beyond the committed decode
+    length, masked out of every later read and overwritten by the next
+    chunk's writes before they could ever become visible. Only valid for
+    archs whose whole serving state is positional (attention / MLA KV);
+    recurrent mixers advance non-positional state irreversibly — use
+    :func:`verify_stepwise` for those.
+
+    tokens: (B, C) int32; start: (B,) int32 tokens already in the caches.
+    Returns (logits (B, C, V) f32, new_states).
+    """
+    if cfg.frontend == "audio":
+        raise NotImplementedError(
+            "speculative verification does not support the audio frontend")
+    x, positions = _chunk_embed(params, cfg, tokens, start)
+    c = tokens.shape[1]
+    lengths = start + c  # every chunk position is written (none are pads)
+
+    new_prefix = []
+    for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
+        x, st2 = prefill_chunk_block(p, cfg, spec, x, positions, st, start,
+                                     lengths)
+        new_prefix.append(st2)
+
+    new_scan = states["scan"]
+    if cfg.scan_repeats:
+        def body(x, xs):
+            layer_params, layer_states = xs
+            outs = []
+            for j, spec in enumerate(cfg.pattern):
+                x, st2 = prefill_chunk_block(
+                    layer_params[j], cfg, spec, x, positions, layer_states[j],
+                    start, lengths)
+                outs.append(st2)
+            return x, tuple(outs)
+
+        x, new_scan = jax.lax.scan(body, x, (params["scan"], states["scan"]))
+
+    logits = lm_logits(params, cfg, x)  # (B, C, V): all positions
+    return logits, {"prefix": tuple(new_prefix), "scan": new_scan}
+
+
+def verify_stepwise(params, cfg, tokens, states, lengths, active):
+    """Sequential speculative verification for archs with recurrent
+    (non-positional) serving state: run C single-token decode steps and
+    return the state tree after EVERY step, so the caller can roll the
+    recurrent leaves back to the accepted boundary (positional leaves roll
+    back for free via the decode length mask, exactly as in
+    :func:`verify_chunk`).
+
+    tokens: (B, C) int32 — [last accepted token, draft_1 .. draft_K];
+    lengths: (B,) int32 tokens already in the caches; active: (B,) bool
+    (inactive rows' lengths do not advance, matching the fused decode step).
+    Returns (logits (B, C, V) f32, [states after step 1, ..., after step C]).
+    """
+    if cfg.frontend == "audio":
+        raise NotImplementedError(
+            "speculative verification does not support the audio frontend")
+    logits_all, states_all = [], []
+    st, lens = states, lengths
+    inc = active.astype(jnp.int32)
+    for i in range(tokens.shape[1]):
+        lens = lens + inc
+        lg, st = decode_step(params, cfg, tokens[:, i], st, lens)
+        logits_all.append(lg)
+        states_all.append(st)
+    return jnp.stack(logits_all, axis=1), states_all
 
 
 def decode_step(params, cfg, tokens, states, lengths):

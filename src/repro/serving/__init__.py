@@ -1,2 +1,3 @@
-"""Serving substrate: continuous-batching engine + sampling + service glue."""
-from repro.serving import engine, sampling, service  # noqa: F401
+"""Serving substrate: continuous-batching engine + sampling + speculative
+decoding + service glue."""
+from repro.serving import engine, sampling, service, speculative  # noqa: F401

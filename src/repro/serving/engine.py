@@ -39,6 +39,7 @@ import contextlib
 import dataclasses
 import functools
 import logging
+import time
 from collections import deque
 from typing import Any
 
@@ -48,9 +49,11 @@ import numpy as np
 
 from repro.core import hooks
 from repro.models import transformer
-from repro.serving.prefix_cache import PrefixCache, StateOps
-from repro.serving.sampling import (SamplingConfig, SamplingParams, sample,
-                                    sample_batched)
+from repro.serving import speculative
+from repro.serving.prefix_cache import (PrefixCache, StateOps,
+                                        state_batch_axes, state_pos_axes)
+from repro.serving.sampling import (SamplingConfig, SamplingParams,
+                                    accept_speculative, sample, sample_batched)
 
 __all__ = ["Request", "RequestResult", "ServingEngine"]
 
@@ -74,6 +77,19 @@ class RequestResult:
     tokens: list[int] | list[tuple]  # generated tokens (tuples for audio)
     prefill_steps: int = 1
     decode_steps: int = 0
+    # per-request latency telemetry (real wall-clock seconds): time to first
+    # token (submit -> first sampled token visible on the host) and total
+    # decode wall time after admission. With sync_every > 1, decode_s is
+    # measured at the flush that retired the request (token visibility, not
+    # device completion — the honest serving-side number).
+    ttft_s: float = 0.0
+    decode_s: float = 0.0
+
+    @property
+    def tpot_s(self) -> float:
+        """Time per output token after the first (0 for 1-token results)."""
+        n = len(self.tokens)
+        return self.decode_s / (n - 1) if n > 1 else 0.0
 
 
 def _bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -104,19 +120,16 @@ class _Programs:
     """
 
     def __init__(self, cfg, slots: int, max_len: int):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
         dt = jnp.dtype(cfg.activ_dtype)
-        # per-leaf slot/batch axis, found structurally: the axis whose extent
-        # tracks the state batch size (probe batch=1 vs batch=2 shapes)
-        p1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dt))
-        p2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dt))
-
-        def _axis(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
-
-        state_axes = jax.tree.map(_axis, p1, p2)
+        # per-leaf slot/batch + positional axes, found structurally (the
+        # shared probe in prefix_cache — same rule StateOps uses)
+        state_axes = state_batch_axes(cfg, max_len, dt)
+        self.state_axes = state_axes
+        self.pos_axes = state_pos_axes(cfg, max_len, dt)
+        self._spec_steps: dict[int, Any] = {}
 
         @jax.jit
         def fused_step(params, key, states, ctrl):
@@ -207,6 +220,98 @@ class _Programs:
 
         self.decode = decode  # legacy (unfused) step
 
+    # ------------------------------------------------------------------
+    def spec_step_for(self, k: int):
+        """The fused speculative step program for draft length ``k``,
+        memoized per bundle so engines (and fleet replicas) sharing a
+        geometry share the compiled verify program too."""
+        prog = self._spec_steps.get(k)
+        if prog is None:
+            prog = self._spec_steps[k] = self._build_spec_step(k)
+        return prog
+
+    def _build_spec_step(self, k: int):
+        """One jitted program per speculative step: verify all K+1 positions
+        for every slot, run lossless rejection sampling, truncate at
+        EOS/budget/cache-capacity, and update the device control block —
+        the host fetches a single packed ``tokens*|emitted|active|done``
+        matrix, exactly like the plain fused step but with up to K+1 tokens
+        per slot per sync.
+
+        Rollback is free for positional state (rejected cache writes sit
+        beyond the committed length mask); archs with recurrent mixers
+        verify stepwise and the program rolls their non-positional leaves
+        back by selecting the per-step snapshot at each row's accepted
+        boundary.
+        """
+        cfg, slots, max_len = self.cfg, self.slots, self.max_len
+        c = k + 1
+        stepwise = speculative.has_recurrent_state(cfg)
+        state_axes, pos_axes = self.state_axes, self.pos_axes
+
+        @jax.jit
+        def spec_step(params, key, states, ctrl, drafts, ndraft):
+            active = ctrl["active"]
+            length = ctrl["lengths"]
+            tokens = jnp.concatenate([ctrl["last"][:, None], drafts], axis=1)
+            if stepwise:
+                logits, steps = transformer.verify_stepwise(
+                    params, cfg, tokens, states, length, active)
+            else:
+                logits, new_states = transformer.verify_chunk(
+                    params, cfg, tokens, states, length)
+            key, sub = jax.random.split(key)
+            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
+            out, accepted = accept_speculative(sub, logits, drafts, ndraft, sp)
+            if stepwise:
+                # recurrent rollback: state after processing 1 + accepted
+                # tokens is the snapshot at index `accepted`; positional
+                # leaves keep the final write set (masked rollback)
+                sel = jnp.clip(accepted, 0, c - 1)
+                bidx = jnp.arange(slots)
+
+                def pick(ba, pa, *leaves):
+                    if pa != -1:
+                        return leaves[-1]
+                    arr = jnp.moveaxis(jnp.stack(leaves, 0), ba + 1, 1)
+                    return jnp.moveaxis(arr[sel, bidx], 0, ba)
+
+                new_states = jax.tree.map(pick, state_axes, pos_axes, *steps)
+
+            emit = accepted + 1
+            idx = jnp.arange(c)[None, :]
+            eos_hit = ((idx < emit[:, None]) & (ctrl["eos"][:, None] >= 0)
+                       & (out == ctrl["eos"][:, None]))
+            any_eos = eos_hit.any(axis=1)
+            first_eos = jnp.argmax(eos_hit, axis=1)
+            m = jnp.where(any_eos, first_eos + 1, emit)
+            m = jnp.minimum(m, jnp.maximum(ctrl["max_new"] - ctrl["gen"], 1))
+            m = jnp.where(active, m, 0)
+            new_len = length + m
+            gen = ctrl["gen"] + m
+            done = active & ((gen >= ctrl["max_new"])
+                             | (any_eos & (first_eos < m))
+                             | (new_len >= max_len))
+            out = jnp.where(idx < m[:, None], out, 0)
+            last = jnp.take_along_axis(
+                out, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            packed = jnp.concatenate([
+                out,
+                m[:, None],
+                active.astype(jnp.int32)[:, None],
+                done.astype(jnp.int32)[:, None],
+            ], axis=1)
+            new_ctrl = dict(
+                ctrl,
+                lengths=jnp.where(done, 0, new_len),
+                active=active & ~done,
+                gen=gen,
+                last=last,
+            )
+            return key, new_states, new_ctrl, packed
+
+        return spec_step
+
 
 _PROGRAMS: dict[tuple, _Programs] = {}
 
@@ -258,6 +363,8 @@ class ServingEngine:
         binding: hooks.Binding | None = None,
         manifest: dict | None = None,
         prefix_cache_bytes: int | None = None,
+        spec: speculative.SpecConfig | None = None,
+        proposer=None,
     ):
         self.cfg = cfg
         self.params = params
@@ -277,6 +384,27 @@ class ServingEngine:
         self.rng = rng if rng is not None else jax.random.key(0)
         self.fused = fused
         self.sync_every = max(int(sync_every), 1)
+        # ---- speculative decoding (draft at admission+decode, verify in
+        # the fused step, lossless rejection sampling) ----
+        self.spec = spec
+        self.proposer = None
+        if spec is not None:
+            if not fused:
+                raise ValueError(
+                    "speculative decoding requires the fused data plane")
+            if cfg.frontend in ("audio", "vlm"):
+                raise NotImplementedError(
+                    f"speculative decoding unsupported for the "
+                    f"{cfg.frontend!r} frontend")
+            if self.sync_every > 1:
+                # the proposer drafts from the emitted token history, so
+                # every speculative step must sync its packed result — the
+                # win is up to k+1 tokens per sync instead of k steps/sync
+                logger.warning(
+                    "speculative decoding overrides sync_every=%d -> 1",
+                    self.sync_every)
+                self.sync_every = 1
+            self.proposer = proposer or speculative.make_proposer(spec, cfg)
 
         dt = jnp.dtype(cfg.activ_dtype)
         self.states = transformer.init_states(cfg, slots, max_len, dt)
@@ -311,6 +439,19 @@ class ServingEngine:
             "prefix_hits": 0,        # admissions that reused a cached prefix
             "prefix_misses": 0,      # cache enabled but no usable prefix
             "prefix_hit_tokens": 0,  # prompt tokens restored instead of prefilled
+            # ---- speculative decoding telemetry ----
+            "spec_steps": 0,         # speculative verify program executions
+            "spec_slot_steps": 0,    # active slots summed over those steps
+            "spec_drafted": 0,       # draft tokens offered for verification
+            "spec_accepted": 0,      # draft tokens accepted (and emitted)
+            "spec_emitted": 0,       # total tokens emitted by spec steps
+            "spec_positions": 0,     # decode-equivalent positions verified
+                                     # (k+1 per step; rejected ones included
+                                     # — the lease pays for drafted work)
+            # ---- latency telemetry (real wall-clock; per-request values
+            # live in RequestResult.ttft_s / decode_s) ----
+            "ttft_sum_s": 0.0,
+            "decode_sum_s": 0.0,
         }
 
         # ---- compiled programs: shared per (cfg, geometry, tier-set) so
@@ -323,10 +464,33 @@ class ServingEngine:
         self._assign = progs.assign
         self._decode = progs.decode  # legacy (unfused) step
 
+        self._spec_step = (progs.spec_step_for(spec.k)
+                           if spec is not None else None)
+
         self.prefix_cache = (
             PrefixCache(progs.state_ops, capacity_bytes=prefix_cache_bytes)
             if prefix_cache_bytes else None)
         self._slot_pins: list = [None] * slots
+
+        # host mirrors for the proposer control plane (spec mode only): the
+        # per-slot token history (prompt + emitted), cache length, and
+        # pending last token, kept in lockstep with the device control block
+        # by the per-step packed sync
+        self._hist: list[np.ndarray | None] = [None] * slots
+        self._len_host = np.zeros((slots,), np.int64)
+        self._last_host = np.zeros((slots,), np.int64)
+        if self.proposer is not None:
+            self.proposer.bind(self)
+        if self.manifest is not None and spec is not None:
+            # surface the acceleration mode next to the kernel tiers: the
+            # operator should see HOW traffic is served from one record
+            self.manifest = dict(self.manifest, speculative={
+                "proposer": self.proposer.kind, "k": spec.k})
+
+        # latency bookkeeping (satellite telemetry: TTFT / decode wall)
+        self._submit_s: dict[int, float] = {}
+        self._slot_ttft = [0.0] * slots
+        self._admit_s = [0.0] * slots
 
     # ------------------------------------------------------------------
     def _bound(self):
@@ -357,6 +521,14 @@ class ServingEngine:
     def _warmup_programs(self) -> None:
         if self.fused:
             self._fused_step(self.params, self.rng, self.states, self.ctrl)
+            if self.spec is not None:
+                # verify program (outputs discarded, engine state untouched)
+                # + the proposer's own programs (draft prefill/decode loop)
+                self._spec_step(
+                    self.params, self.rng, self.states, self.ctrl,
+                    jnp.zeros((self.slots, self.spec.k), jnp.int32),
+                    jnp.zeros((self.slots,), jnp.int32))
+                self.proposer.warmup()
         else:
             self._decode(self.params, self.ctrl["last"], self.states,
                          self.ctrl["lengths"])
@@ -409,10 +581,25 @@ class ServingEngine:
             # corrupt downstream token metering deltas
             raise ValueError(f"duplicate request_id {req.request_id}")
         self._seen_ids.add(req.request_id)
+        self._submit_s[req.request_id] = time.perf_counter()
         self.queue.append(req)
 
     def _free_slots(self) -> list[int]:
         return [i for i, r in enumerate(self.active) if r is None]
+
+    # ---- proposer protocol: host mirrors of the device control block ----
+    def history(self, slot: int) -> np.ndarray:
+        """Prompt + every emitted token of the request in ``slot`` (the last
+        entry is the pending token the next verify step will process)."""
+        return self._hist[slot]
+
+    def last_tokens(self) -> np.ndarray:
+        """(B,) pending last token per slot (garbage for free slots)."""
+        return self._last_host
+
+    def cache_lengths(self) -> np.ndarray:
+        """(B,) committed cache lengths per slot (mirrors ctrl['lengths'])."""
+        return self._len_host
 
     # ------------------------------------------------------------------
     # Admission: longest-cached-prefix lookup -> restore -> suffix-only
@@ -502,8 +689,11 @@ class ServingEngine:
         first = self._sample_first(sub, logits, SamplingParams.from_configs(pad_cfg))
         first_host = np.asarray(jax.device_get(first))
         self.stats["host_syncs_admit"] += 1
+        now = time.perf_counter()
 
         for i, (req, match, start) in enumerate(entries):
+            ttft = now - self._submit_s.pop(req.request_id, now)
+            self.stats["ttft_sum_s"] += ttft
             plen = int(np.asarray(req.prompt).shape[-1])
             pin = None
             if self.prefix_cache is not None:
@@ -527,7 +717,7 @@ class ServingEngine:
                 self.results[req.request_id] = RequestResult(
                     request_id=req.request_id,
                     tokens=[self._row_out(first_host[i])],
-                    decode_steps=0)
+                    decode_steps=0, ttft_s=ttft)
                 self.stats["retired"] += 1
                 if pin is not None:
                     self.prefix_cache.release(pin)
@@ -541,6 +731,15 @@ class ServingEngine:
             self.active[slot] = req
             self.generated[slot] = [self._row_out(first_host[i])]
             self._slot_pins[slot] = pin
+            self._slot_ttft[slot] = ttft
+            self._admit_s[slot] = now
+            if self.spec is not None:
+                prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+                self._hist[slot] = np.concatenate(
+                    [prompt, [np.int32(first_host[i])]])
+                self._len_host[slot] = plen
+                self._last_host[slot] = int(first_host[i])
+                self.proposer.admit(slot, prompt)
 
     def _row_out(self, row: np.ndarray):
         return tuple(int(x) for x in row) if row.ndim else int(row)
@@ -553,13 +752,20 @@ class ServingEngine:
     def _retire(self, slot: int, *, reset_device: bool = False) -> None:
         req = self.active[slot]
         assert req is not None
+        decode_s = time.perf_counter() - self._admit_s[slot]
+        self.stats["decode_sum_s"] += decode_s
         self.results[req.request_id] = RequestResult(
             request_id=req.request_id,
             tokens=self.generated[slot],
             decode_steps=len(self.generated[slot]),
+            ttft_s=self._slot_ttft[slot],
+            decode_s=decode_s,
         )
         self.active[slot] = None
         self.generated[slot] = []
+        if self.spec is not None:
+            self._hist[slot] = None
+            self.proposer.retire(slot)
         if reset_device:  # fused path already zeroed these on device
             self.ctrl = dict(
                 self.ctrl,
@@ -586,7 +792,9 @@ class ServingEngine:
         if not any(r is not None for r in self.active):
             self._flush()
             return 0
-        if self.fused:
+        if self.spec is not None:
+            self._step_spec()
+        elif self.fused:
             self.rng, self.states, self.ctrl, packed = self._fused_step(
                 self.params, self.rng, self.states, self.ctrl)
             self.stats["decode_steps"] += 1
@@ -604,6 +812,90 @@ class ServingEngine:
         else:
             self._step_host()
         return sum(r is not None for r in self.active)
+
+    def _step_spec(self) -> None:
+        """One speculative engine iteration: the proposer drafts up to K
+        tokens per active slot on the control plane, ONE fused program
+        verifies all K+1 positions per slot (lossless rejection sampling
+        inside the jit), and the host syncs a single packed matrix carrying
+        up to K+1 emitted tokens per slot. Every step syncs — the proposer
+        needs the emitted history — so the speedup is tokens-per-step, not
+        syncs-per-step."""
+        k = self.spec.k
+        c = k + 1
+        drafts = np.zeros((self.slots, k), np.int32)
+        ndraft = np.zeros((self.slots,), np.int32)
+        self.proposer.propose(self, drafts, ndraft)
+        for i, r in enumerate(self.active):
+            if r is None:
+                ndraft[i] = 0
+                continue
+            # never draft past the cache: position L+1+ndraft must stay
+            # writable or the verify chunk's in-flight attention would read
+            # dropped entries; never draft past the token budget either —
+            # the step emits at most `remaining` tokens, so later drafts
+            # could only be verified and thrown away
+            room = self.max_len - int(self._len_host[i]) - 1
+            remaining = r.max_new_tokens - len(self.generated[i])
+            ndraft[i] = max(0, min(int(ndraft[i]), room, remaining - 1))
+        self.rng, self.states, self.ctrl, packed = self._spec_step(
+            self.params, self.rng, self.states, self.ctrl,
+            jnp.asarray(drafts), jnp.asarray(ndraft))
+        self.stats["decode_steps"] += 1
+        self.stats["spec_steps"] += 1
+        arr = np.asarray(jax.device_get(packed))
+        self.stats["host_syncs_decode"] += 1
+        for i in range(self.slots):
+            if not arr[i, c + 1]:  # slot inactive at this step
+                continue
+            req = self.active[i]
+            if req is None:
+                continue
+            m = int(arr[i, c])
+            toks = [int(t) for t in arr[i, :m]]
+            self.generated[i].extend(toks)
+            self._hist[i] = np.concatenate(
+                [self._hist[i], np.asarray(toks, np.int32)])
+            self._len_host[i] += m
+            self._last_host[i] = toks[-1]
+            self.stats["spec_slot_steps"] += 1
+            self.stats["spec_positions"] += c
+            self.stats["spec_drafted"] += int(ndraft[i])
+            self.stats["spec_accepted"] += max(m - 1, 0)
+            self.stats["spec_emitted"] += m
+            if arr[i, c + 2]:
+                self._retire(i)
+
+    def spec_summary(self) -> dict | None:
+        """Acceptance-rate telemetry for operators / fleet reports."""
+        if self.spec is None:
+            return None
+        d, a = self.stats["spec_drafted"], self.stats["spec_accepted"]
+        return {
+            "proposer": self.proposer.kind,
+            "k": self.spec.k,
+            "steps": self.stats["spec_steps"],
+            "drafted": d,
+            "accepted": a,
+            "acceptance_rate": round(a / max(d, 1), 4),
+            "tokens_per_slot_step": round(
+                self.stats["spec_emitted"]
+                / max(self.stats["spec_slot_steps"], 1), 4),
+        }
+
+    def latency_summary(self) -> dict:
+        """p50/p95 TTFT and per-output-token decode latency (TPOT) over the
+        completed requests, in real wall-clock seconds."""
+        ttfts = [r.ttft_s for r in self.results.values()]
+        tpots = [r.tpot_s for r in self.results.values() if len(r.tokens) > 1]
+        pct = lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0
+        return {
+            "requests": len(self.results),
+            "ttft_p50_s": pct(ttfts, 50),
+            "ttft_p95_s": pct(ttfts, 95),
+            "tpot_p50_s": pct(tpots, 50),
+            "tpot_p95_s": pct(tpots, 95),
+        }
 
     def _flush(self) -> None:
         """Fetch all buffered packed step results in ONE blocking transfer

@@ -45,11 +45,45 @@ import numpy as np
 
 from repro.models import transformer
 
-__all__ = ["PrefixCache", "PrefixMatch", "StateOps"]
+__all__ = ["PrefixCache", "PrefixMatch", "StateOps", "state_batch_axes",
+           "state_pos_axes"]
 
 
 def _pow2(n: int) -> int:
     return 1 << max(n - 1, 0).bit_length()
+
+
+def state_batch_axes(cfg, max_len: int, dtype):
+    """Per-leaf batch axis of the serving-state tree, found STRUCTURALLY:
+    the axis whose extent tracks the state batch size (probe batch=1 vs
+    batch=2 shapes). Shared by StateOps, the engine's program bundle, and
+    the draft-model proposer — one probe, one rule."""
+    s1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dtype))
+    s2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dtype))
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise AssertionError(f"state leaf has no batch axis: {a.shape}")
+
+    return jax.tree.map(axis, s1, s2)
+
+
+def state_pos_axes(cfg, max_len: int, dtype):
+    """Per-leaf positional axis (extent tracks ``max_len``); -1 for leaves
+    with none (recurrent / boundary-snapshot state)."""
+    s2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dtype))
+    sl = jax.eval_shape(
+        lambda: transformer.init_states(cfg, 2, max_len + 1, dtype))
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        return -1
+
+    return jax.tree.map(axis, s2, sl)
 
 
 def _tree_bytes(tree) -> int:
@@ -68,25 +102,8 @@ class StateOps:
     """
 
     def __init__(self, cfg, max_len: int, dtype):
-        s1 = jax.eval_shape(lambda: transformer.init_states(cfg, 1, max_len, dtype))
-        s2 = jax.eval_shape(lambda: transformer.init_states(cfg, 2, max_len, dtype))
-        sl = jax.eval_shape(
-            lambda: transformer.init_states(cfg, 2, max_len + 1, dtype))
-
-        def baxis(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            raise AssertionError(f"state leaf has no batch axis: {a.shape}")
-
-        def paxis(a, b):
-            for i, (x, y) in enumerate(zip(a.shape, b.shape)):
-                if x != y:
-                    return i
-            return -1  # no positional axis: boundary-snapshot leaf
-
-        self.batch_axes = jax.tree.map(baxis, s1, s2)
-        self.pos_axes = jax.tree.map(paxis, s2, sl)
+        self.batch_axes = state_batch_axes(cfg, max_len, dtype)
+        self.pos_axes = state_pos_axes(cfg, max_len, dtype)
         self.has_snap = any(p == -1 for p in jax.tree.leaves(self.pos_axes))
         self.max_len = max_len
 

@@ -16,7 +16,8 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-__all__ = ["SamplingConfig", "SamplingParams", "sample", "sample_batched"]
+__all__ = ["SamplingConfig", "SamplingParams", "accept_speculative", "sample",
+           "sample_batched", "spec_target_probs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,7 +49,10 @@ def sample(key: jax.Array, logits: jax.Array, cfg: SamplingConfig) -> jax.Array:
         return jnp.argmax(logits, axis=-1).astype(jnp.int32)
     logits = logits / cfg.temperature
     if cfg.top_k > 0:
-        kth = jnp.sort(logits, axis=-1)[..., -cfg.top_k][..., None]
+        # clamp into [1, V] like sample_batched: an unclamped top_k > V
+        # wraps JAX's negative index (V < k < 2V behaves like top_k = 2V-k)
+        k = min(cfg.top_k, logits.shape[-1])
+        kth = jnp.sort(logits, axis=-1)[..., -k][..., None]
         logits = jnp.where(logits < kth, -jnp.inf, logits)
     return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)
 
@@ -81,3 +85,109 @@ def sample_batched(key: jax.Array, logits: jax.Array,
     sampled = jax.random.categorical(key, masked, axis=-1).astype(jnp.int32)
     gate = params.temperature.reshape((-1,) + (1,) * (greedy.ndim - 1)) > 0.0
     return jnp.where(gate, sampled, greedy)
+
+
+# ---------------------------------------------------------------------------
+# Speculative decoding: lossless batched rejection sampling
+# ---------------------------------------------------------------------------
+def spec_target_probs(logits: jax.Array, params: SamplingParams) -> jax.Array:
+    """The per-position target distribution speculative verification samples
+    from: temperature-scaled, top-k-masked softmax — the SAME modified
+    distribution ``sample_batched`` draws from, applied over a (B, C, V)
+    block of verified positions. Greedy rows (temperature <= 0) are handled
+    by the caller via argmax and never read these probabilities."""
+    b, c, v = logits.shape
+    temp = jnp.maximum(params.temperature, 1e-6)[:, None, None]
+    scaled = logits / temp
+    kk = jnp.clip(jnp.where(params.top_k > 0, params.top_k, v), 1, v)
+
+    def _mask(s):
+        kth_idx = jnp.broadcast_to(kk[:, None, None] - 1, (b, c, 1))
+        kth = jnp.take_along_axis(-jnp.sort(-s, axis=-1), kth_idx, axis=-1)
+        return jnp.where(s < kth, -jnp.inf, s)
+
+    needs_topk = jnp.any((params.top_k > 0) & (params.temperature > 0.0))
+    masked = jax.lax.cond(needs_topk, _mask, lambda s: s, scaled)
+    return jax.nn.softmax(masked, axis=-1)
+
+
+def accept_speculative(
+    key: jax.Array,
+    logits: jax.Array,
+    drafts: jax.Array,
+    ndraft: jax.Array,
+    params: SamplingParams,
+    draft_probs: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Batched LOSSLESS rejection sampling over K drafted tokens per row.
+
+    The standard speculative-sampling rule (Leviathan et al. / Chen et al.):
+    draft i is accepted with probability min(1, p_i(d_i) / q_i(d_i)); at the
+    first rejection the corrected token is sampled from the residual
+    normalize(max(p - q, 0)); if every draft is accepted a bonus token is
+    sampled from the K+1-th target distribution. The emitted stream is
+    distributed EXACTLY as sampling from the target alone — acceleration
+    never changes the output distribution. Greedy rows (temperature <= 0)
+    reduce to exact prefix match against argmax, so greedy streams are
+    byte-identical to non-speculative decoding.
+
+    logits: (B, C=K+1, V) target logits at the verified positions;
+    drafts: (B, K) int32 drafted tokens; ndraft: (B,) int32 how many are
+    real (<= K; positions past ndraft are never accepted);
+    draft_probs: (B, K, V) proposer distribution at each drafted position,
+    or None for deterministic (point-mass) proposers — the rule then
+    degenerates to accept-with-probability-p_i(d_i) and a residual with the
+    drafted token removed, still lossless.
+
+    Returns (tokens (B, C) int32, accepted (B,) int32): tokens[:, :a] are
+    the accepted drafts, tokens[:, a] the corrected/bonus token; entries
+    past a are zero. Every row always emits accepted + 1 tokens.
+    """
+    b, c, v = logits.shape
+    k = c - 1
+    ku, kr = jax.random.split(key)
+
+    greedy_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)  # (B, C)
+    greedy_row = params.temperature <= 0.0                      # (B,)
+    p = spec_target_probs(logits, params)                       # (B, C, V)
+
+    kmask = jnp.arange(k)[None, :] < ndraft[:, None]
+    p_d = jnp.take_along_axis(p[:, :k], drafts[..., None], axis=-1)[..., 0]
+    if draft_probs is None:
+        q_d = jnp.ones_like(p_d)
+    else:
+        q_d = jnp.take_along_axis(
+            draft_probs, drafts[..., None], axis=-1)[..., 0]
+    u = jax.random.uniform(ku, (b, k))
+    # u < p/q, written mul-form so q == 0 accepts iff p > 0 (no div-by-zero)
+    acc_stoch = u * q_d < p_d
+    acc_greedy = drafts == greedy_tok[:, :k]
+    acc = jnp.where(greedy_row[:, None], acc_greedy, acc_stoch) & kmask
+    accepted = jnp.sum(jnp.cumprod(acc.astype(jnp.int32), axis=1), axis=1)
+
+    # boundary position `accepted`: residual resample after a rejection,
+    # plain target distribution for the bonus token after a clean sweep
+    p_b = jnp.take_along_axis(p, accepted[:, None, None], axis=1)[:, 0]
+    di = jnp.clip(accepted, 0, k - 1)
+    if draft_probs is None:
+        d_b = jnp.take_along_axis(drafts, di[:, None], axis=1)[:, 0]
+        q_b = jax.nn.one_hot(d_b, v, dtype=p_b.dtype)
+    else:
+        q_b = jnp.take_along_axis(draft_probs, di[:, None, None], axis=1)[:, 0]
+    rejected = accepted < ndraft
+    residual = jnp.maximum(p_b - q_b, 0.0)
+    rs = residual.sum(axis=-1, keepdims=True)
+    residual = jnp.where(rs > 0, residual / rs, p_b)
+    dist = jnp.where(rejected[:, None], residual, p_b)
+    stoch = jax.random.categorical(
+        kr, jnp.log(jnp.maximum(dist, 1e-38)), axis=-1).astype(jnp.int32)
+    # greedy target is a point mass at argmax: the residual after removing
+    # any rejected draft is still that same point mass
+    greedy_b = jnp.take_along_axis(greedy_tok, accepted[:, None], axis=1)[:, 0]
+    final = jnp.where(greedy_row, greedy_b, stoch)
+
+    idx = jnp.arange(c)[None, :]
+    padded = jnp.pad(drafts, ((0, 0), (0, 1)))
+    out = jnp.where(idx < accepted[:, None], padded, 0)
+    out = jnp.where(idx == accepted[:, None], final[:, None], out)
+    return out, accepted

@@ -32,13 +32,18 @@ def serving_container(
     fused: bool = True,
     sync_every: int = 1,
     prefix_cache_bytes: int | None = None,
+    spec=None,
+    draft_params=None,
     name: str | None = None,
 ) -> xcontainer.XContainer:
     """Build a deployable serving container for one model.
 
     ``deploy()`` compiles the ``decode`` entrypoint (the metering artifact);
     ``meta['engine_factory'](deployment)`` boots the continuous-batching
-    engine bound to that deployment.
+    engine bound to that deployment. ``spec`` (a
+    ``repro.serving.speculative.SpecConfig``) turns on speculative decoding
+    in every engine booted from this container; ``draft_params`` optionally
+    supplies trained draft-model weights for the "draft" proposer kind.
     """
     dt = jnp.dtype(cfg.activ_dtype)
 
@@ -59,10 +64,15 @@ def serving_container(
         # the engine inherits the deployment's probed hook binding + its
         # specialization manifest: traffic is served by exactly the tiers
         # deploy() bound, and warmup() reports them
+        proposer = None
+        if spec is not None and draft_params is not None:
+            from repro.serving.speculative import make_proposer
+            proposer = make_proposer(spec, cfg, draft_params=draft_params)
         return ServingEngine(
             cfg, params, slots=slots, max_len=max_len,
             prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every,
             prefix_cache_bytes=prefix_cache_bytes,
+            spec=spec, proposer=proposer,
             binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),

@@ -1,0 +1,299 @@
+"""Speculative decoding proposers: draft K tokens cheaply, verify them all
+with ONE target forward.
+
+The serving decode path is memory-bandwidth-bound: every emitted token costs
+a full target-model forward whose arithmetic intensity is ~1 (the paper's
+low-overhead-computing pillar names exactly this regime). Speculative
+decoding amortizes that forward over K drafted tokens — the fused data plane
+verifies all K+1 positions in one jitted program
+(``transformer.verify_chunk`` / ``verify_stepwise``) and the lossless
+rejection-sampling rule (``sampling.accept_speculative``) keeps the emitted
+distribution byte-identical to plain decoding. Same contract as every other
+XaaS specialization: a faster backend that is *observationally equivalent*.
+
+Two proposers, one protocol (``bind`` / ``warmup`` / ``admit`` /
+``propose`` / ``retire``):
+
+  * :class:`NGramProposer` — model-free prompt-lookup drafting: the longest
+    recent n-gram suffix of the request's own token history is located
+    earlier in the history and the tokens that followed it are drafted.
+    Zero device work, deterministic, CI-friendly; shines on repetitive
+    continuations and the shared-prefix / multi-turn traffic the radix
+    prefix cache already targets.
+  * :class:`DraftModelProposer` — a small same-family config (e.g.
+    qwen2-0.5b drafting for qwen2.5-14b) runs its own fused greedy decode
+    loop in the same ``_Programs`` style as the engine: per step, ONE jitted
+    program advances the draft cache through [last, d_1 .. d_K] — K+1 draft
+    decode steps — so the draft cache covers every position the target can
+    commit, and rejected draft positions roll back for free under the same
+    right-aligned stale-beyond-the-length-mask rule the target cache uses.
+    Restricted to attention-family draft configs for exactly that reason.
+
+Proposers are deliberately *deterministic* (point-mass q): the rejection
+rule then degenerates to accept-with-probability-p(d), which stays lossless
+(see ``accept_speculative``) without shipping a (B, K, V) proposal
+distribution through the data plane each step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer
+from repro.serving.prefix_cache import state_batch_axes
+
+__all__ = ["SpecConfig", "NGramProposer", "DraftModelProposer",
+           "has_recurrent_state", "make_proposer"]
+
+logger = logging.getLogger(__name__)
+
+_RECURRENT_MIXERS = frozenset({"rglru", "mlstm", "slstm"})
+
+
+def has_recurrent_state(cfg) -> bool:
+    """True when any mixer carries non-positional serving state, which a
+    parallel verify chunk would advance irreversibly — the engine then
+    verifies stepwise with per-step state snapshots instead."""
+    return any(s.mixer in _RECURRENT_MIXERS
+               for s in tuple(cfg.prefix) + tuple(cfg.pattern))
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Engine-level speculative decoding configuration.
+
+    k: drafted tokens per decode step (the verify program covers k+1
+       positions; each step emits between 1 and k+1 tokens).
+    proposer: "ngram" (prompt-lookup) or "draft" (small draft model).
+    ngram_min/ngram_max: suffix n-gram lengths the lookup tries (longest
+       first).
+    draft_arch: config id of the draft model (proposer="draft"); must share
+       the target's vocabulary and be attention-family.
+    draft_seed: init seed used when no draft params are supplied (demo /
+       benchmark use; real deployments pass trained params).
+    """
+
+    k: int = 4
+    proposer: str = "ngram"
+    ngram_max: int = 3
+    ngram_min: int = 1
+    draft_arch: str | None = None
+    draft_seed: int = 0
+
+    def __post_init__(self):
+        assert self.k >= 1, "spec k must be >= 1"
+        assert self.proposer in ("ngram", "draft"), self.proposer
+        assert 1 <= self.ngram_min <= self.ngram_max
+
+
+class NGramProposer:
+    """Prompt-lookup drafting over the request's own token history.
+
+    For each active slot, try suffix lengths n = ngram_max .. ngram_min:
+    find an earlier occurrence of the history's last n tokens and draft the
+    (up to) k tokens that followed it. Among candidate occurrences the most
+    recent one that still has k continuation tokens wins (falling back to
+    the occurrence with the longest continuation), so periodic generations
+    draft whole cycle continuations instead of one-token stubs. Pure host
+    numpy — the control plane drafts, the data plane only verifies.
+    """
+
+    kind = "ngram"
+
+    def __init__(self, k: int, *, ngram_max: int = 3, ngram_min: int = 1):
+        self.k = k
+        self.ngram_max = ngram_max
+        self.ngram_min = ngram_min
+
+    # --- engine protocol (host-only proposer: mostly no-ops) ---
+    def bind(self, engine) -> None:
+        pass
+
+    def warmup(self) -> None:
+        pass
+
+    def admit(self, slot: int, prompt) -> None:
+        pass
+
+    def retire(self, slot: int) -> None:
+        pass
+
+    def propose(self, engine, drafts: np.ndarray, ndraft: np.ndarray) -> None:
+        for i, req in enumerate(engine.active):
+            if req is None:
+                continue
+            d = self.lookup(engine.history(i), self.k)
+            n = d.shape[0]
+            drafts[i, :n] = d
+            ndraft[i] = n
+
+    def lookup(self, history: np.ndarray, k: int) -> np.ndarray:
+        h = np.asarray(history, np.int32)
+        length = int(h.shape[0])
+        for n in range(min(self.ngram_max, length - 1), self.ngram_min - 1, -1):
+            win = np.lib.stride_tricks.sliding_window_view(h, n)
+            hits = np.flatnonzero((win == h[length - n:]).all(axis=1))
+            hits = hits[hits < length - n]  # exclude the suffix itself
+            if not hits.size:
+                continue
+            avail = length - (hits + n)
+            full = hits[avail >= k]
+            j = int(full.max()) if full.size else int(hits[np.argmax(avail)])
+            return h[j + n: j + n + k]
+        return h[:0]
+
+
+class DraftModelProposer:
+    """A small target-family model drafting greedily through its own fused
+    decode loop.
+
+    The draft model keeps its own (slots, max_len) serving-state tree in the
+    same right-aligned absolute-position layout as the target: admission
+    prefill writes the prompt at [0, L), and each ``propose`` runs one
+    jitted program of k+1 draft decode steps processing
+    [last, d_1 .. d_K] at positions [L, L+k] — one position PAST the last
+    draft, so the draft cache already covers the bonus position when the
+    target accepts everything. Rejected draft positions sit beyond the next
+    step's length mask and are overwritten before they can be read: the
+    identical free-rollback rule the target's verify chunk relies on, which
+    is why the draft config must be attention-family (purely positional
+    state).
+    """
+
+    kind = "draft"
+
+    def __init__(self, draft_cfg, draft_params, k: int):
+        if draft_cfg.frontend in ("audio", "vlm"):
+            raise NotImplementedError(
+                f"draft model frontend {draft_cfg.frontend!r} unsupported")
+        if has_recurrent_state(draft_cfg):
+            raise NotImplementedError(
+                "draft model must be attention-family: recurrent state has "
+                "no free rollback for rejected drafts (use an ngram "
+                "proposer, or an attention draft config)")
+        self.cfg = draft_cfg
+        self.params = draft_params
+        self.k = k
+
+    def bind(self, engine) -> None:
+        assert self.cfg.vocab_size == engine.cfg.vocab_size, (
+            "draft and target models must share a vocabulary")
+        dcfg = self.cfg
+        k = self.k
+        dt = jnp.dtype(dcfg.activ_dtype)
+        geom = (engine.slots, engine.max_len, engine.prompt_buckets)
+        if getattr(self, "_bound_geom", None) == geom:
+            # re-bound to a fresh engine of the same geometry: keep the
+            # compiled programs, just reset the draft state tree
+            self.states = transformer.init_states(
+                dcfg, self.slots, self.max_len, dt)
+            return
+        self._bound_geom = geom
+        self.slots = engine.slots
+        self.max_len = engine.max_len
+        self.buckets = engine.prompt_buckets
+        max_len = self.max_len
+        self.states = transformer.init_states(dcfg, self.slots, max_len, dt)
+
+        # per-leaf batch axis for the single-row admission scatter — the
+        # shared structural probe the engine bundle and StateOps use
+        axes = state_batch_axes(dcfg, max_len, dt)
+
+        @jax.jit
+        def prefill_assign(params, states, tokens, slot, length):
+            """Prefill one prompt from scratch and scatter its draft state
+            into row ``slot``."""
+            one = transformer.init_states(dcfg, 1, max_len, dt)
+            _, one, _ = transformer.prefill_chunk(
+                params, dcfg, tokens, one, jnp.zeros((1,), jnp.int32), length)
+
+            def put(ax, dst, src):
+                row = jax.lax.dynamic_index_in_dim(src, 0, ax, keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(
+                    dst, row.astype(dst.dtype), slot, ax)
+
+            return jax.tree.map(put, axes, states, one)
+
+        self._prefill_assign = prefill_assign
+
+        @jax.jit
+        def draft_k(params, states, last, lengths, active):
+            """Greedy-draft k tokens in one program: k+1 draft decode steps
+            process [last, d_1 .. d_K] so the draft cache covers every
+            position the target can commit this round."""
+            cur, st, lens = last, states, lengths
+            inc = active.astype(jnp.int32)
+            toks = []
+            for _ in range(k + 1):
+                lens = lens + inc
+                lg, st = transformer.decode_step(params, dcfg, cur, st, lens)
+                cur = jnp.argmax(lg, axis=-1).astype(jnp.int32)
+                toks.append(cur)
+            return jnp.stack(toks[:k], axis=1), st
+
+        self._draft_k = draft_k
+
+    def warmup(self) -> None:
+        """Compile the per-bucket admission prefill and the draft loop."""
+        zero = jnp.zeros((self.slots,), jnp.int32)
+        for sb in self.buckets:
+            self.states = self._prefill_assign(
+                self.params, self.states, jnp.zeros((1, sb), jnp.int32),
+                jnp.int32(0), jnp.ones((1,), jnp.int32))
+        drafts, self.states = self._draft_k(
+            self.params, self.states, zero, zero,
+            jnp.zeros((self.slots,), bool))
+        jax.block_until_ready(drafts)
+
+    def admit(self, slot: int, prompt) -> None:
+        # deferred import: engine imports this module at load time
+        from repro.serving.engine import _bucket
+
+        t = np.asarray(prompt, np.int32).reshape(-1)
+        sb = _bucket(t.shape[0], self.buckets)
+        padded = np.zeros((1, sb), np.int32)
+        padded[0, : t.shape[0]] = t
+        self.states = self._prefill_assign(
+            self.params, self.states, jnp.asarray(padded), jnp.int32(slot),
+            jnp.asarray([t.shape[0]], jnp.int32))
+
+    def retire(self, slot: int) -> None:
+        pass  # the row is overwritten wholesale at the next admission
+
+    def propose(self, engine, drafts: np.ndarray, ndraft: np.ndarray) -> None:
+        active = np.array([r is not None for r in engine.active])
+        if not active.any():
+            return
+        d, self.states = self._draft_k(
+            self.params, self.states,
+            jnp.asarray(engine.last_tokens(), jnp.int32),
+            jnp.asarray(engine.cache_lengths(), jnp.int32),
+            jnp.asarray(active))
+        d = np.asarray(jax.device_get(d))
+        drafts[active] = d[active]
+        ndraft[active] = self.k
+
+
+def make_proposer(spec: SpecConfig, cfg, *, draft_cfg=None, draft_params=None):
+    """Build the proposer a :class:`SpecConfig` names. For the draft kind,
+    ``draft_cfg``/``draft_params`` override ``spec.draft_arch`` (tests pass
+    the target's own params for a perfect-acceptance self-draft)."""
+    if spec.proposer == "ngram":
+        return NGramProposer(spec.k, ngram_max=spec.ngram_max,
+                             ngram_min=spec.ngram_min)
+    if draft_cfg is None:
+        from repro import configs
+        assert spec.draft_arch, "SpecConfig(proposer='draft') needs draft_arch"
+        draft_cfg = configs.get_config(spec.draft_arch)
+    if draft_params is None:
+        logger.warning(
+            "draft model %s: initializing RANDOM params (seed %d) — "
+            "acceptance will be near-floor; pass trained draft params for "
+            "real speedups", draft_cfg.name, spec.draft_seed)
+        draft_params = transformer.init_model(
+            jax.random.key(spec.draft_seed), draft_cfg)
+    return DraftModelProposer(draft_cfg, draft_params, spec.k)

@@ -1,10 +1,13 @@
-"""Property test: a prefix-cache-enabled engine serves byte-identical token
-streams to a cache-disabled one across random prompt-sharing patterns,
-evictions mid-stream, and slot recycling.
+"""Property tests: (1) a prefix-cache-enabled engine serves byte-identical
+token streams to a cache-disabled one across random prompt-sharing patterns,
+evictions mid-stream, and slot recycling; (2) a SPECULATIVE engine (either
+proposer kind, any K, with or without the prefix cache and its mid-stream
+evictions) serves byte-identical greedy streams to the plain fused engine.
 
 Module requires `hypothesis` (skip-guarded in conftest.py like the other
 property suites). Greedy decoding keeps both engines deterministic, so any
-stream difference is a real prefix-restore defect, not sampling noise.
+stream difference is a real prefix-restore / rejection-sampling / rollback
+defect, not sampling noise.
 """
 import functools
 
@@ -15,6 +18,7 @@ from hypothesis import given, settings, strategies as st
 from repro import configs
 from repro.models import transformer
 from repro.serving.engine import Request, ServingEngine
+from repro.serving.speculative import DraftModelProposer, SpecConfig
 
 MAX_LEN = 48
 
@@ -56,15 +60,22 @@ def _workload(draw):
     return reqs, budget
 
 
-def _serve(reqs, cache_bytes):
+def _serve(reqs, cache_bytes, spec=None, proposer=None):
     cfg, params = _model()
     eng = ServingEngine(cfg, params, slots=2, max_len=MAX_LEN,
                         prompt_buckets=(8, 16, 32),
-                        prefix_cache_bytes=cache_bytes)
+                        prefix_cache_bytes=cache_bytes,
+                        spec=spec, proposer=proposer)
     for i, (p, m) in enumerate(reqs):
         eng.submit(Request(request_id=i, prompt=p, max_new_tokens=m))
     res = eng.run_to_completion()
     return {k: res[k].tokens for k in sorted(res)}, eng
+
+
+@functools.lru_cache(maxsize=8)
+def _draft_proposer(k):
+    cfg, params = _model()
+    return DraftModelProposer(cfg, params, k)
 
 
 @settings(max_examples=15, deadline=None)
@@ -79,3 +90,23 @@ def test_cache_enabled_streams_byte_identical(workload):
     for node in eng.prefix_cache._iter_nodes():
         assert node.ref == 0
     assert eng.prefix_cache.bytes >= 0
+
+
+@settings(max_examples=10, deadline=None)
+@given(_workload(), st.sampled_from(["ngram", "draft"]), st.integers(1, 4),
+       st.booleans())
+def test_speculative_streams_byte_identical(workload, kind, k, with_cache):
+    """Speculative-on/off greedy parity across random prompt-sharing
+    patterns, both proposer kinds, K in {1..4}, and (when with_cache) the
+    prefix cache under the 12KB eviction-pressure budgets — drafts are
+    verified on top of restored prefixes and mid-stream evictions."""
+    reqs, budget = workload
+    base, _ = _serve(reqs, None)
+    spec = SpecConfig(k=k, proposer=kind, draft_arch="qwen2-0.5b-smoke")
+    proposer = _draft_proposer(k) if kind == "draft" else None
+    out, eng = _serve(reqs, budget if with_cache else None, spec=spec,
+                      proposer=proposer)
+    assert out == base
+    assert all(h is None for h in eng._hist)  # mirrors drained with slots
+    if with_cache:
+        assert all(p is None for p in eng._slot_pins)

@@ -22,6 +22,9 @@ Two modes (both pure stdlib — no jsonschema dependency in the image):
         * spec tok/s                — advisory (wall clock, as above)
         * spec decode speedup       — same-machine ratio, 20%
         * spec acceptance rate      — deterministic token-count ratio, 20%
+        * paged concurrency/KV byte — deterministic byte-accounting ratio, 20%
+        * paged decode tok/s ratio  — same-machine ratio, 20%
+        * paged tok/s               — advisory (wall clock, as above)
 
     PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
 """
@@ -93,6 +96,22 @@ _SCHEMAS = {
         ("modes", list, ">= 2 modes", lambda v: len(v) >= 2),
         ("modes.1.tpot_p50_s", (int, float), ">= 0", lambda v: v >= 0),
     ],
+    "BENCH_paged.json": [
+        ("benchmark", str, "== paged_kv", lambda v: v == "paged_kv"),
+        ("concurrency", int, ">= 128 (headline claim)",
+         lambda v: v >= 128),
+        ("concurrency_per_kv_byte", (int, float), ">= 2 (headline claim)",
+         lambda v: v >= 2.0),
+        ("decode_tok_s_ratio", (int, float), ">= 0.9 (<=10% regression)",
+         lambda v: v >= 0.9),
+        ("token_parity", bool, "greedy streams byte-identical",
+         lambda v: v is True),
+        ("modes", list, ">= 2 modes", lambda v: len(v) >= 2),
+        ("modes.1.peak_concurrent", int, ">= 128 in flight",
+         lambda v: v >= 128),
+        ("modes.1.preemptions", int, "== 0 (pool provisioned)",
+         lambda v: v == 0),
+    ],
 }
 
 # (label, file, json path, direction, allowed fractional regression)
@@ -114,6 +133,11 @@ _HEADLINES = [
     ("spec decode speedup", "BENCH_spec.json", "speedup", "higher", 0.20),
     ("spec acceptance rate", "BENCH_spec.json", "acceptance_rate",
      "higher", 0.20),
+    ("paged concurrency per KV byte", "BENCH_paged.json",
+     "concurrency_per_kv_byte", "higher", 0.20),
+    ("paged decode tok/s ratio", "BENCH_paged.json", "decode_tok_s_ratio",
+     "higher", 0.20),
+    ("paged tok/s", "BENCH_paged.json", "modes.1.tok_s", "higher", None),
 ]
 
 

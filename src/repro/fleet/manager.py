@@ -74,6 +74,13 @@ class FleetConfig:
     spec_k: int = 0
     spec_proposer: str = "ngram"   # "ngram" | "draft"
     spec_draft_arch: str | None = None
+    # paged KV per replica (None keeps contiguous per-slot KV strips): page
+    # granularity in tokens, pool size in pages (None = full provisioning),
+    # and the free-page watermark fraction admission respects
+    page_size: int | None = None
+    kv_pages: int | None = None
+    kv_watermark: float = 0.05
+    prefill_chunk_tokens: int | None = None
     # virtual-time knobs
     tick_s: float = 0.05          # one fused decode round per replica per tick
     warm_boot_s: float = 0.5      # deployment cache hit: engine boot only
@@ -277,6 +284,7 @@ class FleetReport:
     reconciled: bool               # ledger totals match served tokens per tenant
     prefix_cache: dict             # fleet-wide prefix reuse + router affinity
     speculative: dict              # fleet-wide draft/accept telemetry
+    paged_kv: dict                 # fleet-wide page-pool occupancy/CoW telemetry
     replicas: list[dict]
     batch: dict
     decisions: list[tuple[float, str, str]]
@@ -582,6 +590,19 @@ class FleetManager:
             "acceptance_rate": round(accepted / max(drafted, 1), 4),
             "steps": sum(s["steps"] for s in sagg),
         }
+        per_replica_paged = {r.replica_id: r.engine.paged_summary()
+                             for r in self.replicas}
+        pagg = [p for p in per_replica_paged.values() if p]
+        paged_summary = {
+            "enabled": bool(pagg),
+            "pages_total": sum(p["pages_total"] for p in pagg),
+            "pages_in_use": sum(p["pages_in_use"] for p in pagg),
+            "peak_in_use": sum(p["peak_in_use"] for p in pagg),
+            "cow_copies": sum(p["cow_copies"] for p in pagg),
+            "cow_shared_pages": sum(p["cow_shared_pages"] for p in pagg),
+            "preemptions": sum(p["preemptions"] for p in pagg),
+            "admit_skips": sum(p["admit_skips"] for p in pagg),
+        }
         ttfts, tpots = [], []
         for r in self.replicas:
             for res in r.engine.results.values():
@@ -626,6 +647,7 @@ class FleetManager:
             reconciled=reconciled,
             prefix_cache=prefix_summary,
             speculative=spec_summary,
+            paged_kv=paged_summary,
             replicas=[{
                 "id": r.replica_id,
                 "boot": r.boot,
@@ -635,6 +657,7 @@ class FleetManager:
                 "state": r.state.value,
                 "prefix": per_replica_prefix[r.replica_id],
                 "spec": per_replica_spec[r.replica_id],
+                "paged": per_replica_paged[r.replica_id],
                 "tiers": ({api: c["provider"]
                            for api, c in r.manifest.get("apis", {}).items()}
                           if r.manifest else None),
@@ -668,7 +691,9 @@ class FleetManager:
             cfg, params, slots=fleet.slots, max_len=fleet.max_len,
             prompt_buckets=fleet.prompt_buckets, sync_every=fleet.sync_every,
             prefix_cache_bytes=int(fleet.prefix_cache_mb * (1 << 20)) or None,
-            spec=spec)
+            spec=spec, page_size=fleet.page_size, kv_pages=fleet.kv_pages,
+            kv_watermark=fleet.kv_watermark,
+            prefill_chunk_tokens=fleet.prefill_chunk_tokens)
         batch = None
         if batch_jobs:
             batch = BatchWorkload(service.cluster, step_s=batch_step_s,

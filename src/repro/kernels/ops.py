@@ -38,6 +38,7 @@ from repro.core import hooks
 from repro.kernels import decode_attention as _dec_pallas
 from repro.kernels import flash_attention as _fa_pallas
 from repro.kernels import moe_gmm as _gmm_pallas
+from repro.kernels import paged_attention as _paged_pallas
 from repro.kernels import ref
 from repro.kernels import rmsnorm as _rms_pallas
 
@@ -266,6 +267,22 @@ def interpret_decode_attention(q, k_cache, v_cache, *, lengths=None,
         logit_softcap=logit_softcap, interpret=True)
 
 
+def pallas_paged_decode_attention(q, k_pool, v_pool, block_tables, *,
+                                  lengths=None, window=None, scale=None,
+                                  logit_softcap=None):
+    return _paged_pallas.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths=lengths, window=window,
+        scale=scale, logit_softcap=logit_softcap)
+
+
+def interpret_paged_decode_attention(q, k_pool, v_pool, block_tables, *,
+                                     lengths=None, window=None, scale=None,
+                                     logit_softcap=None):
+    return _paged_pallas.paged_decode_attention(
+        q, k_pool, v_pool, block_tables, lengths=lengths, window=window,
+        scale=scale, logit_softcap=logit_softcap, interpret=True)
+
+
 def interpret_rmsnorm(x, weight, *, eps=1e-6):
     return _rms_pallas.rmsnorm(x, weight, eps=eps, interpret=True)
 
@@ -304,6 +321,16 @@ def _probe_decode(interpret):
         kc = jnp.zeros((1, 8, 1, 128), jnp.float32)
         _dec_pallas.decode_attention(
             q, kc, kc, block_k=8, interpret=interpret).block_until_ready()
+    return probe
+
+
+def _probe_paged_decode(interpret):
+    def probe(profile):
+        q = jnp.zeros((1, 8, 128), jnp.float32)
+        pool = jnp.zeros((2, 8, 1, 128), jnp.float32)
+        bt = jnp.ones((1, 1), jnp.int32)
+        _paged_pallas.paged_decode_attention(
+            q, pool, pool, bt, interpret=interpret).block_until_ready()
     return probe
 
 
@@ -371,6 +398,11 @@ def _register() -> None:
         supports=_is_interp, priority=15, probe=_probe_decode(_INTERP_MODE))
     reg("decode_attention", "pallas-tpu", pallas_decode_attention,
         supports=_is_tpu, priority=20, probe=_probe_decode(_TPU_MODE))
+    reg("paged_decode_attention", "pallas-interpret",
+        interpret_paged_decode_attention, supports=_is_interp, priority=15,
+        probe=_probe_paged_decode(_INTERP_MODE))
+    reg("paged_decode_attention", "pallas-tpu", pallas_paged_decode_attention,
+        supports=_is_tpu, priority=20, probe=_probe_paged_decode(_TPU_MODE))
     reg("mlstm", "xla-blocked", mlstm_chunkwise,
         supports=_is_xla, priority=10)
     reg("rmsnorm", "pallas-interpret", interpret_rmsnorm,

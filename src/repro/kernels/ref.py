@@ -173,6 +173,70 @@ def chunk_attention(
 
 
 # ---------------------------------------------------------------------------
+# paged attention (KV in a shared physical page pool, per-row block tables)
+# ---------------------------------------------------------------------------
+def gather_pages(pool: jax.Array, block_tables: jax.Array) -> jax.Array:
+    """Materialize per-row logical caches from a physical page pool.
+
+    pool: (P, page, ...) fixed-size pages shared by every row;
+    block_tables: (B, N) int32 — physical page id of row b's logical page j.
+    Returns (B, N*page, ...): row b's logical cache in position order. With
+    N*page == max_len this is bit-for-bit the contiguous (B, max_len, ...)
+    cache the slot engine holds (unallocated table entries point at the
+    reserved null page 0, whose garbage sits beyond `lengths` and is masked
+    exactly like the slot cache's stale suffix).
+    """
+    g = pool[block_tables]  # (B, N, page, ...)
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def paged_decode_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    *,
+    lengths: jax.Array | None = None,
+    window: int | None = None,
+    scale: float | None = None,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    """One-token decode attention over a paged KV pool.
+
+    q: (B, Hq, Dh); k_pool, v_pool: (P, page, Hkv, Dh); block_tables: (B, N)
+    int32. The portable tier gathers the pool into the contiguous layout and
+    runs the contiguous oracle, so it is byte-identical to the slot engine's
+    reference path — the parity anchor every paged tier is validated against.
+    """
+    k_cache = gather_pages(k_pool, block_tables)
+    v_cache = gather_pages(v_pool, block_tables)
+    return decode_attention(
+        q, k_cache, v_cache, lengths=lengths, window=window, scale=scale,
+        logit_softcap=logit_softcap)
+
+
+def paged_chunk_attention(
+    q: jax.Array,
+    k_pool: jax.Array,
+    v_pool: jax.Array,
+    block_tables: jax.Array,
+    *,
+    positions: jax.Array,
+    window: int | None = None,
+    scale: float | None = None,
+    logit_softcap: float | None = None,
+) -> jax.Array:
+    """Chunked-prefill attention over a paged KV pool: q (B, Sq, Hq, Dh) at
+    absolute ``positions`` (B, Sq) attends the gathered logical caches (the
+    chunk's own entries already scattered into the pool)."""
+    k_cache = gather_pages(k_pool, block_tables)
+    v_cache = gather_pages(v_pool, block_tables)
+    return chunk_attention(
+        q, k_cache, v_cache, positions=positions, window=window, scale=scale,
+        logit_softcap=logit_softcap)
+
+
+# ---------------------------------------------------------------------------
 # first-order linear recurrence:  h_t = a_t * h_{t-1} + x_t
 # ---------------------------------------------------------------------------
 def linear_recurrence(
@@ -286,6 +350,20 @@ def _register() -> None:
         "chunk_attention(q(B,Sq,Hq,D), k_cache(B,L,Hkv,D), v_cache, *,"
         " positions(B,Sq), window, scale, logit_softcap) -> (B,Sq,Hq,D)",
         chunk_attention,
+    )
+    hooks.register_api(
+        "paged_decode_attention",
+        "paged_decode_attention(q(B,Hq,D), k_pool(P,page,Hkv,D), v_pool,"
+        " block_tables(B,N), *, lengths(B,), window, scale, logit_softcap)"
+        " -> (B,Hq,D)",
+        paged_decode_attention,
+    )
+    hooks.register_api(
+        "paged_chunk_attention",
+        "paged_chunk_attention(q(B,Sq,Hq,D), k_pool(P,page,Hkv,D), v_pool,"
+        " block_tables(B,N), *, positions(B,Sq), window, scale,"
+        " logit_softcap) -> (B,Sq,Hq,D)",
+        paged_chunk_attention,
     )
     hooks.register_api(
         "linear_recurrence",

@@ -42,7 +42,10 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         tenant: str = "serve-demo", fused: bool = True,
         sync_every: int = 1, prefix_cache_mb: float = 0.0,
         shared_prefix_len: int = 0, spec_k: int = 0,
-        spec_proposer: str = "ngram", draft_arch: str | None = None) -> dict:
+        spec_proposer: str = "ngram", draft_arch: str | None = None,
+        page_size: int | None = None, kv_pages: int | None = None,
+        kv_watermark: float = 0.05,
+        prefill_chunk_tokens: int | None = None) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
@@ -60,7 +63,9 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
                              prompt_buckets=(32, 64, 128), fused=fused,
                              sync_every=sync_every,
                              prefix_cache_bytes=int(prefix_cache_mb * (1 << 20))
-                             or None, spec=spec)
+                             or None, spec=spec, page_size=page_size,
+                             kv_pages=kv_pages, kv_watermark=kv_watermark,
+                             prefill_chunk_tokens=prefill_chunk_tokens)
     cluster = scheduler.Cluster(chips=profile.chips)
     service = InvocationService(cluster)
     # the executor is a context manager: the SERVICE lease is released on
@@ -115,6 +120,15 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
               f"{sm['accepted']}/{sm['drafted']} drafts accepted "
               f"({sm['acceptance_rate']:.0%}), "
               f"{sm['tokens_per_slot_step']:.2f} tokens/slot-step")
+    pg = executor.engine.paged_summary()
+    if pg is not None:
+        print(f"paged kv[page={pg['page_size']}]: peak "
+              f"{pg['peak_in_use']}/{pg['pages_total']} pages "
+              f"({pg['cow_copies']} CoW copies, "
+              f"{pg['cow_shared_pages']} pages shared now) | "
+              f"{pg['preemptions']} preemptions, "
+              f"{pg['admit_skips']} watermark skips, "
+              f"{stats['chunk_prefill_calls']} chunked prefill calls")
     lat = executor.engine.latency_summary()
     print(f"latency: ttft p50 {lat['ttft_p50_s'] * 1e3:.1f}ms "
           f"p95 {lat['ttft_p95_s'] * 1e3:.1f}ms | tpot p50 "
@@ -134,7 +148,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               batch_steps: int = 30, prefix_cache_mb: float = 16.0,
               shared_prefix_len: int = 0, multi_turn: bool = False,
               spec_k: int = 0, spec_proposer: str = "ngram",
-              draft_arch: str | None = None) -> dict:
+              draft_arch: str | None = None, page_size: int | None = None,
+              kv_pages: int | None = None) -> dict:
     """Drive the elastic fleet live: same control plane the benchmark
     simulates (repro.fleet), printed as an operator would see it."""
     from repro import fleet as fl
@@ -158,7 +173,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                tick_s=0.1, warm_boot_s=0.5, cold_boot_s=1.5,
                                prefix_cache_mb=prefix_cache_mb,
                                spec_k=spec_k, spec_proposer=spec_proposer,
-                               spec_draft_arch=draft_arch)
+                               spec_draft_arch=draft_arch,
+                               page_size=page_size, kv_pages=kv_pages)
     fm = fl.FleetManager.build(
         cfg, params, chips=chips, fleet=fleet_cfg,
         batch_jobs=[(1, batch_steps)] * batch_jobs)
@@ -186,6 +202,12 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
         print(f"speculative: {sp['accepted']}/{sp['drafted']} drafts "
               f"accepted ({sp['acceptance_rate']:.0%}) across "
               f"{sp['steps']} verify steps")
+    pk = report.paged_kv
+    if pk.get("enabled"):
+        print(f"paged kv: peak {pk['peak_in_use']}/{pk['pages_total']} pages "
+              f"fleet-wide | {pk['cow_copies']} CoW copies, "
+              f"{pk['preemptions']} preemptions, "
+              f"{pk['admit_skips']} watermark skips")
     print(f"engine latency: ttft p95 {report.ttft_p95_s * 1e3:.1f}ms | "
           f"tpot p95 {report.tpot_p95_s * 1e3:.1f}ms (real wall clock)")
     for t, what in fm.timeline:
@@ -229,6 +251,16 @@ def main() -> None:
                          "request (per tenant in fleet mode)")
     ap.add_argument("--multi-turn", action="store_true",
                     help="fleet sessions extend their previous prompt")
+    ap.add_argument("--page-size", type=int, default=None,
+                    help="paged KV: page granularity in tokens (unset keeps "
+                         "contiguous per-slot KV strips)")
+    ap.add_argument("--kv-pages", type=int, default=None,
+                    help="paged KV pool size in pages incl. the null page "
+                         "(unset = full provisioning, slots*max_len tokens)")
+    ap.add_argument("--kv-watermark", type=float, default=0.05,
+                    help="free-page fraction admission keeps in reserve")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="max tokens per chunked-prefill step (paged mode)")
     ap.add_argument("--spec-k", type=int, default=0,
                     help="speculative decoding: drafts per step (0 disables)")
     ap.add_argument("--spec-proposer", default="ngram",
@@ -247,7 +279,8 @@ def main() -> None:
                   shared_prefix_len=args.shared_prefix,
                   multi_turn=args.multi_turn, spec_k=args.spec_k,
                   spec_proposer=args.spec_proposer,
-                  draft_arch=args.draft_arch)
+                  draft_arch=args.draft_arch, page_size=args.page_size,
+                  kv_pages=args.kv_pages)
         return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
@@ -256,7 +289,10 @@ def main() -> None:
               fused=not args.unfused, sync_every=args.sync_every,
               prefix_cache_mb=args.prefix_cache_mb,
               shared_prefix_len=args.shared_prefix, spec_k=args.spec_k,
-              spec_proposer=args.spec_proposer, draft_arch=args.draft_arch)
+              spec_proposer=args.spec_proposer, draft_arch=args.draft_arch,
+              page_size=args.page_size, kv_pages=args.kv_pages,
+              kv_watermark=args.kv_watermark,
+              prefill_chunk_tokens=args.prefill_chunk)
     assert len(out["results"]) == args.requests
     assert out["ledger_tokens"] == out["tokens"]
 

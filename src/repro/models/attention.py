@@ -152,6 +152,80 @@ def prefill_chunk(p, cfg, x, positions, state, start, lengths, *,
     return y, {"k": k_cache, "v": v_cache}
 
 
+def init_paged_state(cfg, num_pages: int, page_size: int, dtype):
+    """Paged KV pool: ``num_pages`` fixed-size pages shared by every request
+    (physical page 0 is the engine's reserved null page). Same tree structure
+    as :func:`init_state` with the (batch, max_len) axes replaced by
+    (num_pages, page_size)."""
+    hd = cfg.resolved_head_dim
+    shape = (num_pages, page_size, cfg.num_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill_chunk_paged(p, cfg, x, positions, state, block_tables, page_size,
+                        start, lengths, *, window: int | None = None):
+    """`prefill_chunk` against a paged KV pool: the chunk's K/V are scattered
+    through the row's block table and the queries attend the gathered logical
+    cache. Pad entries (chunk index >= lengths - start) are routed to the
+    reserved null page 0 instead of dropped — same stale-beyond-the-length
+    contract, no owned page is ever touched by a pad write.
+
+    state: {"k","v"} (P, page, Hkv, Dh) pools; block_tables: (B, N) int32.
+    """
+    b, s, _ = x.shape
+    q, k, v = _qkv(p, cfg, x, positions)
+    n = block_tables.shape[1]
+    # pads AND positions past the table's capacity route to the null page
+    # (the contiguous path drops both via mode="drop"; spec verify chunks
+    # near max_len can carry positions >= n*page_size)
+    valid = (jnp.arange(s)[None, :] < (lengths - start)[:, None]) \
+        & (positions < n * page_size)
+    page_idx = jnp.clip(positions // page_size, 0, n - 1)
+    phys = jnp.take_along_axis(block_tables, page_idx, axis=1)
+    phys = jnp.where(valid, phys, 0)
+    offset = positions % page_size
+    k_pool = state["k"].at[phys, offset].set(k.astype(state["k"].dtype))
+    v_pool = state["v"].at[phys, offset].set(v.astype(state["v"].dtype))
+    o = hooks.call(
+        "paged_chunk_attention", q, k_pool, v_pool, block_tables,
+        positions=positions, window=window, logit_softcap=cfg.logit_softcap,
+    )
+    y = layers.linear(p["wo"], o.reshape(b, s, -1))
+    return y, {"k": k_pool, "v": v_pool}
+
+
+def decode_paged(p, cfg, x, state, block_tables, page_size, lengths, *,
+                 window: int | None = None):
+    """Single-token decode against a paged KV pool. Rows with lengths == 0
+    (empty slots, rows still prefilling) write to the reserved null page 0;
+    active rows write at index lengths-1 inside their own last page, which
+    the engine guarantees is exclusively owned (copy-on-write happens before
+    the step when a prefix-shared page would be written)."""
+    b, _ = x.shape
+    hd = cfg.resolved_head_dim
+    pos = (lengths - 1).astype(jnp.int32)
+    q = layers.linear(p["wq"], x).reshape(b, 1, cfg.num_heads, hd)
+    k = layers.linear(p["wk"], x).reshape(b, 1, cfg.num_kv_heads, hd)
+    v = layers.linear(p["wv"], x).reshape(b, 1, cfg.num_kv_heads, hd)
+    if cfg.pos == "rope":
+        q = layers.apply_rope(q, pos[:, None], theta=cfg.rope_theta)
+        k = layers.apply_rope(k, pos[:, None], theta=cfg.rope_theta)
+    n = block_tables.shape[1]
+    safe = jnp.maximum(pos, 0)
+    page_idx = jnp.clip(safe // page_size, 0, n - 1)
+    phys = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    phys = jnp.where(lengths > 0, phys, 0)
+    offset = safe % page_size
+    k_pool = state["k"].at[phys, offset].set(k[:, 0].astype(state["k"].dtype))
+    v_pool = state["v"].at[phys, offset].set(v[:, 0].astype(state["v"].dtype))
+    o = hooks.call(
+        "paged_decode_attention", q[:, 0], k_pool, v_pool, block_tables,
+        lengths=lengths, window=window, logit_softcap=cfg.logit_softcap,
+    )
+    y = layers.linear(p["wo"], o.reshape(b, -1))
+    return y, {"k": k_pool, "v": v_pool}
+
+
 def decode(p, cfg, x, state, lengths, *, window: int | None = None):
     """Single-token decode. x: (B, D); lengths: (B,) valid entries *including*
     the current token, which is written at index lengths-1."""

@@ -142,6 +142,103 @@ def prefill_chunk(p, cfg, x, positions, state, start, lengths, *, window=None):
     return y, {"ckv": ckv, "krope": krope}
 
 
+def init_paged_state(cfg, num_pages: int, page_size: int, dtype):
+    """Paged compressed-latent pool (page 0 reserved as the null page)."""
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((num_pages, page_size, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((num_pages, page_size, m.qk_rope_head_dim), dtype),
+    }
+
+
+def _gather_pages(pool, block_tables):
+    """(P, page, ...) pool + (B, N) tables -> (B, N*page, ...) logical cache
+    (same contract as kernels/ref.py::gather_pages; local copy keeps the
+    model layer off the kernels package)."""
+    g = pool[block_tables]
+    return g.reshape((g.shape[0], g.shape[1] * g.shape[2]) + g.shape[3:])
+
+
+def prefill_chunk_paged(p, cfg, x, positions, state, block_tables, page_size,
+                        start, lengths, *, window=None):
+    """`prefill_chunk` against paged latent pools: scatter the chunk's
+    latents through the block table, gather the logical caches, and run the
+    identical decompress-and-attend body. The latent cache is single-"head"
+    and tiny (kv_lora_rank + rope per token), so the portable gather is the
+    paged tier here — the paged Pallas kernel targets the GQA K/V layout."""
+    del window
+    m = cfg.mla
+    b, s, _ = x.shape
+    n = block_tables.shape[1]
+    max_len = n * page_size
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv, k_rope = _latents(p, cfg, x, positions)
+    # pads AND positions past the table's capacity route to the null page
+    # (the contiguous path drops both via mode="drop")
+    valid = (jnp.arange(s)[None, :] < (lengths - start)[:, None]) \
+        & (positions < max_len)
+    page_idx = jnp.clip(positions // page_size, 0, n - 1)
+    phys = jnp.where(valid, jnp.take_along_axis(block_tables, page_idx, axis=1), 0)
+    offset = positions % page_size
+    ckv_pool = state["ckv"].at[phys, offset].set(c_kv.astype(state["ckv"].dtype))
+    krope_pool = state["krope"].at[phys, offset].set(
+        k_rope[:, :, 0, :].astype(state["krope"].dtype))
+    ckv = _gather_pages(ckv_pool, block_tables)
+    krope = _gather_pages(krope_pool, block_tables)
+    k_nope = layers.linear(p["w_uk"], ckv).reshape(
+        b, max_len, cfg.num_heads, m.qk_nope_head_dim)
+    v = layers.linear(p["w_uv"], ckv).reshape(
+        b, max_len, cfg.num_heads, m.v_head_dim)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope,
+         jnp.broadcast_to(krope[:, :, None, :],
+                          (b, max_len, cfg.num_heads, m.qk_rope_head_dim))],
+        axis=-1)
+    o = hooks.call("chunk_attention", q, k, v, positions=positions, scale=scale)
+    y = layers.linear(p["wo"], o.reshape(b, s, -1))
+    return y, {"ckv": ckv_pool, "krope": krope_pool}
+
+
+def decode_paged(p, cfg, x, state, block_tables, page_size, lengths, *,
+                 window=None):
+    """Absorbed-form decode against paged latent pools: scatter the current
+    token's latents through the block table, gather the logical caches, and
+    run the identical absorbed attention body."""
+    del window
+    m = cfg.mla
+    b, _ = x.shape
+    n = block_tables.shape[1]
+    pos = (lengths - 1).astype(jnp.int32)
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    q_nope, q_rope = _queries(p, cfg, x[:, None, :], pos[:, None])
+    q_nope = q_nope.reshape(b, cfg.num_heads, m.qk_nope_head_dim)
+    q_rope = q_rope.reshape(b, cfg.num_heads, m.qk_rope_head_dim)
+    c_kv_t, k_rope_t = _latents(p, cfg, x[:, None, :], pos[:, None])
+    safe = jnp.maximum(pos, 0)
+    page_idx = jnp.clip(safe // page_size, 0, n - 1)
+    phys = jnp.take_along_axis(block_tables, page_idx[:, None], axis=1)[:, 0]
+    phys = jnp.where(lengths > 0, phys, 0)
+    offset = safe % page_size
+    ckv_pool = state["ckv"].at[phys, offset].set(
+        c_kv_t[:, 0].astype(state["ckv"].dtype))
+    krope_pool = state["krope"].at[phys, offset].set(
+        k_rope_t[:, 0, 0].astype(state["krope"].dtype))
+    ckv = _gather_pages(ckv_pool, block_tables)
+    krope = _gather_pages(krope_pool, block_tables)
+    w_uk = p["w_uk"]["w"].reshape(m.kv_lora_rank, cfg.num_heads, m.qk_nope_head_dim)
+    q_lat = jnp.einsum("bhn,chn->bhc", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32))
+    q_cat = jnp.concatenate([q_lat.astype(x.dtype), q_rope], axis=-1)
+    k_cat = jnp.concatenate([ckv, krope], axis=-1)[:, :, None, :]
+    v_lat = ckv[:, :, None, :]
+    o_lat = hooks.call("decode_attention", q_cat, k_cat, v_lat, lengths=lengths, scale=scale)
+    w_uv = p["w_uv"]["w"].reshape(m.kv_lora_rank, cfg.num_heads, m.v_head_dim)
+    o = jnp.einsum("bhc,chv->bhv", o_lat.astype(jnp.float32), w_uv.astype(jnp.float32))
+    y = layers.linear(p["wo"], o.astype(x.dtype).reshape(b, -1))
+    return y, {"ckv": ckv_pool, "krope": krope_pool}
+
+
 def decode(p, cfg, x, state, lengths, *, window=None):
     """Absorbed-form decode. x: (B, D); cache = latent (576/token for V3)."""
     del window

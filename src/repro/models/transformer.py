@@ -29,7 +29,8 @@ from repro.models import attention, ffn, frontends, layers, mla, moe, rglru, xls
 # ---------------------------------------------------------------------------
 class _MixerAdapter:
     def __init__(self, init, apply, prefill, init_state, decode,
-                 prefill_chunk):
+                 prefill_chunk, *, init_paged_state=None, decode_paged=None,
+                 prefill_chunk_paged=None):
         self.init = init
         self.apply = apply
         self.prefill = prefill
@@ -38,18 +39,33 @@ class _MixerAdapter:
         # continuation prefill from an existing state at a per-row position
         # offset (the suffix-only half of prefix-cache reuse)
         self.prefill_chunk = prefill_chunk
+        # paged-KV variants (vLLM-style shared page pool + per-row block
+        # tables); None for recurrent mixers, whose state is not positional
+        # and cannot be paged
+        self.init_paged_state = init_paged_state
+        self.decode_paged = decode_paged
+        self.prefill_chunk_paged = prefill_chunk_paged
 
 
 _MIXERS: dict[str, _MixerAdapter] = {
     "global_attn": _MixerAdapter(
         attention.init, attention.apply, attention.prefill,
-        attention.init_state, attention.decode, attention.prefill_chunk),
+        attention.init_state, attention.decode, attention.prefill_chunk,
+        init_paged_state=attention.init_paged_state,
+        decode_paged=attention.decode_paged,
+        prefill_chunk_paged=attention.prefill_chunk_paged),
     "local_attn": _MixerAdapter(
         attention.init, attention.apply, attention.prefill,
-        attention.init_state, attention.decode, attention.prefill_chunk),
+        attention.init_state, attention.decode, attention.prefill_chunk,
+        init_paged_state=attention.init_paged_state,
+        decode_paged=attention.decode_paged,
+        prefill_chunk_paged=attention.prefill_chunk_paged),
     "mla": _MixerAdapter(
         mla.init, mla.apply, mla.prefill, mla.init_state, mla.decode,
-        mla.prefill_chunk),
+        mla.prefill_chunk,
+        init_paged_state=mla.init_paged_state,
+        decode_paged=mla.decode_paged,
+        prefill_chunk_paged=mla.prefill_chunk_paged),
     "rglru": _MixerAdapter(
         rglru.init, rglru.apply, rglru.prefill, rglru.init_state,
         rglru.decode, rglru.prefill_chunk),
@@ -62,6 +78,14 @@ _MIXERS: dict[str, _MixerAdapter] = {
         xlstm.init_slstm_state, xlstm.decode_slstm,
         xlstm.prefill_slstm_chunk),
 }
+
+
+def supports_paged_kv(cfg) -> bool:
+    """True when every mixer in the arch has a paged-KV path (attention
+    family: global/local attention + MLA). Recurrent mixers carry
+    non-positional state that cannot live in a shared page pool."""
+    return all(_MIXERS[s.mixer].decode_paged is not None
+               for s in tuple(cfg.prefix) + tuple(cfg.pattern))
 
 
 def _window(cfg, spec) -> int | None:
@@ -129,13 +153,25 @@ def prefill_block(p, cfg, spec, x, positions, max_len):
     return sharding.constraint(x, "batch", "seq", "embed"), state
 
 
-def prefill_chunk_block(p, cfg, spec, x, positions, state, start, lengths):
+def prefill_chunk_block(p, cfg, spec, x, positions, state, start, lengths,
+                        *, block_tables=None, page_size=None):
     """Like prefill_block but continues from an existing mixer state at a
-    per-row position offset (positions: (B, Sc) absolute)."""
+    per-row position offset (positions: (B, Sc) absolute). When
+    ``block_tables`` is given, ``state`` is a shared page pool and writes
+    land through the per-row block table instead of a per-slot cache."""
     n1 = layers.norm(p["norm1"], x)
-    h, new_state = _MIXERS[spec.mixer].prefill_chunk(
-        p["mixer"], cfg, n1, positions, state, start, lengths,
-        window=_window(cfg, spec))
+    ad = _MIXERS[spec.mixer]
+    if block_tables is not None:
+        if ad.prefill_chunk_paged is None:
+            raise NotImplementedError(
+                f"mixer {spec.mixer!r} has no paged-KV prefill path")
+        h, new_state = ad.prefill_chunk_paged(
+            p["mixer"], cfg, n1, positions, state, block_tables, page_size,
+            start, lengths, window=_window(cfg, spec))
+    else:
+        h, new_state = ad.prefill_chunk(
+            p["mixer"], cfg, n1, positions, state, start, lengths,
+            window=_window(cfg, spec))
     if cfg.parallel_residual and spec.ffn != "none":
         f, _ = _apply_ffn(p, cfg, spec, n1)
         x = x + h + f
@@ -151,11 +187,21 @@ def init_block_state(cfg, spec, batch, max_len, dtype):
     return _MIXERS[spec.mixer].init_state(cfg, batch, max_len, dtype)
 
 
-def decode_block(p, cfg, spec, x, state, lengths):
+def decode_block(p, cfg, spec, x, state, lengths, *, block_tables=None,
+                 page_size=None):
     """Single-token block. x: (B, D) -> ((B, D), new_state)."""
     n1 = layers.norm(p["norm1"], x)
-    h, new_state = _MIXERS[spec.mixer].decode(
-        p["mixer"], cfg, n1, state, lengths, window=_window(cfg, spec))
+    ad = _MIXERS[spec.mixer]
+    if block_tables is not None:
+        if ad.decode_paged is None:
+            raise NotImplementedError(
+                f"mixer {spec.mixer!r} has no paged-KV decode path")
+        h, new_state = ad.decode_paged(
+            p["mixer"], cfg, n1, state, block_tables, page_size, lengths,
+            window=_window(cfg, spec))
+    else:
+        h, new_state = ad.decode(
+            p["mixer"], cfg, n1, state, lengths, window=_window(cfg, spec))
     if cfg.parallel_residual and spec.ffn != "none":
         f, _ = _apply_ffn(p, cfg, spec, n1)
         x = x + h + f
@@ -310,6 +356,28 @@ def init_states(cfg, batch: int, max_len: int, dtype):
     return {"prefix": prefix, "scan": tuple(scan)}
 
 
+def init_paged_states(cfg, num_pages: int, page_size: int, dtype):
+    """Paged serving state: one shared page pool per layer instead of a
+    per-slot contiguous cache. Physical page 0 is the null page — inactive
+    rows' writes are routed there and it is never handed to a request, so
+    the usable pool is ``num_pages - 1`` pages."""
+    def one(spec):
+        ad = _MIXERS[spec.mixer]
+        if ad.init_paged_state is None:
+            raise NotImplementedError(
+                f"mixer {spec.mixer!r} has no paged-KV state; paged serving "
+                "requires an attention-family arch (see supports_paged_kv)")
+        return ad.init_paged_state(cfg, num_pages, page_size, dtype)
+
+    prefix = tuple(one(spec) for spec in cfg.prefix)
+    scan = []
+    for spec in cfg.pattern:
+        st = one(spec)
+        scan.append(jax.tree.map(
+            lambda a: jnp.tile(a[None], (cfg.scan_repeats,) + (1,) * a.ndim), st))
+    return {"prefix": prefix, "scan": tuple(scan)}
+
+
 def prefill(params, cfg, tokens, max_len: int, *, patch_embeds=None):
     """Process a full prompt, building serving state.
 
@@ -369,7 +437,8 @@ def _chunk_embed(params, cfg, tokens, start):
     return sharding.constraint(x, "batch", "seq", "embed"), positions
 
 
-def prefill_chunk(params, cfg, tokens, states, start, lengths):
+def prefill_chunk(params, cfg, tokens, states, start, lengths, *,
+                  block_tables=None, page_size=None):
     """Continue a prefill from per-row position ``start``: process a
     (right-padded) token chunk at absolute positions [start, start+Sc) on top
     of existing serving ``states`` (e.g. a prefix restored from a prefix
@@ -388,7 +457,8 @@ def prefill_chunk(params, cfg, tokens, states, start, lengths):
     new_prefix = []
     for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
         x, st2 = prefill_chunk_block(p, cfg, spec, x, positions, st, start,
-                                     lengths)
+                                     lengths, block_tables=block_tables,
+                                     page_size=page_size)
         new_prefix.append(st2)
 
     new_scan = states["scan"]
@@ -399,7 +469,8 @@ def prefill_chunk(params, cfg, tokens, states, start, lengths):
             for j, spec in enumerate(cfg.pattern):
                 x, st2 = prefill_chunk_block(
                     layer_params[j], cfg, spec, x, positions, layer_states[j],
-                    start, lengths)
+                    start, lengths, block_tables=block_tables,
+                    page_size=page_size)
                 outs.append(st2)
             return x, tuple(outs)
 
@@ -414,7 +485,8 @@ def prefill_chunk(params, cfg, tokens, states, start, lengths):
     return logits[:, 0], new_states, lengths
 
 
-def verify_chunk(params, cfg, tokens, states, start):
+def verify_chunk(params, cfg, tokens, states, start, *, block_tables=None,
+                 page_size=None):
     """Speculative-verification forward: process a (B, C) token chunk at
     absolute positions [start, start+C) and return the logits at EVERY
     position — one target forward verifies C = K+1 speculative positions
@@ -442,7 +514,8 @@ def verify_chunk(params, cfg, tokens, states, start):
     new_prefix = []
     for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
         x, st2 = prefill_chunk_block(p, cfg, spec, x, positions, st, start,
-                                     lengths)
+                                     lengths, block_tables=block_tables,
+                                     page_size=page_size)
         new_prefix.append(st2)
 
     new_scan = states["scan"]
@@ -453,7 +526,8 @@ def verify_chunk(params, cfg, tokens, states, start):
             for j, spec in enumerate(cfg.pattern):
                 x, st2 = prefill_chunk_block(
                     layer_params[j], cfg, spec, x, positions, layer_states[j],
-                    start, lengths)
+                    start, lengths, block_tables=block_tables,
+                    page_size=page_size)
                 outs.append(st2)
             return x, tuple(outs)
 
@@ -490,7 +564,8 @@ def verify_stepwise(params, cfg, tokens, states, lengths, active):
     return jnp.stack(logits_all, axis=1), states_all
 
 
-def decode_step(params, cfg, tokens, states, lengths):
+def decode_step(params, cfg, tokens, states, lengths, *, block_tables=None,
+                page_size=None):
     """One decode step for the whole stack.
 
     tokens: (B,) int32 ((B, K) for audio) — the token(s) at position
@@ -518,7 +593,8 @@ def decode_step(params, cfg, tokens, states, lengths):
 
     new_prefix = []
     for p, spec, st in zip(params["prefix"], cfg.prefix, states["prefix"]):
-        x, st2 = decode_block(p, cfg, spec, x, st, lengths)
+        x, st2 = decode_block(p, cfg, spec, x, st, lengths,
+                              block_tables=block_tables, page_size=page_size)
         new_prefix.append(st2)
 
     new_scan = states["scan"]
@@ -527,7 +603,10 @@ def decode_step(params, cfg, tokens, states, lengths):
             layer_params, layer_states = xs
             new_states = []
             for j, spec in enumerate(cfg.pattern):
-                x, st2 = decode_block(layer_params[j], cfg, spec, x, layer_states[j], lengths)
+                x, st2 = decode_block(layer_params[j], cfg, spec, x,
+                                      layer_states[j], lengths,
+                                      block_tables=block_tables,
+                                      page_size=page_size)
                 new_states.append(st2)
             return x, tuple(new_states)
 
@@ -540,7 +619,8 @@ def decode_step(params, cfg, tokens, states, lengths):
     return logits[:, 0], new_states
 
 
-def decode_and_sample(params, cfg, tokens, states, lengths, key, sample_fn):
+def decode_and_sample(params, cfg, tokens, states, lengths, key, sample_fn,
+                      *, block_tables=None, page_size=None):
     """Fused decode + sample: ONE traced program for the serving hot path.
 
     ``sample_fn(key, logits) -> int32 ids`` runs inside the same jit as the
@@ -550,7 +630,9 @@ def decode_and_sample(params, cfg, tokens, states, lengths, key, sample_fn):
 
     Returns (new_tokens (B,) / (B, K) int32, new_states, logits).
     """
-    logits, new_states = decode_step(params, cfg, tokens, states, lengths)
+    logits, new_states = decode_step(params, cfg, tokens, states, lengths,
+                                     block_tables=block_tables,
+                                     page_size=page_size)
     return sample_fn(key, logits), new_states, logits
 
 

@@ -1,0 +1,404 @@
+"""Paged KV block manager: free-list page allocator with ref-counted
+copy-on-write sharing, plus a radix prefix cache that shares pages by
+ALIASING instead of copying.
+
+The slot engine reserves a contiguous ``max_len`` KV strip per slot, so a
+replica's concurrency is capped by ``slots`` no matter how short its
+requests are. vLLM's observation is that KV memory should be paged like
+virtual memory: the pool is cut into fixed-size pages, each request holds a
+per-row *block table* (logical page j -> physical page id), and pages are
+allocated on demand as the sequence grows. Short requests then hold pages
+proportional to their length, and one replica sustains hundreds of in-flight
+requests in the same KV budget.
+
+Three pieces live here — all pure host-side control plane (the device-side
+gather/scatter lives in ``models/attention.py``/``mla.py`` and the paged
+kernels):
+
+  * :class:`BlockManager` — LIFO free-list allocator over physical pages
+    with per-page refcounts. Physical page 0 is the **null page**: inactive
+    rows' writes are routed there and it is never allocated. Refcounts make
+    pages shareable: a prefix-cache hit aliases the cached pages into the
+    new request's block table (incref) instead of copying KV; the last,
+    partially-filled page of a shared prefix is **copy-on-write** — the
+    engine copies it to a fresh page before a request writes into it while
+    ``ref > 1``. A **watermark** holds back a fraction of the pool at
+    admission time so in-flight requests can keep growing without
+    immediately hitting preemption.
+  * :class:`PagedPrefixCache` — radix tree over prompt tokens, as in
+    ``prefix_cache.PrefixCache``, but each node holds the *page-id list*
+    covering its whole prefix ``[0, depth_end)`` rather than extracted
+    state slices. Insert donates the request's prompt pages (incref — zero
+    copies, zero device work); restore increfs the matched pages straight
+    into the new request's block table. Byte accounting counts DISTINCT
+    pages held (nodes alias each other's pages), and LRU eviction drops
+    unreferenced-by-any-node leaves under a byte budget. No pins are
+    needed: a request's own increfs keep its pages alive even if the node
+    it restored from is evicted mid-flight.
+  * :func:`pages_for` — the one place the tokens->pages rounding rule
+    lives.
+
+Determinism: the free list is a LIFO stack seeded in descending order, so
+an identical admit/retire/fork/CoW sequence always yields identical page
+assignments — asserted by the block-manager property tests and relied on
+by the byte-parity tests against the slot engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+__all__ = ["BlockManager", "PagedPrefixCache", "PagedMatch", "pages_for"]
+
+
+def pages_for(tokens: int, page_size: int) -> int:
+    """Pages needed to hold ``tokens`` cache entries."""
+    return -(-int(tokens) // int(page_size))
+
+
+class BlockManager:
+    """Free-list page allocator with refcounts, CoW, and a watermark.
+
+    ``num_pages`` counts physical pages INCLUDING the reserved null page 0;
+    the allocatable pool is ``num_pages - 1`` pages. ``watermark`` is the
+    fraction of the allocatable pool held back from admission-time
+    allocation (decode growth may still use it — it exists precisely so
+    admission cannot starve in-flight requests of growth room).
+    """
+
+    def __init__(self, num_pages: int, page_size: int, *,
+                 watermark: float = 0.05):
+        assert num_pages >= 2, "need at least the null page + one real page"
+        assert page_size >= 1
+        self.num_pages = int(num_pages)
+        self.page_size = int(page_size)
+        # LIFO stack, seeded descending so page 1 allocates first
+        self._free: list[int] = list(range(self.num_pages - 1, 0, -1))
+        self.ref = np.zeros(self.num_pages, np.int32)
+        pool = self.num_pages - 1
+        self.watermark_pages = min(pool - 1, max(0, int(round(pool * watermark))))
+        self.stats = {"allocs": 0, "frees": 0, "cow_copies": 0,
+                      "peak_in_use": 0, "alloc_failures": 0}
+
+    # ------------------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return (self.num_pages - 1) - len(self._free)
+
+    def can_alloc(self, n: int, *, respect_watermark: bool = False) -> bool:
+        reserve = self.watermark_pages if respect_watermark else 0
+        return len(self._free) - n >= reserve
+
+    # ------------------------------------------------------------------
+    def alloc(self, n: int = 1) -> list[int]:
+        """Allocate ``n`` pages with refcount 1. Callers gate on
+        :meth:`can_alloc`; running dry anyway is a bug (the engine preempts
+        before it can happen)."""
+        if n > len(self._free):
+            self.stats["alloc_failures"] += 1
+            raise RuntimeError(
+                f"KV page pool exhausted: want {n}, free {len(self._free)}")
+        out = [self._free.pop() for _ in range(n)]
+        for p in out:
+            assert self.ref[p] == 0, f"allocated page {p} has live refs"
+            self.ref[p] = 1
+        self.stats["allocs"] += n
+        self.stats["peak_in_use"] = max(self.stats["peak_in_use"], self.in_use)
+        return out
+
+    def incref(self, pages) -> None:
+        for p in pages:
+            assert 0 < p < self.num_pages, f"incref of invalid page {p}"
+            assert self.ref[p] > 0, f"incref of free page {p}"
+            self.ref[p] += 1
+
+    def decref(self, pages) -> None:
+        """Drop one reference per page; pages reaching 0 return to the free
+        list (LIFO, in the order given — deterministic)."""
+        for p in pages:
+            assert 0 < p < self.num_pages, f"decref of invalid page {p}"
+            assert self.ref[p] > 0, f"double free of page {p}"
+            self.ref[p] -= 1
+            if self.ref[p] == 0:
+                self._free.append(p)
+                self.stats["frees"] += 1
+
+    def cow(self, page: int) -> int:
+        """Copy-on-write bookkeeping: allocate a private copy target for
+        ``page`` and release the caller's share of the original. The caller
+        owns the DEVICE copy (pool[new] <- pool[old]) — this is control
+        plane only. Requires ``ref[page] > 1`` (with one ref a copy would
+        be pointless)."""
+        assert self.ref[page] > 1, f"CoW of unshared page {page}"
+        (new,) = self.alloc(1)
+        self.decref([page])
+        self.stats["cow_copies"] += 1
+        return new
+
+    # ------------------------------------------------------------------
+    def utilization(self, total_tokens: int) -> dict:
+        """Occupancy + internal fragmentation given the engine's count of
+        live cache entries (sum of active request lengths). Fragmentation
+        is the fraction of in-use page capacity not holding a live token —
+        the slack the page-granular rounding costs (the slot engine's
+        equivalent figure is ``1 - sum(len)/(slots*max_len)``)."""
+        cap = self.in_use * self.page_size
+        shared = int(np.sum(self.ref > 1))
+        return {
+            "pages_total": self.num_pages - 1,
+            "pages_free": self.free_pages,
+            "pages_in_use": self.in_use,
+            "watermark_pages": self.watermark_pages,
+            "fragmentation": 0.0 if cap == 0 else max(
+                0.0, 1.0 - total_tokens / cap),
+            "cow_shared_pages": shared,
+            "cow_share_ratio": 0.0 if self.in_use == 0 else shared / self.in_use,
+        }
+
+    def report(self) -> dict:
+        return dict(self.stats)
+
+    def __repr__(self) -> str:  # debugging aid
+        return (f"BlockManager(pages={self.num_pages}, free={self.free_pages},"
+                f" page_size={self.page_size})")
+
+
+# ---------------------------------------------------------------------------
+# Paged radix prefix cache
+# ---------------------------------------------------------------------------
+class _PNode:
+    __slots__ = ("tokens", "children", "parent", "pages", "true_len",
+                 "depth_end", "last_use")
+
+    def __init__(self, tokens: np.ndarray, parent: "_PNode | None"):
+        self.tokens = tokens              # (K, seg) edge label
+        self.children: dict[tuple, _PNode] = {}
+        self.parent = parent
+        self.pages: list[int] = []        # pages covering [0, depth_end)
+        self.true_len = int(tokens.shape[-1])
+        self.depth_end = 0
+        self.last_use = 0
+
+    @property
+    def depth_start(self) -> int:
+        return self.depth_end - self.true_len
+
+
+@dataclasses.dataclass
+class PagedMatch:
+    """Radix lookup result. ``pages`` covers ``[0, usable)`` cache entries
+    (``pages_for(usable, ps)`` ids); content past ``usable`` inside the last
+    page belongs to a diverging cached suffix — masked out of every read by
+    the length, and CoW-protected against the new request's writes."""
+
+    path: list  # [(node, cols_used)]
+    raw_len: int
+    usable: int
+    pages: list[int]
+
+
+class PagedPrefixCache:
+    """Radix prefix cache that shares KV by page aliasing (see module
+    docstring). All sharing goes through ``bm`` refcounts; ``page_bytes``
+    is the device footprint of ONE page summed across every layer's pools
+    (the engine computes it from the paged state tree)."""
+
+    def __init__(self, bm: BlockManager, *, capacity_bytes: int,
+                 page_bytes: int):
+        self.bm = bm
+        self.capacity_bytes = int(capacity_bytes)
+        self.page_bytes = max(1, int(page_bytes))
+        self.root = _PNode(np.zeros((1, 0), np.int32), None)
+        self._holds: dict[int, int] = {}  # page id -> # nodes listing it
+        self.bytes = 0                    # distinct held pages * page_bytes
+        self.nodes = 0
+        self._tick = 0
+        self.stats = {"inserts": 0, "splits": 0, "evictions": 0,
+                      "evicted_bytes": 0, "hits": 0, "hit_tokens": 0}
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _norm(prompt) -> np.ndarray:
+        t = np.asarray(prompt, np.int32)
+        return t[None, :] if t.ndim == 1 else t
+
+    def _hold(self, pages) -> None:
+        self.bm.incref(pages)
+        for p in pages:
+            c = self._holds.get(p, 0)
+            if c == 0:
+                self.bytes += self.page_bytes
+            self._holds[p] = c + 1
+
+    def _unhold(self, pages) -> None:
+        for p in pages:
+            c = self._holds[p]
+            if c == 1:
+                del self._holds[p]
+                self.bytes -= self.page_bytes
+            else:
+                self._holds[p] = c - 1
+        self.bm.decref(pages)
+
+    def _touch(self, path) -> None:
+        self._tick += 1
+        for node, _ in path:
+            node.last_use = self._tick
+
+    # ------------------------------------------------------------------
+    def match(self, prompt, *, limit: int | None = None) -> PagedMatch:
+        """Longest cached prefix; ``limit`` caps the usable depth (the
+        engine passes len(prompt)-1 so the prefill suffix is never empty).
+        The matched pages are NOT yet referenced for the caller — callers
+        that keep them must :meth:`BlockManager.incref` them in the same
+        control-plane tick (there is no device work in between, so nothing
+        can evict the node first)."""
+        toks = self._norm(prompt)
+        length = toks.shape[-1]
+        if limit is None:
+            limit = length
+        path: list = []
+        node, depth = self.root, 0
+        while depth < length:
+            child = node.children.get(tuple(int(v) for v in toks[:, depth]))
+            if child is None:
+                break
+            w = min(child.true_len, length - depth)
+            span = toks[:, depth:depth + w]
+            eq = np.all(child.tokens[:, :w] == span, axis=0)
+            m = w if eq.all() else int(np.argmax(~eq))
+            if m == 0:
+                break
+            path.append((child, m))
+            depth += m
+            if m < child.true_len:
+                break
+            node = child
+        usable = min(depth, limit)
+        pages: list[int] = []
+        if usable > 0:
+            deepest = path[-1][0]
+            pages = deepest.pages[:pages_for(usable, self.bm.page_size)]
+            self._touch(path)
+            self.stats["hits"] += 1
+            self.stats["hit_tokens"] += usable
+        return PagedMatch(path=path, raw_len=depth, usable=usable, pages=pages)
+
+    # ------------------------------------------------------------------
+    def _split(self, node: _PNode, m: int) -> _PNode:
+        """Split ``node``'s edge at offset m. The new head's page list is a
+        prefix of ``node``'s — pure aliasing, no device work."""
+        parent = node.parent
+        head_tok = node.tokens[:, :m]
+        head = _PNode(head_tok, parent)
+        head.depth_end = node.depth_start + m
+        head.last_use = node.last_use
+        head.pages = node.pages[:pages_for(head.depth_end, self.bm.page_size)]
+        self._hold(head.pages)
+        node.tokens = node.tokens[:, m:]
+        node.true_len -= m
+        node.parent = head
+        parent.children[tuple(int(v) for v in head_tok[:, 0])] = head
+        head.children[tuple(int(v) for v in node.tokens[:, 0])] = node
+        self.nodes += 1
+        self.stats["splits"] += 1
+        return head
+
+    def insert(self, prompt, pages: list[int]) -> None:
+        """Donate ``pages`` — the request's block-table entries covering its
+        prompt ``[0, len(prompt))`` — to the tree. The cache takes its OWN
+        references (incref); the donor keeps writing its decode suffix into
+        the tail page, which is fine: cached content only spans prompt
+        positions, and the donor's first tail write CoWs it out of the
+        shared page anyway (its ref is now > 1)."""
+        toks = self._norm(prompt)
+        length = toks.shape[-1]
+        assert len(pages) == pages_for(length, self.bm.page_size), (
+            f"insert: {len(pages)} pages cannot cover {length} tokens")
+        match = self.match(prompt)
+        depth = match.raw_len
+        if depth >= length:
+            return  # already fully cached
+        node = match.path[-1][0] if match.path else self.root
+        if match.path and match.path[-1][1] < node.true_len:
+            node = self._split(node, match.path[-1][1])
+        leaf = _PNode(toks[:, depth:], node)
+        leaf.depth_end = length
+        leaf.pages = list(pages)
+        self._hold(leaf.pages)
+        node.children[tuple(int(v) for v in leaf.tokens[:, 0])] = leaf
+        self.nodes += 1
+        self.stats["inserts"] += 1
+        self._touch(match.path + [(leaf, length - depth)])
+        self.evict_to_budget()
+
+    # ------------------------------------------------------------------
+    def evict_to_budget(self) -> None:
+        """Drop least-recently-used leaves until distinct-page bytes fit the
+        budget. Same leaf-first strategy as the slot cache, minus pins —
+        in-flight requests hold their own page refs, so eviction can never
+        free a page out from under one."""
+        while self.bytes > self.capacity_bytes:
+            leaves = sorted(
+                (n for n in self._iter_nodes()
+                 if not n.children and n.parent is not None),
+                key=lambda n: n.last_use)
+            evicted = False
+            for victim in leaves:
+                if self.bytes <= self.capacity_bytes:
+                    break
+                before = self.bytes
+                del victim.parent.children[
+                    tuple(int(v) for v in victim.tokens[:, 0])]
+                self._unhold(victim.pages)
+                self.nodes -= 1
+                self.stats["evictions"] += 1
+                self.stats["evicted_bytes"] += before - self.bytes
+                evicted = True
+            if not evicted:
+                return  # only the root left; nothing to drop
+
+    def reclaim(self, pages_needed: int) -> bool:
+        """Evict LRU leaves until the block manager can hand out
+        ``pages_needed`` pages, or the tree is empty. Returns whether the
+        allocator can now satisfy the request — the engine's first line of
+        defense before preempting a running request. Note eviction only
+        releases the CACHE's reference: pages still referenced by in-flight
+        block tables stay resident (they were never extra memory — the
+        cache entry merely aliased them)."""
+        while self.bm.free_pages < pages_needed:
+            leaves = sorted(
+                (n for n in self._iter_nodes()
+                 if not n.children and n.parent is not None),
+                key=lambda n: n.last_use)
+            if not leaves:
+                break
+            victim = leaves[0]
+            before = self.bytes
+            del victim.parent.children[
+                tuple(int(v) for v in victim.tokens[:, 0])]
+            self._unhold(victim.pages)
+            self.nodes -= 1
+            self.stats["evictions"] += 1
+            self.stats["evicted_bytes"] += before - self.bytes
+        return self.bm.free_pages >= pages_needed
+
+    def _iter_nodes(self):
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.parent is not None:
+                yield n
+
+    # ------------------------------------------------------------------
+    def report(self) -> dict:
+        return {**self.stats, "nodes": self.nodes, "bytes": self.bytes,
+                "capacity_bytes": self.capacity_bytes,
+                "distinct_pages": len(self._holds)}

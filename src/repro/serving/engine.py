@@ -50,6 +50,8 @@ import numpy as np
 from repro.core import hooks
 from repro.models import transformer
 from repro.serving import speculative
+from repro.serving.block_manager import (BlockManager, PagedPrefixCache,
+                                         pages_for)
 from repro.serving.prefix_cache import (PrefixCache, StateOps,
                                         state_batch_axes, state_pos_axes)
 from repro.serving.sampling import (SamplingConfig, SamplingParams,
@@ -327,6 +329,210 @@ def _programs_for(cfg, slots: int, max_len: int,
     return prog
 
 
+def paged_page_axes(cfg, page_size: int, dtype):
+    """Per-leaf page axis of the paged serving-state tree (the axis whose
+    extent tracks the pool's page count), found structurally the same way
+    ``state_batch_axes`` finds slot axes."""
+    s2 = jax.eval_shape(
+        lambda: transformer.init_paged_states(cfg, 2, page_size, dtype))
+    s3 = jax.eval_shape(
+        lambda: transformer.init_paged_states(cfg, 3, page_size, dtype))
+
+    def axis(a, b):
+        for i, (x, y) in enumerate(zip(a.shape, b.shape)):
+            if x != y:
+                return i
+        raise AssertionError(f"paged state leaf has no page axis: {a.shape}")
+
+    return jax.tree.map(axis, s2, s3)
+
+
+class _PagedPrograms:
+    """Compiled data-plane bundle for one PAGED geometry (arch config, slot
+    count, max_len, page size, pool size, kernel-tier set) — the paged
+    analogue of :class:`_Programs`, shared across engine instances the same
+    way. The block-table array is an explicit program input, so host-side
+    page remaps (growth, CoW, preemption) never retrace anything."""
+
+    def __init__(self, cfg, slots: int, max_len: int, page_size: int,
+                 num_pages: int):
+        self.cfg = cfg
+        self.slots = slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.num_pages = num_pages
+        self.max_blocks = max_len // page_size
+        dt = jnp.dtype(cfg.activ_dtype)
+        self.page_axes = paged_page_axes(cfg, page_size, dt)
+        self._spec_steps: dict[int, Any] = {}
+
+        @jax.jit
+        def fused_step(params, key, states, ctrl, bt):
+            """decode through block tables + sample + length update + done
+            flags, one program (text frontend only — paged mode rejects
+            audio/vlm at engine construction)."""
+            active = ctrl["active"]
+            lengths = ctrl["lengths"] + active.astype(jnp.int32)
+            key, sub = jax.random.split(key)
+            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
+            toks, new_states, _ = transformer.decode_and_sample(
+                params, cfg, ctrl["last"], states, lengths, sub,
+                lambda k, lg: sample_batched(k, lg, sp),
+                block_tables=bt, page_size=page_size)
+            gen = ctrl["gen"] + active.astype(jnp.int32)
+            done = active & (
+                (gen >= ctrl["max_new"])
+                | ((ctrl["eos"] >= 0) & (toks == ctrl["eos"]))
+                | (lengths >= max_len))
+            toks = jnp.where(active, toks, 0)
+            packed = jnp.concatenate([
+                toks[:, None],
+                active.astype(jnp.int32)[:, None],
+                done.astype(jnp.int32)[:, None],
+            ], axis=1)
+            new_ctrl = dict(
+                ctrl,
+                lengths=jnp.where(done, 0, lengths),
+                active=active & ~done,
+                gen=gen,
+                last=toks,
+            )
+            return key, new_states, new_ctrl, packed
+
+        self.fused_step = fused_step
+
+        @jax.jit
+        def prefill_chunk(params, tokens, states, start, lengths, bt):
+            # tokens: (N, Sc) right-padded chunk; writes land in the shared
+            # pools through per-row block tables — no per-slot scatter
+            # (`_assign`) afterwards, admission is zero-copy
+            return transformer.prefill_chunk(
+                params, cfg, tokens, states, start, lengths,
+                block_tables=bt, page_size=page_size)
+
+        self.prefill_chunk = prefill_chunk
+
+        @jax.jit
+        def arm(ctrl, slot, length, first_tok, temp, topk, max_new, eos):
+            """Arm a slot's control-block entries once its chunked prefill
+            completes (the paged analogue of `_assign`, ctrl-only)."""
+            return dict(
+                ctrl,
+                lengths=ctrl["lengths"].at[slot].set(length),
+                active=ctrl["active"].at[slot].set(True),
+                gen=ctrl["gen"].at[slot].set(1),
+                temp=ctrl["temp"].at[slot].set(temp),
+                topk=ctrl["topk"].at[slot].set(topk),
+                max_new=ctrl["max_new"].at[slot].set(max_new),
+                eos=ctrl["eos"].at[slot].set(eos),
+                last=ctrl["last"].at[slot].set(first_tok),
+            )
+
+        self.arm = arm
+
+        @jax.jit
+        def release(ctrl, slot):
+            return dict(
+                ctrl,
+                lengths=ctrl["lengths"].at[slot].set(0),
+                active=ctrl["active"].at[slot].set(False))
+
+        self.release = release
+
+        page_axes = self.page_axes
+
+        @jax.jit
+        def copy_page(states, src, dst):
+            """Copy-on-write device op: pool[dst] <- pool[src] in every
+            layer's pools (scan-stacked pools copy across all repeats)."""
+            def f(ax, leaf):
+                row = jax.lax.dynamic_index_in_dim(leaf, src, ax,
+                                                   keepdims=False)
+                return jax.lax.dynamic_update_index_in_dim(leaf, row, dst, ax)
+            return jax.tree.map(f, page_axes, states)
+
+        self.copy_page = copy_page
+
+        self.sample_first = jax.jit(sample_batched)
+
+    # ------------------------------------------------------------------
+    def spec_step_for(self, k: int):
+        prog = self._spec_steps.get(k)
+        if prog is None:
+            prog = self._spec_steps[k] = self._build_spec_step(k)
+        return prog
+
+    def _build_spec_step(self, k: int):
+        """Fused speculative step through block tables. Paged mode is
+        attention-family only, so the stepwise (recurrent-rollback) variant
+        of `_Programs._build_spec_step` never applies: rejected cache
+        writes sit beyond the committed length mask, exactly as in the
+        contiguous verify path."""
+        cfg, max_len, page_size = self.cfg, self.max_len, self.page_size
+        c = k + 1
+
+        @jax.jit
+        def spec_step(params, key, states, ctrl, drafts, ndraft, bt):
+            active = ctrl["active"]
+            length = ctrl["lengths"]
+            tokens = jnp.concatenate([ctrl["last"][:, None], drafts], axis=1)
+            logits, new_states = transformer.verify_chunk(
+                params, cfg, tokens, states, length,
+                block_tables=bt, page_size=page_size)
+            key, sub = jax.random.split(key)
+            sp = SamplingParams(ctrl["temp"], ctrl["topk"])
+            out, accepted = accept_speculative(sub, logits, drafts, ndraft, sp)
+            emit = accepted + 1
+            idx = jnp.arange(c)[None, :]
+            eos_hit = ((idx < emit[:, None]) & (ctrl["eos"][:, None] >= 0)
+                       & (out == ctrl["eos"][:, None]))
+            any_eos = eos_hit.any(axis=1)
+            first_eos = jnp.argmax(eos_hit, axis=1)
+            m = jnp.where(any_eos, first_eos + 1, emit)
+            m = jnp.minimum(m, jnp.maximum(ctrl["max_new"] - ctrl["gen"], 1))
+            m = jnp.where(active, m, 0)
+            new_len = length + m
+            gen = ctrl["gen"] + m
+            done = active & ((gen >= ctrl["max_new"])
+                             | (any_eos & (first_eos < m))
+                             | (new_len >= max_len))
+            out = jnp.where(idx < m[:, None], out, 0)
+            last = jnp.take_along_axis(
+                out, jnp.maximum(m - 1, 0)[:, None], axis=1)[:, 0]
+            packed = jnp.concatenate([
+                out,
+                m[:, None],
+                active.astype(jnp.int32)[:, None],
+                done.astype(jnp.int32)[:, None],
+            ], axis=1)
+            new_ctrl = dict(
+                ctrl,
+                lengths=jnp.where(done, 0, new_len),
+                active=active & ~done,
+                gen=gen,
+                last=last,
+            )
+            return key, new_states, new_ctrl, packed
+
+        return spec_step
+
+
+_PAGED_PROGRAMS: dict[tuple, _PagedPrograms] = {}
+
+
+def _paged_programs_for(cfg, slots: int, max_len: int, page_size: int,
+                        num_pages: int,
+                        binding: hooks.Binding | None) -> _PagedPrograms:
+    tiers = (None if binding is None
+             else tuple(sorted(binding.providers().items())))
+    key = (cfg, slots, max_len, page_size, num_pages, tiers)
+    prog = _PAGED_PROGRAMS.get(key)
+    if prog is None:
+        prog = _PAGED_PROGRAMS[key] = _PagedPrograms(
+            cfg, slots, max_len, page_size, num_pages)
+    return prog
+
+
 class ServingEngine:
     """Continuous-batching engine for one deployed model.
 
@@ -365,6 +571,10 @@ class ServingEngine:
         prefix_cache_bytes: int | None = None,
         spec: speculative.SpecConfig | None = None,
         proposer=None,
+        page_size: int | None = None,
+        kv_pages: int | None = None,
+        kv_watermark: float = 0.05,
+        prefill_chunk_tokens: int | None = None,
     ):
         self.cfg = cfg
         self.params = params
@@ -406,8 +616,46 @@ class ServingEngine:
                 self.sync_every = 1
             self.proposer = proposer or speculative.make_proposer(spec, cfg)
 
+        # ---- paged KV (vLLM-style): a shared page pool + per-slot block
+        # tables instead of per-slot contiguous max_len cache strips, so a
+        # replica's concurrency is bounded by TOKENS held, not slots*max_len.
+        # page_size=None keeps the slot engine (the parity baseline). ----
+        self.paged = page_size is not None
+        self.page_size = page_size
+        self.block_manager: BlockManager | None = None
+        if self.paged:
+            if not fused:
+                raise ValueError("paged KV requires the fused data plane")
+            if cfg.frontend in ("audio", "vlm"):
+                raise NotImplementedError(
+                    f"paged KV unsupported for the {cfg.frontend!r} frontend")
+            if not transformer.supports_paged_kv(cfg):
+                raise NotImplementedError(
+                    "paged KV requires an attention-family arch (recurrent "
+                    "mixers carry non-positional state that cannot be paged)")
+            if max_len % page_size:
+                raise ValueError(
+                    f"max_len {max_len} must be a multiple of "
+                    f"page_size {page_size}")
+            self.max_blocks = max_len // page_size
+            if kv_pages is None:
+                # full provisioning (every slot can reach max_len) — the
+                # parity geometry; under-provision for the memory win
+                kv_pages = slots * self.max_blocks + 1
+            if kv_pages - 1 < self.max_blocks:
+                raise ValueError(
+                    f"kv_pages={kv_pages} cannot hold one max_len sequence "
+                    f"({self.max_blocks} pages + the reserved null page)")
+            self.kv_pages = kv_pages
+            self.block_manager = BlockManager(
+                kv_pages, page_size, watermark=kv_watermark)
+
         dt = jnp.dtype(cfg.activ_dtype)
-        self.states = transformer.init_states(cfg, slots, max_len, dt)
+        if self.paged:
+            self.states = transformer.init_paged_states(
+                cfg, self.kv_pages, page_size, dt)
+        else:
+            self.states = transformer.init_states(cfg, slots, max_len, dt)
         # device-side control block: everything the fused step needs to run
         # without consulting the host. (B,) arrays + the last sampled tokens.
         self.ctrl = {
@@ -448,6 +696,12 @@ class ServingEngine:
             "spec_positions": 0,     # decode-equivalent positions verified
                                      # (k+1 per step; rejected ones included
                                      # — the lease pays for drafted work)
+            # ---- paged-KV telemetry (always present; nonzero only when
+            # page_size is set) ----
+            "chunk_prefill_calls": 0,  # batched chunk programs run
+            "preemptions": 0,          # requests evicted to recompute
+            "admit_skips": 0,          # watermark skips that let later
+                                       # requests admit out of order
             # ---- latency telemetry (real wall-clock; per-request values
             # live in RequestResult.ttft_s / decode_s) ----
             "ttft_sum_s": 0.0,
@@ -456,21 +710,66 @@ class ServingEngine:
 
         # ---- compiled programs: shared per (cfg, geometry, tier-set) so
         # replica boots after the first are warm (see _Programs) ----
-        progs = _programs_for(cfg, slots, max_len, binding)
-        self._fused_step = progs.fused_step
-        self._prefill_chunk = progs.prefill_chunk
-        self._init_batch = progs.init_batch
-        self._sample_first = progs.sample_first
-        self._assign = progs.assign
-        self._decode = progs.decode  # legacy (unfused) step
+        if self.paged:
+            pprogs = _paged_programs_for(
+                cfg, slots, max_len, page_size, self.kv_pages, binding)
+            self._paged_progs = pprogs
+            self._fused_step_paged = pprogs.fused_step
+            self._prefill_chunk_paged = pprogs.prefill_chunk
+            self._arm = pprogs.arm
+            self._release_ctrl = pprogs.release
+            self._copy_page = pprogs.copy_page
+            self._sample_first = pprogs.sample_first
+            self._spec_step = (pprogs.spec_step_for(spec.k)
+                               if spec is not None else None)
+            # device footprint of ONE page summed across every layer's
+            # pools — the unit of the paged prefix cache's byte budget
+            self.page_bytes = sum(
+                int(np.prod(l.shape)) // l.shape[ax]
+                * jnp.dtype(l.dtype).itemsize
+                for l, ax in zip(jax.tree.leaves(self.states),
+                                 jax.tree.leaves(pprogs.page_axes)))
+            self.prefix_cache = (
+                PagedPrefixCache(self.block_manager,
+                                 capacity_bytes=prefix_cache_bytes,
+                                 page_bytes=self.page_bytes)
+                if prefix_cache_bytes else None)
+        else:
+            progs = _programs_for(cfg, slots, max_len, binding)
+            self._fused_step = progs.fused_step
+            self._prefill_chunk = progs.prefill_chunk
+            self._init_batch = progs.init_batch
+            self._sample_first = progs.sample_first
+            self._assign = progs.assign
+            self._decode = progs.decode  # legacy (unfused) step
 
-        self._spec_step = (progs.spec_step_for(spec.k)
-                           if spec is not None else None)
+            self._spec_step = (progs.spec_step_for(spec.k)
+                               if spec is not None else None)
 
-        self.prefix_cache = (
-            PrefixCache(progs.state_ops, capacity_bytes=prefix_cache_bytes)
-            if prefix_cache_bytes else None)
+            self.prefix_cache = (
+                PrefixCache(progs.state_ops, capacity_bytes=prefix_cache_bytes)
+                if prefix_cache_bytes else None)
         self._slot_pins: list = [None] * slots
+
+        # ---- paged host-side control plane ----
+        # block tables mirror: logical page j of slot i -> physical page id.
+        # A slot's row stays ZERO (the null page) until its chunked prefill
+        # completes and the slot is armed — so device programs running over
+        # all B rows (decode, spec verify) can never write a mid-prefill
+        # row's real pages.
+        self._bt_host = (np.zeros((slots, self.max_blocks), np.int32)
+                         if self.paged else None)
+        self._bt_dev: jax.Array | None = None
+        self._bt_dirty = True
+        self._pages: list[list[int]] = [[] for _ in range(slots)]
+        self._admitting: dict[int, dict] = {}   # slot -> chunked-prefill state
+        self._admit_seq = [0] * slots           # admission order (preempt youngest)
+        self._seq = 0
+        self._slot_submit = [0.0] * slots       # original submit time (preempt restore)
+        self._chunk_cap = (int(prefill_chunk_tokens) if prefill_chunk_tokens
+                           else self.prompt_buckets[-1])
+        self._chunk_widths = tuple(sorted(
+            {min(b, self._chunk_cap) for b in self.prompt_buckets}))
 
         # host mirrors for the proposer control plane (spec mode only): the
         # per-slot token history (prompt + emitted), cache length, and
@@ -486,6 +785,13 @@ class ServingEngine:
             # operator should see HOW traffic is served from one record
             self.manifest = dict(self.manifest, speculative={
                 "proposer": self.proposer.kind, "k": spec.k})
+        if self.manifest is not None and self.paged:
+            self.manifest = dict(self.manifest, paged_kv={
+                "page_size": self.page_size,
+                "kv_pages": self.kv_pages,
+                "watermark_pages": self.block_manager.watermark_pages,
+                "page_bytes": self.page_bytes,
+            })
 
         # latency bookkeeping (satellite telemetry: TTFT / decode wall)
         self._submit_s: dict[int, float] = {}
@@ -519,6 +825,9 @@ class ServingEngine:
         return self.manifest
 
     def _warmup_programs(self) -> None:
+        if self.paged:
+            self._warmup_paged()
+            return
         if self.fused:
             self._fused_step(self.params, self.rng, self.states, self.ctrl)
             if self.spec is not None:
@@ -564,6 +873,40 @@ class ServingEngine:
                     ops.restore_pos(p, states, blk, zero, zero, zero)
                     p <<= 1
                 ops.restore_snap(states, ops.extract_snap(bstates, zero), zero)
+        jax.block_until_ready(self.states)
+
+    def _warmup_paged(self) -> None:
+        """Pre-compile the paged data plane: the fused step, the spec
+        verify step, each (pow2 batch, chunk width) prefill program, the
+        ctrl arm/release ops, and the CoW page copy. All outputs are
+        discarded; writes land on the null page (zero block tables)."""
+        bt = jnp.zeros((self.slots, self.max_blocks), jnp.int32)
+        self._fused_step_paged(self.params, self.rng, self.states, self.ctrl,
+                               bt)
+        if self.spec is not None:
+            self._spec_step(self.params, self.rng, self.states, self.ctrl,
+                            jnp.zeros((self.slots, self.spec.k), jnp.int32),
+                            jnp.zeros((self.slots,), jnp.int32), bt)
+            self.proposer.warmup()
+        key = jax.random.key(0)
+        n = 1
+        while n <= _pow2(self.slots):
+            start = jnp.zeros((n,), jnp.int32)
+            lens = jnp.ones((n,), jnp.int32)
+            sbt = jnp.zeros((n, self.max_blocks), jnp.int32)
+            for cw in self._chunk_widths:
+                toks = jnp.zeros((n, cw), jnp.int32)
+                logits, _, _ = self._prefill_chunk_paged(
+                    self.params, toks, self.states, start, lens, sbt)
+            self._sample_first(
+                key, logits,
+                SamplingParams.from_configs([SamplingConfig()] * n))
+            n <<= 1
+        self._arm(self.ctrl, jnp.int32(0), jnp.int32(0), jnp.int32(0),
+                  jnp.float32(0.0), jnp.int32(0), jnp.int32(_NO_LIMIT),
+                  jnp.int32(-1))
+        self._release_ctrl(self.ctrl, jnp.int32(0))
+        self._copy_page(self.states, jnp.int32(0), jnp.int32(0))
         jax.block_until_ready(self.states)
 
     # ------------------------------------------------------------------
@@ -616,6 +959,9 @@ class ServingEngine:
         retired-at-admission request must not cost a slot a full engine
         step of idleness.
         """
+        if self.paged:
+            self._admit_paged()
+            return
         while True:
             free = self._free_slots()
             take = min(len(free), len(self.queue))
@@ -744,6 +1090,359 @@ class ServingEngine:
     def _row_out(self, row: np.ndarray):
         return tuple(int(x) for x in row) if row.ndim else int(row)
 
+    # ------------------------------------------------------------------
+    # Paged admission + chunked prefill + page growth/CoW/preemption
+    # ------------------------------------------------------------------
+    def _admit_paged(self) -> None:
+        """Paged admission: reference the longest cached prefix's pages
+        into a fresh block table (aliasing, not copying), allocate fresh
+        pages for the rest of the prompt, and hand the slot to the chunked
+        prefiller. Admission is OUT OF ORDER under the page watermark: a
+        large request that cannot allocate yet is skipped (not blocking),
+        so smaller requests behind it keep the replica busy — the
+        head-of-line starvation fix (see stats['admit_skips'])."""
+        free = self._free_slots()
+        if not free or not self.queue:
+            return
+        bm = self.block_manager
+        ps = self.page_size
+        kept: deque[Request] = deque()
+        for _ in range(len(self.queue)):
+            if not free:
+                break
+            req = self.queue.popleft()
+            prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+            plen = int(prompt.shape[-1])
+            match = (self.prefix_cache.match(prompt, limit=plen - 1)
+                     if self.prefix_cache is not None else None)
+            start = match.usable if match is not None else 0
+            # budget: fresh pages past the shared FULL pages — a shared
+            # PARTIAL tail page is copied (not aliased) right here, so the
+            # check below reserves its replacement too
+            need = pages_for(plen, ps) - start // ps
+            if not bm.can_alloc(need, respect_watermark=True):
+                # pages held ONLY by the prefix cache are best-effort memory:
+                # evict them on demand rather than stall admission. An IDLE
+                # engine additionally ignores the watermark — it only
+                # arbitrates between concurrent tenants, and nothing running
+                # means nothing will ever free pages for us.
+                idle = not kept and all(r is None for r in self.active)
+                if self.prefix_cache is not None:
+                    self.prefix_cache.reclaim(need + bm.watermark_pages)
+                    # eviction may have dropped the matched branch: re-match
+                    # before touching its page refs
+                    match = self.prefix_cache.match(prompt, limit=plen - 1)
+                    start = match.usable
+                    need = pages_for(plen, ps) - start // ps
+                if not bm.can_alloc(need, respect_watermark=not idle):
+                    self.stats["admit_skips"] += 1
+                    kept.append(req)
+                    continue
+            slot = free.pop(0)
+            shared = list(match.pages) if start > 0 else []
+            bm.incref(shared)
+            if start % ps:
+                # copy-on-write the shared partial tail page NOW: the
+                # remaining prompt prefills into an owned page, and no
+                # mid-prefill CoW can run out of pool later
+                tail = shared[-1]
+                new = bm.cow(tail)  # consumes OUR ref on `tail`
+                self.states = self._copy_page(
+                    self.states, jnp.int32(tail), jnp.int32(new))
+                shared[-1] = new
+            fresh = bm.alloc(pages_for(plen, ps) - len(shared))
+            self._pages[slot] = shared + fresh
+            self.active[slot] = req
+            self.generated[slot] = []
+            self._seq += 1
+            self._admit_seq[slot] = self._seq
+            self._slot_submit[slot] = self._submit_s.get(
+                req.request_id, time.perf_counter())
+            self._admitting[slot] = {"prompt": prompt, "plen": plen,
+                                     "pos": start}
+            if self.prefix_cache is not None:
+                if start > 0:
+                    self.stats["prefix_hits"] += 1
+                    self.stats["prefix_hit_tokens"] += start
+                else:
+                    self.stats["prefix_misses"] += 1
+        self.queue.extendleft(reversed(kept))
+
+    def _prefill_step_paged(self) -> None:
+        """Advance every mid-prefill slot by one batched chunk: ONE
+        compiled program per engine step regardless of how many rows are
+        admitting, interleaved with the decode step that follows — chunked
+        prefill never stalls in-flight decodes for a whole prompt. Rows
+        whose prompt completes sample their first token from the chunk's
+        logits (the chunk program returns logits at each row's last real
+        position) and arm the device control block."""
+        rows = sorted(self._admitting)
+        if not rows:
+            return
+        ps = self.page_size
+        remaining = max(self._admitting[s]["plen"] - self._admitting[s]["pos"]
+                        for s in rows)
+        cw = _bucket(min(remaining, self._chunk_cap), self._chunk_widths)
+        n = len(rows)
+        npad = _pow2(n)
+        toks = np.zeros((npad, cw), np.int32)
+        starts = np.zeros((npad,), np.int32)
+        lens = np.ones((npad,), np.int32)  # pad rows: 1 pos on the null page
+        bt = np.zeros((npad, self.max_blocks), np.int32)
+        for i, s in enumerate(rows):
+            st = self._admitting[s]
+            w = min(cw, st["plen"] - st["pos"])
+            # CoW the shared partial tail page of a restored prefix before
+            # this chunk writes into it (admitting slots are never preempted,
+            # so the slot survives)
+            self._prepare_write(s, st["pos"], st["pos"] + w)
+            toks[i, :w] = st["prompt"][st["pos"]: st["pos"] + w]
+            starts[i] = st["pos"]
+            lens[i] = st["pos"] + w
+            bt[i, : len(self._pages[s])] = self._pages[s]
+        logits, self.states, _ = self._prefill_chunk_paged(
+            self.params, jnp.asarray(toks), self.states,
+            jnp.asarray(starts), jnp.asarray(lens), jnp.asarray(bt))
+        self.stats["prefill_calls"] += 1
+        self.stats["chunk_prefill_calls"] += 1
+        self.stats["prefill_tokens"] += npad * cw
+
+        fin = [i for i, s in enumerate(rows)
+               if int(lens[i]) >= self._admitting[s]["plen"]]
+        if not fin:
+            for i, s in enumerate(rows):
+                self._admitting[s]["pos"] = int(lens[i])
+            return
+        pad_cfg = [self.active[s].sampling for s in rows] \
+            + [SamplingConfig()] * (npad - n)
+        self.rng, sub = jax.random.split(self.rng)
+        first = self._sample_first(sub, logits,
+                                   SamplingParams.from_configs(pad_cfg))
+        first_host = np.asarray(jax.device_get(first))
+        self.stats["host_syncs_admit"] += 1
+        now = time.perf_counter()
+        for i, s in enumerate(rows):
+            st = self._admitting[s]
+            if int(lens[i]) < st["plen"]:
+                st["pos"] = int(lens[i])
+                continue
+            # ---- prompt complete: donate pages to the prefix cache, arm ----
+            del self._admitting[s]
+            req = self.active[s]
+            plen = st["plen"]
+            tok = int(first_host[i])
+            self.stats["prefills"] += 1
+            ttft = now - self._submit_s.pop(req.request_id, now)
+            self.stats["ttft_sum_s"] += ttft
+            if self.prefix_cache is not None:
+                self.prefix_cache.insert(
+                    st["prompt"], self._pages[s][: pages_for(plen, ps)])
+            room = self.max_len - plen + 1
+            if room < req.max_new_tokens:
+                logger.warning(
+                    "request %s: prompt length %d leaves room for %d of the "
+                    "%d requested tokens (engine max_len=%d) — output will "
+                    "be truncated", req.request_id, plen, room,
+                    req.max_new_tokens, self.max_len)
+            if req.max_new_tokens <= 1 or room <= 1:
+                # prefill logits already yielded the only token; retire
+                # without ever occupying a decode step
+                self.results[req.request_id] = RequestResult(
+                    request_id=req.request_id, tokens=[tok],
+                    decode_steps=0, ttft_s=ttft)
+                self.stats["retired"] += 1
+                self.block_manager.decref(self._pages[s])
+                self._pages[s] = []
+                self.active[s] = None
+                continue
+            self.ctrl = self._arm(
+                self.ctrl, jnp.int32(s), jnp.int32(plen), jnp.int32(tok),
+                jnp.float32(req.sampling.temperature),
+                jnp.int32(req.sampling.top_k),
+                jnp.int32(req.max_new_tokens),
+                jnp.int32(-1 if req.eos_id is None else req.eos_id))
+            self.generated[s] = [tok]
+            self._slot_ttft[s] = ttft
+            self._admit_s[s] = now
+            self._len_host[s] = plen
+            self._last_host[s] = tok
+            self._bt_host[s, :] = 0
+            self._bt_host[s, : len(self._pages[s])] = self._pages[s]
+            self._bt_dirty = True
+            if self.spec is not None:
+                self._hist[s] = np.concatenate([st["prompt"], [np.int32(tok)]])
+                self.proposer.admit(s, st["prompt"])
+
+    # ------------------------------------------------------------------
+    def _bt_device(self) -> jax.Array:
+        if self._bt_dirty or self._bt_dev is None:
+            self._bt_dev = jnp.asarray(self._bt_host)
+            self._bt_dirty = False
+        return self._bt_dev
+
+    def _youngest_decoding(self) -> int | None:
+        cands = [s for s, r in enumerate(self.active)
+                 if r is not None and s not in self._admitting]
+        return max(cands, key=lambda s: self._admit_seq[s]) if cands else None
+
+    def _reclaim_or_preempt(self, n: int) -> int | None:
+        """Make ``n`` pages allocatable: evict prefix-cache pages first
+        (cold reuse state is the cheapest thing to give back), then preempt
+        the YOUNGEST decoding slot (its recompute loses the least work).
+        Returns the preempted slot, or None when cache eviction sufficed;
+        raises when nothing is left to take."""
+        if self.prefix_cache is not None and self.prefix_cache.reclaim(n):
+            return None
+        victim = self._youngest_decoding()
+        if victim is None:
+            raise RuntimeError(
+                "KV page pool exhausted with nothing left to preempt")
+        self._preempt(victim)
+        return victim
+
+    def _prepare_write(self, slot: int, lo: int, hi: int) -> bool:
+        """Make cache positions [lo, hi) of ``slot`` writable: grow its
+        block table to cover ``hi`` entries and copy-on-write any shared
+        page in the write range. May preempt other slots under pool
+        pressure — or, at the last resort, ``slot`` itself, in which case
+        this returns False and the caller skips the slot's step."""
+        bm, ps = self.block_manager, self.page_size
+        pages = self._pages[slot]
+        while True:
+            need = pages_for(hi, ps) - len(pages)
+            if need <= 0:
+                break
+            if bm.can_alloc(need):
+                fresh = bm.alloc(need)
+                base = len(pages)
+                pages.extend(fresh)
+                if slot not in self._admitting:
+                    self._bt_host[slot, base: base + need] = fresh
+                    self._bt_dirty = True
+                break
+            if self._reclaim_or_preempt(need) == slot:
+                return False
+        if hi > lo:
+            for j in range(lo // ps, (hi - 1) // ps + 1):
+                # re-check the ref each round: a cache eviction can DE-SHARE
+                # this very page (making the copy unnecessary) without
+                # freeing anything
+                while bm.ref[pages[j]] > 1:
+                    if bm.can_alloc(1):
+                        pid = pages[j]
+                        new = bm.cow(pid)
+                        self.states = self._copy_page(
+                            self.states, jnp.int32(pid), jnp.int32(new))
+                        pages[j] = new
+                        if slot not in self._admitting:
+                            self._bt_host[slot, j] = new
+                            self._bt_dirty = True
+                        break
+                    if (self.prefix_cache is not None
+                            and self.prefix_cache.reclaim(1)):
+                        continue
+                    if bm.ref[pages[j]] <= 1:
+                        break
+                    victim = self._youngest_decoding()
+                    if victim is None:
+                        raise RuntimeError(
+                            "KV page pool exhausted with nothing left to "
+                            "preempt")
+                    self._preempt(victim)
+                    if victim == slot:
+                        return False
+        return True
+
+    def _preempt(self, slot: int) -> None:
+        """Preemption by recompute (the vLLM policy): release the victim's
+        pages and push its request back to the FRONT of the queue; it
+        re-admits (reusing whatever prefix is still cached) once pages free
+        up. Generated tokens are discarded — recomputation replays the same
+        stream for greedy sampling. Buffered step results are flushed first
+        so a later sync cannot credit old tokens to the slot's next
+        tenant."""
+        self._flush()
+        req = self.active[slot]
+        if req is None:
+            return  # the flush retired it — its pages are already free
+        self.block_manager.decref(self._pages[slot])
+        self._pages[slot] = []
+        self.active[slot] = None
+        self.generated[slot] = []
+        self._admitting.pop(slot, None)
+        self._bt_host[slot, :] = 0
+        self._bt_dirty = True
+        self.ctrl = self._release_ctrl(self.ctrl, jnp.int32(slot))
+        if self.spec is not None:
+            self._hist[slot] = None
+            self.proposer.retire(slot)
+        # restore the original submit time so TTFT honestly includes the wait
+        self._submit_s[req.request_id] = self._slot_submit[slot]
+        self.queue.appendleft(req)
+        self.stats["preemptions"] += 1
+
+    def _step_fused_paged(self) -> None:
+        """The paged decode step: grow/CoW every armed slot's write
+        position, then run ONE fused program over all B rows through the
+        device block tables. Mid-prefill rows ride along on the null page
+        (ctrl-inactive, zero block-table rows)."""
+        for s in range(self.slots):
+            if self.active[s] is None or s in self._admitting:
+                continue
+            length = int(self._len_host[s])
+            if length >= self.max_len:
+                continue
+            self._prepare_write(s, length, length + 1)
+        armed = [s for s, r in enumerate(self.active)
+                 if r is not None and s not in self._admitting]
+        if not armed:
+            return
+        self.rng, self.states, self.ctrl, packed = self._fused_step_paged(
+            self.params, self.rng, self.states, self.ctrl, self._bt_device())
+        self.stats["decode_steps"] += 1
+        for s in armed:
+            # pessimistic host mirror: rows that hit done mid-window stop
+            # advancing on device; the flush reconciles (the extra page a
+            # stale +1 can allocate is freed at retire)
+            self._len_host[s] = min(int(self._len_host[s]) + 1, self.max_len)
+        self._pending.append(packed)
+        if len(self._pending) >= self.sync_every or all(
+            len(self.generated[i]) + len(self._pending) >= r.max_new_tokens
+            for i, r in enumerate(self.active)
+            if r is not None and i not in self._admitting
+        ):
+            self._flush()
+
+    def paged_summary(self) -> dict | None:
+        """Page-pool occupancy, fragmentation, CoW sharing, and per-request
+        block-count telemetry (None for the slot engine) — the paged
+        analogue of :meth:`spec_summary`, surfaced by fleet reports."""
+        if not self.paged:
+            return None
+        bm = self.block_manager
+        tokens = 0
+        blocks = []
+        for s, r in enumerate(self.active):
+            if r is None:
+                continue
+            st = self._admitting.get(s)
+            tokens += st["pos"] if st is not None else int(self._len_host[s])
+            blocks.append(len(self._pages[s]))
+        out = {
+            "page_size": self.page_size,
+            **bm.utilization(tokens),
+            **bm.stats,
+            "preemptions": self.stats["preemptions"],
+            "admit_skips": self.stats["admit_skips"],
+            "active_requests": len(blocks),
+            "blocks_per_request_max": max(blocks, default=0),
+            "blocks_per_request_mean": (
+                round(sum(blocks) / len(blocks), 3) if blocks else 0.0),
+        }
+        if self.prefix_cache is not None:
+            out["prefix"] = self.prefix_cache.report()
+        return out
+
     def _tok_out(self, tok: jax.Array):
         t = jax.device_get(tok)
         self.stats["host_syncs_decode"] += 1
@@ -775,6 +1474,11 @@ class ServingEngine:
         if self._slot_pins[slot] is not None:
             self.prefix_cache.release(self._slot_pins[slot])
             self._slot_pins[slot] = None
+        if self.paged:
+            self.block_manager.decref(self._pages[slot])
+            self._pages[slot] = []
+            self._bt_host[slot, :] = 0
+            self._bt_dirty = True
         self.stats["retired"] += 1
 
     # ------------------------------------------------------------------
@@ -792,8 +1496,14 @@ class ServingEngine:
         if not any(r is not None for r in self.active):
             self._flush()
             return 0
+        if self.paged:
+            # one chunk of every mid-prefill prompt, INTERLEAVED with the
+            # decode step below — chunked prefill never stalls decodes
+            self._prefill_step_paged()
         if self.spec is not None:
             self._step_spec()
+        elif self.paged:
+            self._step_fused_paged()
         elif self.fused:
             self.rng, self.states, self.ctrl, packed = self._fused_step(
                 self.params, self.rng, self.states, self.ctrl)
@@ -827,7 +1537,8 @@ class ServingEngine:
         ndraft = np.zeros((self.slots,), np.int32)
         self.proposer.propose(self, drafts, ndraft)
         for i, r in enumerate(self.active):
-            if r is None:
+            if r is None or i in self._admitting:
+                # mid-prefill paged rows are ctrl-inactive: nothing to draft
                 ndraft[i] = 0
                 continue
             # never draft past the cache: position L+1+ndraft must stay
@@ -838,9 +1549,21 @@ class ServingEngine:
             room = self.max_len - int(self._len_host[i]) - 1
             remaining = r.max_new_tokens - len(self.generated[i])
             ndraft[i] = max(0, min(int(ndraft[i]), room, remaining - 1))
-        self.rng, self.states, self.ctrl, packed = self._spec_step(
-            self.params, self.rng, self.states, self.ctrl,
-            jnp.asarray(drafts), jnp.asarray(ndraft))
+        if self.paged:
+            for i, r in enumerate(self.active):
+                if r is None or i in self._admitting:
+                    continue
+                length = int(self._len_host[i])
+                hi = min(length + 1 + int(ndraft[i]), self.max_len)
+                if not self._prepare_write(i, length, hi):
+                    ndraft[i] = 0  # slot self-preempted under pool pressure
+            self.rng, self.states, self.ctrl, packed = self._spec_step(
+                self.params, self.rng, self.states, self.ctrl,
+                jnp.asarray(drafts), jnp.asarray(ndraft), self._bt_device())
+        else:
+            self.rng, self.states, self.ctrl, packed = self._spec_step(
+                self.params, self.rng, self.states, self.ctrl,
+                jnp.asarray(drafts), jnp.asarray(ndraft))
         self.stats["decode_steps"] += 1
         self.stats["spec_steps"] += 1
         arr = np.asarray(jax.device_get(packed))

@@ -34,6 +34,10 @@ def serving_container(
     prefix_cache_bytes: int | None = None,
     spec=None,
     draft_params=None,
+    page_size: int | None = None,
+    kv_pages: int | None = None,
+    kv_watermark: float = 0.05,
+    prefill_chunk_tokens: int | None = None,
     name: str | None = None,
 ) -> xcontainer.XContainer:
     """Build a deployable serving container for one model.
@@ -73,13 +77,18 @@ def serving_container(
             prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every,
             prefix_cache_bytes=prefix_cache_bytes,
             spec=spec, proposer=proposer,
+            page_size=page_size, kv_pages=kv_pages,
+            kv_watermark=kv_watermark,
+            prefill_chunk_tokens=prefill_chunk_tokens,
             binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),
     # so two serving containers for the same arch but different slot/cache
-    # geometry must never alias each other's compiled decode artifact
+    # geometry (incl. paged vs contiguous KV) must never alias each other's
+    # compiled decode artifact
+    paged_tag = f"-p{page_size}x{kv_pages or 0}" if page_size else ""
     return xcontainer.XContainer(
-        name=name or f"serve-{cfg.name}-b{slots}x{max_len}",
+        name=name or f"serve-{cfg.name}-b{slots}x{max_len}{paged_tag}",
         entrypoints={"decode": (decode_fn, make_args)},
         meta={
             "engine_factory": engine_factory,

@@ -1,0 +1,196 @@
+"""Property tests for the paged-KV block manager and the page-aliasing
+prefix cache: refcount balance (everything allocated is freed exactly once
+at retire), no double-free, CoW isolation after divergence, allocator
+determinism under random admit/fork/write/retire interleavings, and
+cache-hold accounting (bytes == distinct held pages x page_bytes).
+
+Module requires `hypothesis` (skip-guarded in conftest.py like the other
+property suites). The model under test here is pure host-side control plane
+— no jax arrays — so examples are cheap and the state space is searched
+hard."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.block_manager import (BlockManager, PagedPrefixCache,
+                                         pages_for)
+
+PAGE = 4
+POOL = 33  # pages incl. the reserved null page
+
+
+@st.composite
+def _trace(draw):
+    """A random interleaving of request lifecycle events over a shared
+    page pool: admit (alloc), fork (alias another live request's pages),
+    write (CoW any shared page in range), retire (decref)."""
+    n_events = draw(st.integers(5, 40))
+    events = []
+    for _ in range(n_events):
+        events.append(draw(st.sampled_from(["admit", "fork", "write",
+                                            "retire"])))
+    lengths = draw(st.lists(st.integers(1, 24), min_size=n_events,
+                            max_size=n_events))
+    picks = draw(st.lists(st.integers(0, 10 ** 6), min_size=n_events,
+                          max_size=n_events))
+    return list(zip(events, lengths, picks))
+
+
+def _run_trace(trace):
+    """Replay a lifecycle trace against a BlockManager, mirroring expected
+    refcounts in plain dicts. Returns (bm, log of allocated page ids)."""
+    bm = BlockManager(POOL, PAGE)
+    live: dict[int, list[int]] = {}  # request -> its page list
+    next_id = 0
+    alloc_log: list[int] = []
+    for op, length, pick in trace:
+        if op == "admit":
+            need = pages_for(length, PAGE)
+            if not bm.can_alloc(need):
+                continue
+            pages = bm.alloc(need)
+            alloc_log.extend(pages)
+            live[next_id] = pages
+            next_id += 1
+        elif op == "fork" and live:
+            donor = sorted(live)[pick % len(live)]
+            pages = list(live[donor])
+            bm.incref(pages)
+            live[next_id] = pages
+            next_id += 1
+        elif op == "write" and live:
+            rid = sorted(live)[pick % len(live)]
+            pages = live[rid]
+            j = pick % max(len(pages), 1) if pages else 0
+            if pages and bm.ref[pages[j]] > 1 and bm.can_alloc(1):
+                new = bm.cow(pages[j])
+                alloc_log.append(new)
+                pages[j] = new
+        elif op == "retire" and live:
+            rid = sorted(live)[pick % len(live)]
+            bm.decref(live.pop(rid))
+    return bm, live, alloc_log
+
+
+@settings(max_examples=200, deadline=None)
+@given(_trace())
+def test_refcount_balance_at_retire(trace):
+    """After every live request retires, the pool is whole again: zero refs,
+    every page back on the free list, allocs == frees."""
+    bm, live, _ = _run_trace(trace)
+    for rid in sorted(live):
+        bm.decref(live.pop(rid))
+    assert bm.in_use == 0
+    assert bm.free_pages == POOL - 1
+    assert (bm.ref == 0).all()
+    assert bm.stats["allocs"] == bm.stats["frees"]
+
+
+@settings(max_examples=200, deadline=None)
+@given(_trace())
+def test_ref_matches_alias_count(trace):
+    """At any stop point, each page's refcount equals the number of live
+    request block-tables referencing it, and in-use/free partition the
+    pool exactly."""
+    bm, live, _ = _run_trace(trace)
+    expect = np.zeros(POOL, np.int32)
+    for pages in live.values():
+        for p in pages:
+            expect[p] += 1
+    assert (bm.ref == expect).all()
+    assert bm.in_use == int((expect > 0).sum())
+    assert bm.in_use + bm.free_pages == POOL - 1
+
+
+@settings(max_examples=100, deadline=None)
+@given(_trace())
+def test_allocator_determinism(trace):
+    """The same interleaving replayed twice hands out the identical page-id
+    sequence — the LIFO free list has no hidden nondeterminism, which is
+    what makes preemption-replay byte-reproducible."""
+    _, _, log_a = _run_trace(trace)
+    _, _, log_b = _run_trace(trace)
+    assert log_a == log_b
+
+
+@settings(max_examples=100, deadline=None)
+@given(_trace())
+def test_cow_isolation(trace):
+    """A CoW'd page is private: refcount 1, distinct id from the donor, and
+    the donor's refcount dropped by exactly the caller's share."""
+    bm, live, _ = _run_trace(trace)
+    shared = [int(p) for p in np.flatnonzero(bm.ref > 1) if p > 0]
+    for pid in shared:
+        before = int(bm.ref[pid])
+        if not bm.can_alloc(1):
+            break
+        new = bm.cow(pid)
+        assert new != pid
+        assert bm.ref[new] == 1
+        assert bm.ref[pid] == before - 1
+
+
+def test_double_free_asserts():
+    bm = BlockManager(8, PAGE)
+    (p,) = bm.alloc(1)
+    bm.decref([p])
+    try:
+        bm.decref([p])
+    except AssertionError:
+        return
+    raise AssertionError("double free was not caught")
+
+
+# ----------------------------------------------------------------------
+# paged prefix cache: hold accounting + reclaim under random use
+# ----------------------------------------------------------------------
+@st.composite
+def _cache_trace(draw):
+    vocab = 16
+    n_prefixes = draw(st.integers(1, 3))
+    prefixes = [draw(st.lists(st.integers(0, vocab - 1), min_size=2,
+                              max_size=12)) for _ in range(n_prefixes)]
+    ops = []
+    for _ in range(draw(st.integers(3, 15))):
+        base = draw(st.sampled_from(prefixes))
+        cut = draw(st.integers(1, len(base)))
+        tail = draw(st.lists(st.integers(0, vocab - 1), min_size=1,
+                             max_size=6))
+        ops.append((draw(st.sampled_from(["insert", "reclaim"])),
+                    base[:cut] + tail, draw(st.integers(1, 8))))
+    return ops
+
+
+@settings(max_examples=150, deadline=None)
+@given(_cache_trace())
+def test_cache_hold_accounting(ops):
+    """Across random insert/match/split/reclaim interleavings the cache's
+    byte accounting equals distinct held pages x page_bytes, its holds
+    agree with the block manager's refcounts, and dropping the cache
+    returns the pool to whole."""
+    bm = BlockManager(POOL, PAGE)
+    cache = PagedPrefixCache(bm, capacity_bytes=12 * PAGE * 16,
+                             page_bytes=16)
+    for op, prompt_list, n in ops:
+        prompt = np.asarray(prompt_list, np.int32)
+        if op == "insert":
+            need = pages_for(len(prompt_list), PAGE)
+            if not bm.can_alloc(need):
+                continue
+            pages = bm.alloc(need)  # stand-in for a request's prefill pages
+            cache.insert(prompt, pages)
+            bm.decref(pages)        # the "request" retires; cache holds live on
+        else:
+            cache.reclaim(n)
+        m = cache.match(prompt)
+        assert m.usable <= len(prompt_list)
+        assert len(m.pages) == pages_for(m.usable, PAGE)
+        # every page the match hands out is genuinely referenced
+        for p in m.pages:
+            assert bm.ref[p] > 0
+    assert cache.bytes == len(cache._holds) * 16
+    for p, holds in cache._holds.items():
+        assert bm.ref[p] >= holds > 0
+    # cache is the only page owner left: reclaiming everything empties the pool
+    cache.reclaim(POOL - 1)
+    assert bm.in_use == 0
+    assert (bm.ref == 0).all()

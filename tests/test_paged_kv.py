@@ -1,0 +1,272 @@
+"""Paged KV data plane: byte-exact greedy parity with the contiguous slot
+engine (plain, prefix-cached, speculative, and under pool pressure with
+preemptions), watermark out-of-order admission (the head-of-line starvation
+fix), chunked prefill, page accounting, and telemetry surfaces.
+
+Greedy decoding keeps both engines deterministic, so any stream difference is
+a real gather/scatter, block-table, CoW, or preemption-recompute defect."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.serving.block_manager import pages_for
+from repro.serving.engine import Request, ServingEngine
+from repro.serving.speculative import SpecConfig
+
+MAX_LEN = 48
+PAGE = 8
+SLOTS = 2
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _requests(seed=3, n=9, shared=7):
+    rng = np.random.default_rng(seed)
+    sys_prompt = rng.integers(0, 256, shared).tolist()
+    reqs = []
+    for i in range(n):
+        body = rng.integers(0, 256, int(rng.integers(1, 14))).tolist()
+        prompt = (sys_prompt + body) if i % 2 == 0 else body
+        reqs.append((np.asarray(prompt, np.int32), 2 + i % 6))
+    return reqs
+
+
+def _engine(**kw):
+    cfg, params = _model()
+    kw.setdefault("slots", SLOTS)
+    kw.setdefault("max_len", MAX_LEN)
+    kw.setdefault("prompt_buckets", (8, 16, 32))
+    return ServingEngine(cfg, params, **kw)
+
+
+def _serve(reqs, **kw):
+    eng = _engine(**kw)
+    for i, (p, m) in enumerate(reqs):
+        eng.submit(Request(request_id=i, prompt=p, max_new_tokens=m))
+    res = eng.run_to_completion()
+    return {k: res[k].tokens for k in sorted(res)}, eng
+
+
+@functools.lru_cache(maxsize=1)
+def _baseline():
+    return _serve(_requests())[0]
+
+
+# ----------------------------------------------------------------------
+# token parity with the slot engine
+# ----------------------------------------------------------------------
+def test_paged_parity_full_pool():
+    out, eng = _serve(_requests(), page_size=PAGE,
+                      prefix_cache_bytes=8 << 20)
+    assert out == _baseline()
+    assert eng.stats["chunk_prefill_calls"] > 0
+    # drained engine: only the prefix cache may still hold pages
+    bm = eng.block_manager
+    assert bm.in_use == len(eng.prefix_cache._holds)
+    assert all(not p for p in eng._pages)
+    assert (eng._bt_host == 0).all()
+
+
+def test_paged_parity_no_cache_all_pages_freed():
+    out, eng = _serve(_requests(), page_size=PAGE)
+    assert out == _baseline()
+    bm = eng.block_manager
+    assert bm.in_use == 0
+    assert bm.free_pages == bm.num_pages - 1
+    assert bm.stats["allocs"] == bm.stats["frees"]
+
+
+def _overflow_requests():
+    """Two long generations whose combined page demand (6 + 5 pages) must
+    overflow a 6-page pool mid-decode: serving them on ``kv_pages=7``
+    deterministically forces preemption-by-recompute."""
+    rng = np.random.default_rng(11)
+    return [(rng.integers(0, 256, 4, dtype=np.int32), 40),   # -> len 44
+            (rng.integers(0, 256, 4, dtype=np.int32), 30)]   # -> len 34
+
+
+def test_paged_parity_tight_pool_preempts():
+    """An under-provisioned pool must preempt-by-recompute (discard the
+    victim's generated tokens, requeue, replay) yet still serve every
+    request the identical greedy stream."""
+    base, _ = _serve(_overflow_requests())
+    out, eng = _serve(_overflow_requests(), page_size=PAGE, kv_pages=7)
+    assert out == base
+    assert eng.stats["preemptions"] > 0
+    assert eng.block_manager.stats["peak_in_use"] <= 6
+
+
+def test_paged_parity_speculative():
+    spec = SpecConfig(k=3, proposer="ngram")
+    base, _ = _serve(_requests(), spec=spec)
+    out, eng = _serve(_requests(), spec=spec, page_size=PAGE,
+                      prefix_cache_bytes=8 << 20)
+    assert out == base == _baseline()  # greedy spec is lossless too
+    lbase, _ = _serve(_overflow_requests(), spec=spec)
+    tight, et = _serve(_overflow_requests(), spec=spec, page_size=PAGE,
+                       kv_pages=7)
+    assert tight == lbase
+    assert et.stats["preemptions"] > 0
+
+
+def test_paged_parity_chunked_prefill():
+    """A tiny chunk budget splits every prompt across many interleaved
+    prefill steps without changing a single output token."""
+    out, eng = _serve(_requests(), page_size=PAGE, prefill_chunk_tokens=8)
+    assert out == _baseline()
+    # 9 prompts, several > 8 tokens: strictly more chunk calls than prompts
+    assert eng.stats["chunk_prefill_calls"] > 9 / SLOTS
+
+
+# ----------------------------------------------------------------------
+# watermark admission: out-of-order under pressure (starvation regression)
+# ----------------------------------------------------------------------
+def test_admission_skips_blocked_head_admits_smaller():
+    """A page-hungry request at the queue head must not starve smaller
+    requests behind it: while the pool cannot host the big one, later small
+    requests admit out of order; the big one runs once pages free up."""
+    eng = _engine(page_size=PAGE, kv_pages=8, slots=2)  # 7 usable pages
+    rng = np.random.default_rng(0)
+    # long-runner: holds pages for many steps
+    eng.submit(Request(request_id=0,
+                       prompt=rng.integers(0, 256, 12, dtype=np.int32),
+                       max_new_tokens=24))
+    # big head request: needs 6 pages -> can't fit while 0 is running
+    eng.submit(Request(request_id=1,
+                       prompt=rng.integers(0, 256, 42, dtype=np.int32),
+                       max_new_tokens=2))
+    # small request behind it: 1 page
+    eng.submit(Request(request_id=2,
+                       prompt=rng.integers(0, 256, 4, dtype=np.int32),
+                       max_new_tokens=2))
+    small_done_at = big_done_at = None
+    for step in range(400):
+        eng.step()
+        if small_done_at is None and 2 in eng.results:
+            small_done_at = step
+        if big_done_at is None and 1 in eng.results:
+            big_done_at = step
+        if len(eng.results) == 3:
+            break
+    assert len(eng.results) == 3, "requests starved"
+    assert eng.stats["admit_skips"] > 0
+    assert small_done_at < big_done_at, (
+        "small request should overtake the blocked big one")
+
+
+def test_idle_engine_admits_below_watermark():
+    """A sole tenant must admit even when the watermark would forbid it —
+    the watermark only arbitrates between concurrent tenants."""
+    eng = _engine(page_size=PAGE, kv_pages=7, slots=2,
+                  kv_watermark=0.3)  # 6 usable pages, watermark 2
+    prompt = np.arange(42, dtype=np.int32) % 251  # needs all 6 pages
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=3))
+    res = eng.run_to_completion()
+    assert len(res[0].tokens) == 3
+
+
+# ----------------------------------------------------------------------
+# page sharing / accounting
+# ----------------------------------------------------------------------
+def test_prefix_reuse_aliases_pages_not_copies():
+    """Two requests over the same cached prompt share full pages by
+    refcount; the second admission restores the prefix without prefilling
+    it again (prefill token accounting shows only the suffix)."""
+    cfg, params = _model()
+    prompt = (np.arange(2 * PAGE + 3) % 251).astype(np.int32)
+    eng = _engine(page_size=PAGE, prefix_cache_bytes=8 << 20)
+    eng.submit(Request(request_id=0, prompt=prompt, max_new_tokens=2))
+    eng.run_to_completion()
+    tokens_before = eng.stats["prefill_tokens"]
+    eng.submit(Request(request_id=1, prompt=prompt, max_new_tokens=2))
+    res = eng.run_to_completion()
+    assert res[1].tokens == res[0].tokens  # greedy determinism
+    assert eng.stats["prefix_hits"] == 1
+    # only the last token (plus padding) re-prefilled, not the whole prompt
+    assert eng.stats["prefill_tokens"] - tokens_before < prompt.size
+    assert eng.stats["prefix_hit_tokens"] >= 2 * PAGE
+
+
+def test_paged_geometry_validation():
+    cfg, params = _model()
+    with pytest.raises(ValueError, match="multiple"):
+        _engine(page_size=7)  # 48 % 7 != 0
+    with pytest.raises(ValueError, match="cannot hold"):
+        _engine(page_size=PAGE, kv_pages=4)
+    with pytest.raises(ValueError, match="fused"):
+        _engine(page_size=PAGE, fused=False)
+    rec = configs.get_config("recurrentgemma-9b-smoke")
+    rparams = transformer.init_model(jax.random.key(0), rec)
+    with pytest.raises(NotImplementedError, match="attention-family"):
+        ServingEngine(rec, rparams, slots=2, max_len=MAX_LEN,
+                      page_size=PAGE)
+
+
+# ----------------------------------------------------------------------
+# telemetry surfaces
+# ----------------------------------------------------------------------
+def test_paged_summary_and_manifest():
+    cfg, params = _model()
+    eng = ServingEngine(cfg, params, slots=SLOTS, max_len=MAX_LEN,
+                        prompt_buckets=(8, 16, 32), page_size=PAGE,
+                        prefix_cache_bytes=8 << 20,
+                        manifest={"apis": {}})
+    assert eng.manifest["paged_kv"]["page_size"] == PAGE
+    assert eng.manifest["paged_kv"]["kv_pages"] == eng.kv_pages
+    assert eng.manifest["paged_kv"]["page_bytes"] == eng.page_bytes
+    for i, (p, m) in enumerate(_requests(n=4)):
+        eng.submit(Request(request_id=i, prompt=p, max_new_tokens=m))
+    eng.step()  # mid-flight: active requests hold pages
+    s = eng.paged_summary()
+    assert s["pages_in_use"] >= sum(len(p) for p in eng._pages) > 0
+    assert 0.0 <= s["fragmentation"] <= 1.0
+    assert s["blocks_per_request_max"] >= s["blocks_per_request_mean"] > 0
+    assert s["active_requests"] == sum(r is not None for r in eng.active)
+    assert "prefix" in s
+    eng.run_to_completion()
+    # the slot engine reports no paged section
+    base = _engine()
+    assert base.paged_summary() is None
+
+
+def test_fleet_report_carries_paged_kv_telemetry():
+    """A paged fleet surfaces page-pool occupancy in the FleetReport (the
+    fleet-wide aggregate and the per-replica breakdown) and still serves
+    and reconciles every request."""
+    from repro import fleet as fl
+    cfg, params = _model()
+    fleet_cfg = fl.FleetConfig(
+        min_replicas=1, max_replicas=1, slots=2, max_len=32,
+        prompt_buckets=(8, 16), tick_s=0.1, settle_s=10.0,
+        page_size=8, kv_pages=9, prefix_cache_mb=1.0)
+    trace = fl.steady_trace(seed=0, duration_s=4.0, prompt_median=8,
+                            prompt_lo=4, prompt_hi=12, max_new_lo=2,
+                            max_new_hi=4)
+    reqs = fl.materialize(trace, vocab_size=cfg.vocab_size, seed=1)
+    fm = fl.FleetManager.build(cfg, params, chips=2, fleet=fleet_cfg)
+    report = fm.run_trace(reqs)
+    assert report.served == report.requests
+    assert report.reconciled
+    assert report.paged_kv["enabled"]
+    assert report.paged_kv["pages_total"] == 8
+    assert report.paged_kv["peak_in_use"] > 0
+    per_replica = [r["paged"] for r in report.replicas if r["paged"]]
+    assert per_replica and all(p["page_size"] == 8 for p in per_replica)
+    fm.shutdown()
+
+
+def test_pages_for():
+    assert pages_for(0, 8) == 0
+    assert pages_for(1, 8) == 1
+    assert pages_for(8, 8) == 1
+    assert pages_for(9, 8) == 2
+    assert pages_for(48, 8) == 6

@@ -25,6 +25,8 @@ Two modes (both pure stdlib — no jsonschema dependency in the image):
         * paged concurrency/KV byte — deterministic byte-accounting ratio, 20%
         * paged decode tok/s ratio  — same-machine ratio, 20%
         * paged tok/s               — advisory (wall clock, as above)
+        * boot IR-vs-cold speedup   — same-machine ratio, 20%
+        * cold/IR boot seconds      — advisory (wall clock, as above)
 
     PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
 """
@@ -112,6 +114,19 @@ _SCHEMAS = {
         ("modes.1.preemptions", int, "== 0 (pool provisioned)",
          lambda v: v == 0),
     ],
+    "BENCH_boot.json": [
+        ("benchmark", str, "== boot_latency", lambda v: v == "boot_latency"),
+        ("arch", str, "non-empty", bool),
+        ("ir_speedup", (int, float), ">= 3 (headline claim)",
+         lambda v: v >= 3.0),
+        ("cold_boot_s", (int, float), "> 0", lambda v: v > 0),
+        ("ir_boot_s", (int, float), "> 0", lambda v: v > 0),
+        ("token_parity", bool, "greedy streams byte-identical",
+         lambda v: v is True),
+        ("modes", list, ">= 2 modes", lambda v: len(v) >= 2),
+        ("modes.0.warmup_compiles", int, "> 0 (cold rung compiled)",
+         lambda v: v > 0),
+    ],
 }
 
 # (label, file, json path, direction, allowed fractional regression)
@@ -138,6 +153,10 @@ _HEADLINES = [
     ("paged decode tok/s ratio", "BENCH_paged.json", "decode_tok_s_ratio",
      "higher", 0.20),
     ("paged tok/s", "BENCH_paged.json", "modes.1.tok_s", "higher", None),
+    ("boot IR-vs-cold speedup", "BENCH_boot.json", "ir_speedup",
+     "higher", 0.20),
+    ("cold boot (s)", "BENCH_boot.json", "cold_boot_s", "lower", None),
+    ("IR boot (s)", "BENCH_boot.json", "ir_boot_s", "lower", None),
 ]
 
 

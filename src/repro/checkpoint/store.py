@@ -28,17 +28,18 @@ on the survivors without format conversion.
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import tempfile
 import threading
-from typing import Any
+from typing import Any, Mapping
 
 import jax
 import numpy as np
 
-__all__ = ["CheckpointStore"]
+__all__ = ["ArtifactStore", "CheckpointStore"]
 
 
 def _flatten(tree: Any, prefix: str = "") -> list[tuple[str, Any]]:
@@ -54,6 +55,139 @@ def _flatten(tree: Any, prefix: str = "") -> list[tuple[str, Any]]:
                 keys.append(str(p))
         out.append(("/".join(keys), leaf))
     return out
+
+
+class _Corrupt(Exception):
+    """An artifact dir exists but fails integrity checks (never escapes
+    ``ArtifactStore.get`` — it becomes a recorded miss)."""
+
+
+class ArtifactStore:
+    """Durable store of serialized compiled-program artifacts — the IR half
+    of an XaaS container.
+
+    Same durability idiom as :class:`CheckpointStore`: one directory per
+    key, blobs + MANIFEST.json written into a temp dir, COMMIT written
+    last, then an atomic rename over any previous version. A directory
+    without COMMIT (or whose manifest/blob hashes disagree) is treated as
+    absent: ``get`` NEVER raises — a corrupted or truncated artifact is a
+    recorded miss that the boot ladder turns into a cold boot, never a
+    serving failure.
+
+    Format: <root>/<key>/
+        MANIFEST.json  — {key, meta, blobs: [{name, file, bytes, sha256}]}
+        blobs/<name>.bin
+        COMMIT         — written last (atomicity under mid-write failure)
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        self._lock = threading.Lock()
+        self.stats = {"puts": 0, "hits": 0, "misses": 0, "corrupt": 0}
+        self.last_error: str | None = None
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _safe(name: str) -> str:
+        return "".join(c if c.isalnum() or c in "._-@" else "%"
+                       for c in name)
+
+    def _dir(self, key: str) -> str:
+        return os.path.join(self.root, self._safe(key))
+
+    def contains(self, key: str) -> bool:
+        return os.path.exists(os.path.join(self._dir(key), "COMMIT"))
+
+    def keys(self) -> list[str]:
+        try:
+            names = sorted(os.listdir(self.root))
+        except OSError:
+            return []
+        return [d for d in names
+                if os.path.exists(os.path.join(self.root, d, "COMMIT"))]
+
+    # ------------------------------------------------------------------
+    def put(self, key: str, blobs: Mapping[str, bytes],
+            meta: dict | None = None) -> None:
+        """Atomically (over)write the artifact for ``key``."""
+        final = self._dir(key)
+        with self._lock:
+            tmp = tempfile.mkdtemp(dir=self.root, prefix=".tmp_")
+            try:
+                bdir = os.path.join(tmp, "blobs")
+                os.makedirs(bdir)
+                entries = []
+                for name in sorted(blobs):
+                    data = blobs[name]
+                    # sanitized names can collide ("a/b" and "a?b" both
+                    # land on "a%b"); a short hash of the ORIGINAL name
+                    # keeps one file per blob
+                    tag = hashlib.sha256(name.encode()).hexdigest()[:8]
+                    fn = f"{self._safe(name)}-{tag}.bin"
+                    with open(os.path.join(bdir, fn), "wb") as f:
+                        f.write(data)
+                    entries.append({
+                        "name": name, "file": fn, "bytes": len(data),
+                        "sha256": hashlib.sha256(data).hexdigest(),
+                    })
+                manifest = {"key": key, "meta": meta or {}, "blobs": entries}
+                with open(os.path.join(tmp, "MANIFEST.json"), "w") as f:
+                    json.dump(manifest, f, indent=1)
+                with open(os.path.join(tmp, "COMMIT"), "w") as f:
+                    f.write("ok")
+                if os.path.exists(final):
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                self.stats["puts"] += 1
+            finally:
+                if os.path.exists(tmp):
+                    shutil.rmtree(tmp, ignore_errors=True)
+
+    def get(self, key: str) -> tuple[dict[str, bytes], dict] | None:
+        """(blobs, meta) for a committed, integrity-checked artifact —
+        else None, with the reason in ``last_error`` (the boot ladder
+        surfaces it in the specialization manifest)."""
+        d = self._dir(key)
+        if not os.path.exists(os.path.join(d, "COMMIT")):
+            self.last_error = f"no committed artifact for key {key}"
+            self.stats["misses"] += 1
+            return None
+        try:
+            with open(os.path.join(d, "MANIFEST.json")) as f:
+                manifest = json.load(f)
+            blobs: dict[str, bytes] = {}
+            for e in manifest["blobs"]:
+                path = os.path.join(d, "blobs", e["file"])
+                with open(path, "rb") as f:
+                    data = f.read()
+                if len(data) != e["bytes"]:
+                    raise _Corrupt(
+                        f"blob {e['name']}: {len(data)} bytes on disk, "
+                        f"manifest says {e['bytes']} (truncated)")
+                if hashlib.sha256(data).hexdigest() != e["sha256"]:
+                    raise _Corrupt(f"blob {e['name']}: sha256 mismatch")
+                blobs[e["name"]] = data
+        except Exception as err:
+            self.last_error = f"artifact {key} rejected: {err}"
+            self.stats["corrupt"] += 1
+            return None
+        self.last_error = None
+        self.stats["hits"] += 1
+        return blobs, manifest.get("meta", {})
+
+    def meta(self, key: str) -> dict | None:
+        """Manifest meta without reading blobs (family diffing on a key
+        miss); None when absent or unreadable."""
+        try:
+            with open(os.path.join(self._dir(key), "MANIFEST.json")) as f:
+                return json.load(f).get("meta", {})
+        except (OSError, ValueError):
+            return None
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            shutil.rmtree(self._dir(key), ignore_errors=True)
 
 
 class CheckpointStore:

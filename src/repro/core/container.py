@@ -59,13 +59,22 @@ class Deployment:
 
     def manifest(self) -> dict:
         """The specialization manifest: which tier serves each accelerated
-        API on this deployment, with probe provenance (docs/kernel-portability.md)."""
+        API on this deployment, with probe provenance
+        (docs/kernel-portability.md), plus how each entrypoint's executable
+        came to exist (cold compile / warm cache / IR restore — the boot
+        ladder, docs/ir-containers.md)."""
         m = self.binding.manifest()
         return {
             "container": self.container.name,
             "profile": self.profile.name,
             "chip": self.profile.chip,
             "apis": m["apis"],
+            "entrypoint_boot": {
+                ep: {"boot": art.boot, "cache_hit": art.cache_hit,
+                     "lower_s": round(art.lower_s, 6),
+                     "compile_s": round(art.compile_s, 6)}
+                for ep, art in self.artifacts.items()
+            },
         }
 
 
@@ -85,6 +94,11 @@ class XContainer:
     rules_3d: shd.Rules = dataclasses.field(default_factory=lambda: dict(shd.RULES_3D))
     hook_overrides: Mapping[str, str] | None = None
     meta: dict[str, Any] = dataclasses.field(default_factory=dict)
+    # persistent AOT artifact store carried WITH the container (the "IR
+    # half" of an XaaS source+IR container): deploy() persists compiled
+    # entrypoints here and restores them in later processes, and serving
+    # engines booted from this container IR-boot their data plane from it
+    artifact_store: Any = None
 
     def rules_for(self, profile: recompile.SystemProfile) -> shd.Rules:
         return self.rules_3d if "pod" in profile.mesh_axes else self.rules_2d
@@ -98,6 +112,7 @@ class XContainer:
         entrypoints: list[str] | None = None,
         hook_overrides: Mapping[str, str] | None = None,
         probe: bool = True,
+        artifact_store=None,
     ) -> Deployment:
         """Deploy onto `profile`: probe + bind hooks, install sharding rules,
         lower, compile. With ``probe`` (default) every candidate tier must
@@ -105,6 +120,8 @@ class XContainer:
         tier per API lands in ``meta["specialization"][profile.name]`` so
         warm re-deployments can report exactly what serves traffic."""
         compiler = compiler or recompile.DEFAULT_COMPILER
+        store = (artifact_store if artifact_store is not None
+                 else self.artifact_store)
         mesh = mesh if mesh is not None else build_mesh(profile)
         binding = hooks.bind(
             profile, overrides=hook_overrides or self.hook_overrides,
@@ -123,6 +140,8 @@ class XContainer:
                     args=args,
                     kwargs=kwargs,
                     jit_kwargs=jit_kwargs,
+                    store=store,
+                    store_extra={"tiers": binding.tier_fingerprint()},
                 )
         dep = Deployment(
             container=self,

@@ -128,6 +128,14 @@ class Binding(Mapping[str, Callable[..., Any]]):
     def providers(self) -> dict[str, str]:
         return {k: getattr(v, "__xaas_provider__", "portable") for k, v in self._mapping.items()}
 
+    def tier_fingerprint(self) -> tuple[tuple[str, str], ...]:
+        """Stable, hashable (api, provider) pairs — the kernel-tier field of
+        program-bundle cache keys and persisted-artifact keys. Programs
+        traced (or serialized) under one tier set must never serve an
+        engine bound to another; a changed fingerprint is exactly how a
+        stale IR artifact gets invalidated."""
+        return tuple(sorted(self.providers().items()))
+
     def manifest(self) -> dict:
         """Serializable specialization manifest: chosen tier per API, with
         probe provenance and the tiers that were rejected on the way down."""

@@ -28,12 +28,15 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
+import logging
 import time
 from typing import Any, Callable, Mapping
 
 import jax
 
 from repro.kernels import compat
+
+logger = logging.getLogger(__name__)
 
 __all__ = [
     "SystemProfile",
@@ -262,11 +265,15 @@ class CompiledArtifact:
 
     key: str
     profile: SystemProfile
-    lowered: Any  # jax.stages.Lowered
+    lowered: Any  # jax.stages.Lowered (None when restored from a store)
     compiled: Any  # jax.stages.Compiled
     lower_s: float
     compile_s: float
     cache_hit: bool
+    # how this executable came to exist in this process: "cold"
+    # (traced+compiled here), "warm" (in-process exe-cache hit), or "ir"
+    # (deserialized from a persistent ArtifactStore)
+    boot: str = "cold"
 
     _cost: dict | None = None
     _memory: Any = None
@@ -341,6 +348,69 @@ class DeploymentCompiler:
         self.stats["ir_misses"] += 1
         return key, lowered, dt
 
+    def _store_key(self, name: str, args, kwargs, profile: SystemProfile,
+                   extra: Mapping[str, Any] | None = None) -> str:
+        """Process-stable artifact key for one deployed entrypoint. Unlike
+        the in-process IR key it must NOT include id(fn); aot.bundle_key
+        folds in jax/jaxlib version + platform so environment drift misses
+        cleanly. ``extra`` carries caller identity fields — the container
+        deploy path passes the probed kernel-tier fingerprint, so a tier
+        change invalidates stored entrypoints exactly like engine bundles."""
+        from repro.core import aot
+        fields = {
+            "family": f"entrypoint:{name}",
+            "args": self._arg_key(args, kwargs),
+            "profile": profile.fingerprint(),
+        }
+        if extra:
+            fields.update(extra)
+        return aot.bundle_key(fields)
+
+    def _ir_restore(self, skey: str, name: str, profile: SystemProfile,
+                    store) -> CompiledArtifact | None:
+        """IR-boot rung for a deployed entrypoint: deserialize a stored
+        executable instead of lower+compile. The stored meta carries the
+        cost/collective analyses so the metering and dry-run paths keep
+        working without the Lowered stage."""
+        from repro.core import aot
+        got = store.get(skey)
+        if got is None:
+            return None
+        blobs, meta = got
+        try:
+            compiled = aot.deserialize_compiled(blobs["exe"])
+        except Exception:
+            return None
+        return CompiledArtifact(
+            key=f"{skey}@{profile.fingerprint()}",
+            profile=profile,
+            lowered=None,
+            compiled=compiled,
+            lower_s=0.0,
+            compile_s=0.0,
+            cache_hit=False,
+            boot="ir",
+            _cost=meta.get("cost"),
+            _collectives=meta.get("collectives"),
+        )
+
+    def _persist(self, skey: str, name: str, art: CompiledArtifact,
+                 store) -> None:
+        from repro.core import aot
+        try:
+            blob = aot.serialize_compiled(art.compiled)
+            meta = {
+                "name": name,
+                "cost": {k: float(v) for k, v in art.cost_analysis().items()
+                         if isinstance(v, (int, float))},
+                "collectives": art.collectives(),
+            }
+            store.put(skey, {"exe": blob}, meta=meta)
+        except Exception as err:  # non-serializable exe: stay cold-bootable
+            self.stats["persist_failures"] = (
+                self.stats.get("persist_failures", 0) + 1)
+            logger.debug("artifact persist skipped for %s: %s", name, err)
+
     def deploy(
         self,
         fn: Callable,
@@ -350,14 +420,32 @@ class DeploymentCompiler:
         args=(),
         kwargs=None,
         jit_kwargs: Mapping[str, Any] | None = None,
+        store=None,
+        store_extra: Mapping[str, Any] | None = None,
     ) -> CompiledArtifact:
-        """Full deployment: lower (or reuse IR) + compile for `profile`."""
+        """Full deployment: lower (or reuse IR) + compile for `profile`.
+        With ``store`` (an ArtifactStore), the boot ladder applies: a
+        matching persisted executable deserializes instead of compiling
+        (boot="ir"), and a cold compile persists for the next process."""
+        skey = None
+        if store is not None:
+            skey = self._store_key(name, args, kwargs, profile, store_extra)
+            cached = self._exe_cache.get(skey)
+            if cached is not None:
+                self.stats["exe_hits"] += 1
+                return dataclasses.replace(cached, cache_hit=True,
+                                           boot="warm")
+            art = self._ir_restore(skey, name, profile, store)
+            if art is not None:
+                self._exe_cache[skey] = art
+                self.stats["ir_boots"] = self.stats.get("ir_boots", 0) + 1
+                return art
         ir_key, lowered, lower_s = self.lower(fn, name, args, kwargs, jit_kwargs)
         exe_key = f"{ir_key}@{profile.fingerprint()}"
         if exe_key in self._exe_cache:
             self.stats["exe_hits"] += 1
             art = self._exe_cache[exe_key]
-            return dataclasses.replace(art, cache_hit=True)
+            return dataclasses.replace(art, cache_hit=True, boot="warm")
         t0 = time.perf_counter()
         compiled = lowered.compile()
         compile_s = time.perf_counter() - t0
@@ -372,6 +460,9 @@ class DeploymentCompiler:
         )
         self._exe_cache[exe_key] = art
         self.stats["exe_misses"] += 1
+        if skey is not None:
+            self._exe_cache[skey] = art
+            self._persist(skey, name, art, store)
         return art
 
 

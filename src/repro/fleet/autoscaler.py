@@ -39,6 +39,12 @@ class SLO:
     up_cooldown_s: float = 1.0     # >= one boot time: let the new replica land
     down_cooldown_s: float = 4.0
     idle_drain_s: float = 3.0      # sustained idle before draining a replica
+    # boot-cost awareness: the queue trigger scales by
+    # 1 / (1 + boot_cost_s / boot_norm_s) — an expensive (cold) boot must
+    # start EARLIER to land before the backlog violates the SLO, while a
+    # cheap IR-boot replica can afford to wait for a deeper queue.
+    # boot_norm_s is the boot cost that halves the queue threshold.
+    boot_norm_s: float = 2.0
 
 
 class Autoscaler:
@@ -73,18 +79,28 @@ class Autoscaler:
 
     # ------------------------------------------------------------------
     def decide(self, now: float, *, serving: int, booting: int,
-               queued: int, busy_slots: int, total_slots: int) -> str | None:
+               queued: int, busy_slots: int, total_slots: int,
+               boot_cost_s: float = 0.0) -> str | None:
         """One scaling decision per call. ``serving``/``booting`` are replica
         counts; ``queued`` is fleet-wide queued requests; ``busy_slots`` /
-        ``total_slots`` are over SERVING replicas only."""
+        ``total_slots`` are over SERVING replicas only. ``boot_cost_s`` is
+        the expected boot latency of the NEXT replica (the manager derives
+        it from the engines' boot-ladder preview): the longer a replica
+        takes to come up, the earlier the queue trigger fires so it lands
+        before the backlog blows the SLO."""
         slo = self.slo
         p95 = self.p95(now)
         active = serving + booting
+        queue_high = slo.queue_high_per_slot * total_slots
+        if boot_cost_s > 0 and slo.boot_norm_s > 0:
+            queue_high /= 1.0 + boot_cost_s / slo.boot_norm_s
 
         if active < self.max_replicas and now - self._last_up >= slo.up_cooldown_s:
             reason = None
-            if queued > slo.queue_high_per_slot * total_slots:
-                reason = f"queue {queued} > {slo.queue_high_per_slot:g}/slot x {total_slots}"
+            if queued > queue_high:
+                reason = (f"queue {queued} > {queue_high:.1f} "
+                          f"({slo.queue_high_per_slot:g}/slot x {total_slots}"
+                          f", boot {boot_cost_s:g}s)")
             elif p95 is not None and p95 > slo.p95_target_s:
                 reason = f"p95 {p95:.2f}s > target {slo.p95_target_s:g}s"
             if reason is not None:

@@ -31,6 +31,7 @@ import dataclasses
 import enum
 import itertools
 import logging
+import time
 from typing import Any, Sequence
 
 import numpy as np
@@ -83,10 +84,16 @@ class FleetConfig:
     prefill_chunk_tokens: int | None = None
     # virtual-time knobs
     tick_s: float = 0.05          # one fused decode round per replica per tick
-    warm_boot_s: float = 0.5      # deployment cache hit: engine boot only
-    cold_boot_s: float = 2.0      # first deploy: compile the data plane
+    warm_boot_s: float = 0.5      # in-process program bundle already compiled
+    cold_boot_s: float = 2.0      # first deploy: trace+compile the data plane
+    ir_boot_s: float = 0.15       # IR-boot: deserialize persisted executables
     meter_every_s: float = 2.0    # ledger flush cadence
     settle_s: float = 40.0        # sim horizon past the last arrival
+    # persistent AOT artifact store (checkpoint.store.ArtifactStore or
+    # None): carried into the serving container so every replica boots
+    # through the IR-boot ladder and cold compiles persist for the next
+    # process (docs/ir-containers.md)
+    artifact_store: Any = None
 
 
 class Replica:
@@ -98,7 +105,10 @@ class Replica:
         self.executor = executor
         self.engine = executor.engine
         self.state = ReplicaState.BOOTING
-        self.boot = boot  # "warm" | "cold" (deployment cache hit or miss)
+        self.boot = boot          # predicted rung: "warm" | "ir" | "cold"
+        self.boot_path: str | None = None   # rung warmup() actually took
+        self.boot_cost_s = 0.0    # virtual boot latency charged at scale-up
+        self.boot_wall_s = 0.0    # real wall-clock of warmup()
         self.boot_until_s = boot_until_s
         self.started_s = started_s
         self.released_s: float | None = None
@@ -285,6 +295,8 @@ class FleetReport:
     prefix_cache: dict             # fleet-wide prefix reuse + router affinity
     speculative: dict              # fleet-wide draft/accept telemetry
     paged_kv: dict                 # fleet-wide page-pool occupancy/CoW telemetry
+    boot: dict                     # per-rung boot counts + latencies + the
+                                   # expected cost of the next scale-up
     replicas: list[dict]
     batch: dict
     decisions: list[tuple[float, str, str]]
@@ -366,10 +378,20 @@ class FleetManager:
             self.counters["scale_up_failures"] += 1
             self.timeline.append((now, "scale-up failed: no preemptible capacity"))
             return None
-        boot = "warm" if self.service.stats["warm_acquires"] > warm_before else "cold"
-        boot_s = self.cfg.warm_boot_s if boot == "warm" else self.cfg.cold_boot_s
+        # predicted boot rung: the engine previews its own boot ladder
+        # (warm in-process bundle > persisted IR > cold trace+compile);
+        # the deployment-cache signal is the fallback for engines without
+        # a preview (it cannot see the IR rung)
+        preview = getattr(ex.engine, "boot_path_preview", None)
+        if preview is not None:
+            boot = preview()
+        else:
+            boot = ("warm" if self.service.stats["warm_acquires"] > warm_before
+                    else "cold")
+        boot_s = self._boot_cost_s(boot)
         replica = Replica(next(self._rid), ex, boot_until_s=now + boot_s,
                           started_s=now, boot=boot)
+        replica.boot_cost_s = boot_s
         self.replicas.append(replica)
         if not initial:
             self.counters["scale_ups"] += 1
@@ -416,10 +438,34 @@ class FleetManager:
     def _promote_boots(self, now: float) -> None:
         for r in self._by_state(ReplicaState.BOOTING):
             if now >= r.boot_until_s:
+                t0 = time.perf_counter()
                 r.manifest = r.executor.warmup()
+                r.boot_wall_s = time.perf_counter() - t0
+                boot = (r.manifest or {}).get("boot") or {}
+                r.boot_path = boot.get("path", r.boot)
                 r.state = ReplicaState.SERVING
                 self.timeline.append(
-                    (now, f"serving: replica {r.replica_id} warm"))
+                    (now, f"serving: replica {r.replica_id} "
+                          f"({r.boot_path}-boot {r.boot_wall_s:.2f}s)"))
+
+    def _boot_cost_s(self, path: str) -> float:
+        return {"warm": self.cfg.warm_boot_s,
+                "ir": self.cfg.ir_boot_s}.get(path, self.cfg.cold_boot_s)
+
+    def _expected_boot_s(self) -> float:
+        """Virtual boot cost the NEXT scale-up would pay. Program bundles
+        are process-wide, so any live engine's boot-ladder preview answers
+        for the replica that doesn't exist yet; with no replicas at all the
+        artifact store decides between IR and cold."""
+        for r in self._by_state(ReplicaState.SERVING, ReplicaState.BOOTING,
+                                ReplicaState.DRAINING):
+            preview = getattr(r.engine, "boot_path_preview", None)
+            if preview is not None:
+                return self._boot_cost_s(preview())
+        store = self.cfg.artifact_store
+        if store is not None and store.keys():
+            return self.cfg.ir_boot_s
+        return self.cfg.cold_boot_s
 
     def _step_replicas(self, now: float) -> None:
         for r in self._by_state(ReplicaState.SERVING, ReplicaState.DRAINING):
@@ -454,7 +500,8 @@ class FleetManager:
         total = sum(r.engine.slots for r in serving + booting)
         action = self.autoscaler.decide(
             now, serving=len(serving), booting=len(booting), queued=queued,
-            busy_slots=busy, total_slots=total)
+            busy_slots=busy, total_slots=total,
+            boot_cost_s=self._expected_boot_s())
         if action == "up":
             self.scale_up(now)
         elif action == "down" and serving:
@@ -623,6 +670,19 @@ class FleetManager:
             "prefix_affinity_routes": self.router.stats.get("prefix_hits", 0),
             "session_affinity_routes": self.router.stats.get("session_hits", 0),
         }
+        booted = [r for r in self.replicas if r.boot_path is not None]
+        paths: dict[str, int] = {}
+        wall_by_path: dict[str, float] = {}
+        for r in booted:
+            paths[r.boot_path] = paths.get(r.boot_path, 0) + 1
+            wall_by_path[r.boot_path] = round(
+                wall_by_path.get(r.boot_path, 0.0) + r.boot_wall_s, 6)
+        boot_summary = {
+            "paths": paths,
+            "wall_s_by_path": wall_by_path,
+            "virtual_boot_s": round(sum(r.boot_cost_s for r in booted), 6),
+            "expected_next_boot_s": self._expected_boot_s(),
+        }
         return FleetReport(
             requests=len(self._arrival),
             served=len(self._completion),
@@ -648,9 +708,13 @@ class FleetManager:
             prefix_cache=prefix_summary,
             speculative=spec_summary,
             paged_kv=paged_summary,
+            boot=boot_summary,
             replicas=[{
                 "id": r.replica_id,
                 "boot": r.boot,
+                "boot_path": r.boot_path,
+                "boot_s": round(r.boot_cost_s, 3),
+                "boot_wall_s": round(r.boot_wall_s, 3),
                 "start_s": round(r.started_s, 3),
                 "end_s": (round(r.released_s, 3)
                           if r.released_s is not None else None),
@@ -693,7 +757,8 @@ class FleetManager:
             prefix_cache_bytes=int(fleet.prefix_cache_mb * (1 << 20)) or None,
             spec=spec, page_size=fleet.page_size, kv_pages=fleet.kv_pages,
             kv_watermark=fleet.kv_watermark,
-            prefill_chunk_tokens=fleet.prefill_chunk_tokens)
+            prefill_chunk_tokens=fleet.prefill_chunk_tokens,
+            artifact_store=fleet.artifact_store)
         batch = None
         if batch_jobs:
             batch = BatchWorkload(service.cluster, step_s=batch_step_s,

@@ -45,11 +45,17 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         spec_proposer: str = "ngram", draft_arch: str | None = None,
         page_size: int | None = None, kv_pages: int | None = None,
         kv_watermark: float = 0.05,
-        prefill_chunk_tokens: int | None = None) -> dict:
+        prefill_chunk_tokens: int | None = None,
+        artifact_store_dir: str | None = None) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
     params = transformer.init_model(jax.random.key(seed), cfg)
+
+    store = None
+    if artifact_store_dir:
+        from repro.checkpoint.store import ArtifactStore
+        store = ArtifactStore(artifact_store_dir)
 
     spec = None
     if spec_k > 0:
@@ -65,7 +71,8 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
                              prefix_cache_bytes=int(prefix_cache_mb * (1 << 20))
                              or None, spec=spec, page_size=page_size,
                              kv_pages=kv_pages, kv_watermark=kv_watermark,
-                             prefill_chunk_tokens=prefill_chunk_tokens)
+                             prefill_chunk_tokens=prefill_chunk_tokens,
+                             artifact_store=store)
     cluster = scheduler.Cluster(chips=profile.chips)
     service = InvocationService(cluster)
     # the executor is a context manager: the SERVICE lease is released on
@@ -73,9 +80,15 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
     # cluster free pool — a leaked lease would pin them forever
     with service.acquire_serving(tenant, cont, profile) as executor:
         t0 = time.perf_counter()
-        executor.warmup()
-        print(f"warmup (all data-plane programs compiled): "
+        man = executor.warmup()
+        boot = (man or {}).get("boot", {})
+        print(f"warmup ({boot.get('path', 'cold')}-boot, "
+              f"{boot.get('warmup_compiles', '?')} compiles, key "
+              f"{boot.get('bundle_key', '-')}): "
               f"{time.perf_counter() - t0:.1f}s")
+        if boot.get("fallthrough"):
+            for why in boot["fallthrough"]:
+                print(f"  boot fallthrough: {why}")
 
         lead = (cfg.num_codebooks,) if cfg.frontend == "audio" else ()
         sys_prompt = rng.integers(0, cfg.vocab_size,
@@ -149,10 +162,16 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               shared_prefix_len: int = 0, multi_turn: bool = False,
               spec_k: int = 0, spec_proposer: str = "ngram",
               draft_arch: str | None = None, page_size: int | None = None,
-              kv_pages: int | None = None) -> dict:
+              kv_pages: int | None = None,
+              artifact_store_dir: str | None = None) -> dict:
     """Drive the elastic fleet live: same control plane the benchmark
     simulates (repro.fleet), printed as an operator would see it."""
     from repro import fleet as fl
+
+    store = None
+    if artifact_store_dir:
+        from repro.checkpoint.store import ArtifactStore
+        store = ArtifactStore(artifact_store_dir)
 
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
@@ -174,7 +193,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                prefix_cache_mb=prefix_cache_mb,
                                spec_k=spec_k, spec_proposer=spec_proposer,
                                spec_draft_arch=draft_arch,
-                               page_size=page_size, kv_pages=kv_pages)
+                               page_size=page_size, kv_pages=kv_pages,
+                               artifact_store=store)
     fm = fl.FleetManager.build(
         cfg, params, chips=chips, fleet=fleet_cfg,
         batch_jobs=[(1, batch_steps)] * batch_jobs)
@@ -208,6 +228,13 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               f"fleet-wide | {pk['cow_copies']} CoW copies, "
               f"{pk['preemptions']} preemptions, "
               f"{pk['admit_skips']} watermark skips")
+    bt = report.boot
+    if bt.get("paths"):
+        by_path = " ".join(f"{k}x{v}" for k, v in sorted(bt["paths"].items()))
+        print(f"boot ladder: {by_path} | real warmup "
+              + " ".join(f"{k}={v:.2f}s"
+                         for k, v in sorted(bt["wall_s_by_path"].items()))
+              + f" | next boot est {bt['expected_next_boot_s']:.2f} virtual s")
     print(f"engine latency: ttft p95 {report.ttft_p95_s * 1e3:.1f}ms | "
           f"tpot p95 {report.tpot_p95_s * 1e3:.1f}ms (real wall clock)")
     for t, what in fm.timeline:
@@ -267,6 +294,10 @@ def main() -> None:
                     choices=["ngram", "draft"])
     ap.add_argument("--draft-arch", default=None,
                     help="draft model config id (with --spec-proposer draft)")
+    ap.add_argument("--artifact-store", default=None, metavar="DIR",
+                    help="persistent AOT artifact store directory: first run "
+                         "cold-boots and persists serialized executables, "
+                         "later runs IR-boot from them (docs/ir-containers.md)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.fleet:
@@ -280,7 +311,8 @@ def main() -> None:
                   multi_turn=args.multi_turn, spec_k=args.spec_k,
                   spec_proposer=args.spec_proposer,
                   draft_arch=args.draft_arch, page_size=args.page_size,
-                  kv_pages=args.kv_pages)
+                  kv_pages=args.kv_pages,
+                  artifact_store_dir=args.artifact_store)
         return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,
@@ -292,7 +324,8 @@ def main() -> None:
               spec_proposer=args.spec_proposer, draft_arch=args.draft_arch,
               page_size=args.page_size, kv_pages=args.kv_pages,
               kv_watermark=args.kv_watermark,
-              prefill_chunk_tokens=args.prefill_chunk)
+              prefill_chunk_tokens=args.prefill_chunk,
+              artifact_store_dir=args.artifact_store)
     assert len(out["results"]) == args.requests
     assert out["ledger_tokens"] == out["tokens"]
 

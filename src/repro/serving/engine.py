@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hooks
+from repro.core import aot, hooks
 from repro.models import transformer
 from repro.serving import speculative
 from repro.serving.block_manager import (BlockManager, PagedPrefixCache,
@@ -57,7 +57,8 @@ from repro.serving.prefix_cache import (PrefixCache, StateOps,
 from repro.serving.sampling import (SamplingConfig, SamplingParams,
                                     accept_speculative, sample, sample_batched)
 
-__all__ = ["Request", "RequestResult", "ServingEngine"]
+__all__ = ["Request", "RequestResult", "ServingEngine",
+           "clear_program_caches"]
 
 logger = logging.getLogger(__name__)
 
@@ -119,6 +120,12 @@ class _Programs:
 
     The cache key includes the hook binding's chosen providers: programs
     traced under one kernel tier must never serve an engine bound to another.
+
+    Every program is registered in an :class:`repro.core.aot.AotRegistry`,
+    so the bundle's compiled executables can ALSO be exported to a
+    persistent ``ArtifactStore`` and re-installed in a later process — the
+    IR-boot rung below this in-process warm cache (see
+    ``ServingEngine.warmup``'s boot ladder and docs/ir-containers.md).
     """
 
     def __init__(self, cfg, slots: int, max_len: int):
@@ -132,6 +139,10 @@ class _Programs:
         self.state_axes = state_axes
         self.pos_axes = state_pos_axes(cfg, max_len, dt)
         self._spec_steps: dict[int, Any] = {}
+        # every program below is registered here behind a shape-fingerprint
+        # dispatcher, so the whole bundle can be exported to / installed
+        # from a persistent artifact store (the IR-boot rung)
+        self.aot = aot.AotRegistry()
 
         @jax.jit
         def fused_step(params, key, states, ctrl):
@@ -165,7 +176,7 @@ class _Programs:
             )
             return key, new_states, new_ctrl, packed
 
-        self.fused_step = fused_step
+        self.fused_step = self.aot.wrap("fused_step", fused_step)
 
         @jax.jit
         def prefill_chunk(params, tokens, states, start, lengths):
@@ -175,7 +186,7 @@ class _Programs:
             return transformer.prefill_chunk(params, cfg, tokens, states,
                                              start, lengths)
 
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = self.aot.wrap("prefill_chunk", prefill_chunk)
 
         dt_ = dt
 
@@ -183,13 +194,15 @@ class _Programs:
         def init_batch(n):
             return transformer.init_states(cfg, n, max_len, dt_)
 
-        self.init_batch = init_batch
+        self.init_batch = self.aot.wrap("init_batch", init_batch,
+                                        static_argnums=(0,))
 
         # structure-aware extract/restore programs for the prefix cache
         # (shared across engine instances like every other program here)
-        self.state_ops = StateOps(cfg, max_len, dt)
+        self.state_ops = StateOps(cfg, max_len, dt, aot=self.aot)
 
-        self.sample_first = jax.jit(sample_batched)
+        self.sample_first = self.aot.wrap("sample_first",
+                                          jax.jit(sample_batched))
 
         @jax.jit
         def assign(states, batch_states, ctrl, src, slot, length, first_tok,
@@ -214,13 +227,13 @@ class _Programs:
             )
             return new_states, new_ctrl
 
-        self.assign = assign
+        self.assign = self.aot.wrap("assign", assign)
 
         @jax.jit
         def decode(params, tokens, states, lengths):
             return transformer.decode_step(params, cfg, tokens, states, lengths)
 
-        self.decode = decode  # legacy (unfused) step
+        self.decode = self.aot.wrap("decode", decode)  # legacy (unfused) step
 
     # ------------------------------------------------------------------
     def spec_step_for(self, k: int):
@@ -229,7 +242,8 @@ class _Programs:
         geometry share the compiled verify program too."""
         prog = self._spec_steps.get(k)
         if prog is None:
-            prog = self._spec_steps[k] = self._build_spec_step(k)
+            prog = self._spec_steps[k] = self.aot.wrap(
+                f"spec_step_k{k}", self._build_spec_step(k))
         return prog
 
     def _build_spec_step(self, k: int):
@@ -320,8 +334,7 @@ _PROGRAMS: dict[tuple, _Programs] = {}
 
 def _programs_for(cfg, slots: int, max_len: int,
                   binding: hooks.Binding | None) -> _Programs:
-    tiers = (None if binding is None
-             else tuple(sorted(binding.providers().items())))
+    tiers = None if binding is None else binding.tier_fingerprint()
     key = (cfg, slots, max_len, tiers)
     prog = _PROGRAMS.get(key)
     if prog is None:
@@ -365,6 +378,7 @@ class _PagedPrograms:
         dt = jnp.dtype(cfg.activ_dtype)
         self.page_axes = paged_page_axes(cfg, page_size, dt)
         self._spec_steps: dict[int, Any] = {}
+        self.aot = aot.AotRegistry()  # export/install, like _Programs
 
         @jax.jit
         def fused_step(params, key, states, ctrl, bt):
@@ -399,7 +413,7 @@ class _PagedPrograms:
             )
             return key, new_states, new_ctrl, packed
 
-        self.fused_step = fused_step
+        self.fused_step = self.aot.wrap("fused_step", fused_step)
 
         @jax.jit
         def prefill_chunk(params, tokens, states, start, lengths, bt):
@@ -410,7 +424,7 @@ class _PagedPrograms:
                 params, cfg, tokens, states, start, lengths,
                 block_tables=bt, page_size=page_size)
 
-        self.prefill_chunk = prefill_chunk
+        self.prefill_chunk = self.aot.wrap("prefill_chunk", prefill_chunk)
 
         @jax.jit
         def arm(ctrl, slot, length, first_tok, temp, topk, max_new, eos):
@@ -428,7 +442,7 @@ class _PagedPrograms:
                 last=ctrl["last"].at[slot].set(first_tok),
             )
 
-        self.arm = arm
+        self.arm = self.aot.wrap("arm", arm)
 
         @jax.jit
         def release(ctrl, slot):
@@ -437,7 +451,7 @@ class _PagedPrograms:
                 lengths=ctrl["lengths"].at[slot].set(0),
                 active=ctrl["active"].at[slot].set(False))
 
-        self.release = release
+        self.release = self.aot.wrap("release", release)
 
         page_axes = self.page_axes
 
@@ -451,15 +465,17 @@ class _PagedPrograms:
                 return jax.lax.dynamic_update_index_in_dim(leaf, row, dst, ax)
             return jax.tree.map(f, page_axes, states)
 
-        self.copy_page = copy_page
+        self.copy_page = self.aot.wrap("copy_page", copy_page)
 
-        self.sample_first = jax.jit(sample_batched)
+        self.sample_first = self.aot.wrap("sample_first",
+                                          jax.jit(sample_batched))
 
     # ------------------------------------------------------------------
     def spec_step_for(self, k: int):
         prog = self._spec_steps.get(k)
         if prog is None:
-            prog = self._spec_steps[k] = self._build_spec_step(k)
+            prog = self._spec_steps[k] = self.aot.wrap(
+                f"spec_step_k{k}", self._build_spec_step(k))
         return prog
 
     def _build_spec_step(self, k: int):
@@ -523,14 +539,23 @@ _PAGED_PROGRAMS: dict[tuple, _PagedPrograms] = {}
 def _paged_programs_for(cfg, slots: int, max_len: int, page_size: int,
                         num_pages: int,
                         binding: hooks.Binding | None) -> _PagedPrograms:
-    tiers = (None if binding is None
-             else tuple(sorted(binding.providers().items())))
+    tiers = None if binding is None else binding.tier_fingerprint()
     key = (cfg, slots, max_len, page_size, num_pages, tiers)
     prog = _PAGED_PROGRAMS.get(key)
     if prog is None:
         prog = _PAGED_PROGRAMS[key] = _PagedPrograms(
             cfg, slots, max_len, page_size, num_pages)
     return prog
+
+
+def clear_program_caches() -> None:
+    """Drop every in-process program bundle — the warm-boot cache. The next
+    engine for ANY geometry re-enters the boot ladder below the warm rung
+    (IR-boot if its artifact store holds the bundle, else cold). This is
+    how tests and benchmarks measure cross-process boot behavior without
+    forking a fresh interpreter."""
+    _PROGRAMS.clear()
+    _PAGED_PROGRAMS.clear()
 
 
 class ServingEngine:
@@ -575,11 +600,17 @@ class ServingEngine:
         kv_pages: int | None = None,
         kv_watermark: float = 0.05,
         prefill_chunk_tokens: int | None = None,
+        artifact_store=None,
     ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # persistent AOT artifact store (checkpoint.store.ArtifactStore or
+        # None): enables the IR-boot rung of warmup()'s boot ladder —
+        # compiled executables serialized by a previous process deserialize
+        # here instead of re-tracing
+        self.artifact_store = artifact_store
         # the deployment's hook binding: data-plane programs trace under it,
         # so the engine serves through the tiers the deployment probed+bound
         # (None = portable floor). `manifest` is the deployment's
@@ -736,6 +767,7 @@ class ServingEngine:
                 if prefix_cache_bytes else None)
         else:
             progs = _programs_for(cfg, slots, max_len, binding)
+            self._progs = progs
             self._fused_step = progs.fused_step
             self._prefill_chunk = progs.prefill_chunk
             self._init_batch = progs.init_batch
@@ -798,6 +830,29 @@ class ServingEngine:
         self._slot_ttft = [0.0] * slots
         self._admit_s = [0.0] * slots
 
+        # ---- persistent-AOT bundle identity: every field that selects a
+        # distinct compiled program set. bundle_key() folds in the
+        # jax/jaxlib version + platform, so environment drift invalidates
+        # stored artifacts the same way a tier change does. ----
+        self._aot_fields = {
+            "family": f"serving:{cfg.name}",
+            "kind": "paged" if self.paged else "slots",
+            "cfg": cfg,
+            "slots": slots,
+            "max_len": max_len,
+            "prompt_buckets": self.prompt_buckets,
+            "fused": self.fused,
+            "tiers": (None if binding is None
+                      else binding.tier_fingerprint()),
+            "spec": (None if spec is None
+                     else (spec.k, getattr(self.proposer, "kind", None))),
+            "page_size": self.page_size,
+            "kv_pages": getattr(self, "kv_pages", None),
+            "chunk_widths": self._chunk_widths if self.paged else None,
+            "prefix_cache": self.prefix_cache is not None,
+        }
+        self._bundle_key = aot.bundle_key(self._aot_fields)
+
     # ------------------------------------------------------------------
     def _bound(self):
         """Hook-binding scope for data-plane tracing: jit programs trace on
@@ -807,22 +862,115 @@ class ServingEngine:
             return contextlib.nullcontext()
         return hooks.use(self.binding)
 
-    def warmup(self) -> dict | None:
-        """Pre-compile every data-plane program so steady-state serving never
-        compiles: the fused step, each (batch, bucket) prefill shape, the
-        first-token sampler, and the slot-assign scatter. Outputs are
-        discarded — engine state is untouched. Returns (and logs) the
-        deployment's specialization manifest, so the operator sees exactly
-        which kernel tier serves each accelerated API before traffic lands."""
+    def _aot_registry(self) -> aot.AotRegistry:
+        return (self._paged_progs if self.paged else self._progs).aot
+
+    def boot_path_preview(self) -> str:
+        """Which rung of the boot ladder warmup() WOULD take right now,
+        without compiling anything — what the fleet's boot-cost-aware
+        autoscaler consults before paying for a scale-up."""
+        if self._aot_registry().compiled_count() > 0:
+            return "warm"
+        if (self.artifact_store is not None
+                and aot.AOT_AVAILABLE
+                and self.artifact_store.contains(self._bundle_key)):
+            return "ir"
+        return "cold"
+
+    def warmup(self) -> dict:
+        """Boot the data plane through the three-rung ladder and return the
+        full specialization manifest (ALWAYS a dict — even when every
+        program was already a cache hit — with the boot record under
+        ``"boot"``):
+
+        1. **warm**  — the in-process program bundle already holds compiled
+           executables (a previous replica of this geometry paid for them);
+        2. **ir**    — the artifact store holds a bundle for this exact
+           cfg x geometry x tier x spec x jax-version x platform key:
+           deserialize the executables instead of re-tracing;
+        3. **cold**  — trace + compile everything, then persist the bundle
+           so the NEXT process IR-boots.
+
+        Any mismatch (absent/stale/corrupt artifact, version or tier drift)
+        falls through to the next rung with the reason recorded in
+        ``manifest["boot"]["fallthrough"]`` — mirroring how probe-tier
+        rejections are recorded per API. Programs the IR rung installed are
+        never re-traced: the warmup sweep below dispatches to them by shape
+        fingerprint and compiles only what is missing."""
+        t0 = time.perf_counter()
+        reg = self._aot_registry()
+        boot: dict[str, Any] = {"path": "cold",
+                                "bundle_key": self._bundle_key,
+                                "fallthrough": []}
+        if reg.compiled_count() > 0:
+            boot["path"] = "warm"
+        else:
+            boot["fallthrough"].append(
+                "warm: program bundle empty (first boot in this process)")
+            if self.artifact_store is None:
+                boot["fallthrough"].append("ir: no artifact store attached")
+            elif not aot.AOT_AVAILABLE:
+                boot["fallthrough"].append(
+                    "ir: jax AOT serialization unavailable")
+            else:
+                got = self.artifact_store.get(self._bundle_key)
+                if got is None:
+                    reasons = [self.artifact_store.last_error
+                               or "artifact missing"]
+                    reasons += aot.explain_mismatch(self.artifact_store,
+                                                    self._aot_fields)
+                    boot["fallthrough"].extend(f"ir: {r}" for r in reasons)
+                else:
+                    blobs, _meta = got
+                    installed, errors = reg.install(blobs)
+                    boot["fallthrough"].extend(f"ir: {e}" for e in errors)
+                    if installed > 0:
+                        boot["path"] = "ir"
+                    else:
+                        boot["fallthrough"].append(
+                            "ir: artifact held no installable programs")
+        compiles_before = reg.compile_count()
         with self._bound():
             self._warmup_programs()
-        if self.manifest is not None:
-            tiers = {a: c["provider"]
-                     for a, c in self.manifest.get("apis", {}).items()}
-            logger.info("serving warm [%s @ %s]: %s",
-                        self.manifest.get("container", "?"),
-                        self.manifest.get("profile", "?"), tiers)
+        boot["warmup_compiles"] = reg.compile_count() - compiles_before
+        if (self.artifact_store is not None and aot.AOT_AVAILABLE
+                and boot["path"] != "warm" and boot["warmup_compiles"] > 0):
+            # cold rung persists; an IR boot that still had to compile some
+            # programs tops the artifact up for the next process
+            boot["persisted"] = self.persist_programs().get("persisted", 0)
+        boot["programs"] = reg.counts()
+        boot["boot_s"] = round(time.perf_counter() - t0, 6)
+        manifest = dict(self.manifest) if self.manifest else {}
+        manifest["boot"] = boot
+        self.manifest = manifest
+        tiers = {a: c["provider"]
+                 for a, c in manifest.get("apis", {}).items()}
+        logger.info("serving warm [%s @ %s] boot=%s (%.2fs): %s",
+                    manifest.get("container", "?"),
+                    manifest.get("profile", "?"),
+                    boot["path"], boot["boot_s"], tiers)
         return self.manifest
+
+    def persist_programs(self) -> dict:
+        """Serialize every compiled executable of this bundle into the
+        artifact store under the bundle key. Called automatically at the
+        end of a cold (or partially-cold) warmup; call it again after
+        serving traffic to also capture shapes warmup's sweep missed."""
+        if self.artifact_store is None:
+            return {"persisted": 0, "reason": "no artifact store attached"}
+        if not aot.AOT_AVAILABLE:
+            return {"persisted": 0,
+                    "reason": "jax AOT serialization unavailable"}
+        reg = self._aot_registry()
+        blobs = reg.export()
+        if not blobs:
+            return {"persisted": 0, "reason": "no serializable executables"}
+        meta = {
+            "fields": aot.canonical_fields(self._aot_fields),
+            "programs": sorted({k.rpartition("@")[0] for k in blobs}),
+        }
+        self.artifact_store.put(self._bundle_key, blobs, meta=meta)
+        return {"persisted": len(blobs)}
 
     def _warmup_programs(self) -> None:
         if self.paged:

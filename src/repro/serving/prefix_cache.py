@@ -101,7 +101,7 @@ class StateOps:
     block length per batch geometry.
     """
 
-    def __init__(self, cfg, max_len: int, dtype):
+    def __init__(self, cfg, max_len: int, dtype, *, aot=None):
         self.batch_axes = state_batch_axes(cfg, max_len, dtype)
         self.pos_axes = state_pos_axes(cfg, max_len, dtype)
         self.has_snap = any(p == -1 for p in jax.tree.leaves(self.pos_axes))
@@ -152,10 +152,21 @@ class StateOps:
                 return jnp.moveaxis(lf, 0, ba)
             return jax.tree.map(f, self.batch_axes, self.pos_axes, states, snap)
 
-        self.extract_pos = extract_pos
-        self.restore_pos = restore_pos
-        self.extract_snap = extract_snap
-        self.restore_snap = restore_snap
+        if aot is not None:
+            # register the cache ops in the bundle's AOT registry so they
+            # persist to (and IR-boot from) the artifact store with every
+            # other data-plane program
+            self.extract_pos = aot.wrap("cache_extract_pos", extract_pos,
+                                        static_argnums=(0,))
+            self.restore_pos = aot.wrap("cache_restore_pos", restore_pos,
+                                        static_argnums=(0,))
+            self.extract_snap = aot.wrap("cache_extract_snap", extract_snap)
+            self.restore_snap = aot.wrap("cache_restore_snap", restore_snap)
+        else:
+            self.extract_pos = extract_pos
+            self.restore_pos = restore_pos
+            self.extract_snap = extract_snap
+            self.restore_snap = restore_snap
 
     def split_block(self, block, true_len: int, m: int):
         """Split a stored positional block at offset m -> (head, tail),

@@ -39,6 +39,7 @@ def serving_container(
     kv_watermark: float = 0.05,
     prefill_chunk_tokens: int | None = None,
     name: str | None = None,
+    artifact_store=None,
 ) -> xcontainer.XContainer:
     """Build a deployable serving container for one model.
 
@@ -48,6 +49,11 @@ def serving_container(
     ``repro.serving.speculative.SpecConfig``) turns on speculative decoding
     in every engine booted from this container; ``draft_params`` optionally
     supplies trained draft-model weights for the "draft" proposer kind.
+    ``artifact_store`` (a ``repro.checkpoint.store.ArtifactStore``) makes
+    the container a source+IR container: deployed entrypoints and the
+    engine's whole data-plane bundle persist as serialized executables, so
+    a later PROCESS boots from cached IR instead of re-tracing (the
+    IR-boot rung — docs/ir-containers.md).
     """
     dt = jnp.dtype(cfg.activ_dtype)
 
@@ -80,6 +86,7 @@ def serving_container(
             page_size=page_size, kv_pages=kv_pages,
             kv_watermark=kv_watermark,
             prefill_chunk_tokens=prefill_chunk_tokens,
+            artifact_store=artifact_store,
             binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),
@@ -96,4 +103,5 @@ def serving_container(
             "slots": slots,
             "max_len": max_len,
         },
+        artifact_store=artifact_store,
     )

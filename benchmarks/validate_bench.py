@@ -27,6 +27,8 @@ Two modes (both pure stdlib — no jsonschema dependency in the image):
         * paged tok/s               — advisory (wall clock, as above)
         * boot IR-vs-cold speedup   — same-machine ratio, 20%
         * cold/IR boot seconds      — advisory (wall clock, as above)
+        * disagg TTFT p99 ratio     — virtual-time ratio (deterministic), 20%
+        * disagg chip-seconds ratio — virtual-time ratio (deterministic), 20%
 
     PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
 """
@@ -114,6 +116,22 @@ _SCHEMAS = {
         ("modes.1.preemptions", int, "== 0 (pool provisioned)",
          lambda v: v == 0),
     ],
+    "BENCH_disagg.json": [
+        ("benchmark", str, "== disagg", lambda v: v == "disagg"),
+        ("headline.ttft_p99_ratio", (int, float), ">= 1.3 (headline claim)",
+         lambda v: v >= 1.3),
+        ("headline.chip_seconds_ratio", (int, float),
+         "<= 1.05 (headline claim)", lambda v: v <= 1.05),
+        ("headline.token_parity", bool, "greedy streams byte-identical",
+         lambda v: v is True),
+        ("headline.handoffs_installed", int, ">= 1 (pages actually moved)",
+         lambda v: v >= 1),
+        ("scenarios.disagg.disagg.handoff.sha_rejected", int,
+         "== 0 (no corrupt transfers at rest)", lambda v: v == 0),
+        ("scenarios.disagg.served", int, "> 0", lambda v: v > 0),
+        ("scenarios.disagg.reconciled", bool, "ledger reconciles",
+         lambda v: v is True),
+    ],
     "BENCH_boot.json": [
         ("benchmark", str, "== boot_latency", lambda v: v == "boot_latency"),
         ("arch", str, "non-empty", bool),
@@ -157,6 +175,10 @@ _HEADLINES = [
      "higher", 0.20),
     ("cold boot (s)", "BENCH_boot.json", "cold_boot_s", "lower", None),
     ("IR boot (s)", "BENCH_boot.json", "ir_boot_s", "lower", None),
+    ("disagg TTFT p99 ratio", "BENCH_disagg.json",
+     "headline.ttft_p99_ratio", "higher", 0.20),
+    ("disagg chip-seconds ratio", "BENCH_disagg.json",
+     "headline.chip_seconds_ratio", "lower", 0.20),
 ]
 
 

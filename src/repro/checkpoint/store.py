@@ -189,6 +189,45 @@ class ArtifactStore:
         with self._lock:
             shutil.rmtree(self._dir(key), ignore_errors=True)
 
+    # ------------------------------------------------------------------
+    def sync_from(self, other: "ArtifactStore | str",
+                  *, overwrite: bool = False) -> dict:
+        """Cross-host distribution: copy committed artifacts from another
+        store (or a bare directory) into this one.
+
+        This is the "store is a plain directory" rsync story the IR-boot
+        containers doc promised: a prefill-pool host can compile once and
+        every decode-pool host syncs the corpus before booting. Semantics:
+
+          * manifest-diff — keys already committed here are skipped unless
+            ``overwrite`` (a local artifact is never clobbered by default);
+          * sha-verified — every source blob is re-hashed against the
+            SOURCE manifest during the read; an artifact with a corrupt or
+            truncated blob is **skipped as a recorded miss** on the source
+            store (never copied, never fatal), matching ``get``'s
+            never-raise contract;
+          * atomic per key — copied artifacts land through :meth:`put`
+            (temp dir + COMMIT + rename), so a crash mid-sync leaves no
+            uncommitted debris visible to readers.
+
+        Returns ``{"copied", "skipped", "corrupt", "keys"}``.
+        """
+        src = other if isinstance(other, ArtifactStore) else ArtifactStore(other)
+        out = {"copied": 0, "skipped": 0, "corrupt": 0, "keys": []}
+        for key in src.keys():
+            if not overwrite and self.contains(key):
+                out["skipped"] += 1
+                continue
+            got = src.get(key)  # integrity-checked read; miss on corruption
+            if got is None:
+                out["corrupt"] += 1
+                continue
+            blobs, meta = got
+            self.put(key, blobs, meta=meta)
+            out["copied"] += 1
+            out["keys"].append(key)
+        return out
+
 
 class CheckpointStore:
     def __init__(self, root: str, *, keep: int = 3):

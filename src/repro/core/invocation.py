@@ -56,6 +56,10 @@ class Lease:
     job: scheduler.Job
     deployment: xcontainer.Deployment
     created_s: float
+    # lease class within the tenant's fleet: "serve" for monolithic
+    # replicas, "prefill"/"decode" for phase-specialized pool leases — the
+    # rFaaS-style heterogeneous-pool allocation tag (docs/disaggregation.md)
+    pool: str = "serve"
     active: bool = True
 
     @property
@@ -93,6 +97,7 @@ class InvocationService:
         runtime_s: float = 3600.0,
         klass: scheduler.JobClass = scheduler.JobClass.INTERACTIVE,
         entrypoints: list[str] | None = None,
+        pool: str = "serve",
     ) -> Lease:
         """Acquire a lease: schedule chips, deploy (or warm-reuse) the
         container."""
@@ -113,6 +118,7 @@ class InvocationService:
             job=job,
             deployment=dep,
             created_s=self.cluster.now,
+            pool=pool,
         )
         self._leases[lease.lease_id] = lease
         return lease
@@ -152,6 +158,7 @@ class InvocationService:
         mesh=None,
         runtime_s: float = 3600.0,
         tenant_of: Callable[[int], str] | None = None,
+        pool: str = "serve",
     ) -> "ServingExecutor":
         """Acquire a SERVICE-class lease whose deployment boots a serving
         engine (build ``cont`` with ``repro.serving.service.serving_container``).
@@ -168,7 +175,7 @@ class InvocationService:
                 "build it with repro.serving.service.serving_container")
         lease = self.acquire(
             tenant, cont, profile, mesh=mesh, runtime_s=runtime_s,
-            klass=scheduler.JobClass.SERVICE)
+            klass=scheduler.JobClass.SERVICE, pool=pool)
         engine = factory(lease.deployment)
         return ServingExecutor(service=self, lease=lease, engine=engine,
                                tenant_of=tenant_of)
@@ -188,10 +195,12 @@ class InvocationService:
             self.cluster.check_invariants()
 
     # ------------------------------------------------------------------
-    def active_leases(self, tenant: str | None = None) -> list[Lease]:
+    def active_leases(self, tenant: str | None = None,
+                      pool: str | None = None) -> list[Lease]:
         return [
             l for l in self._leases.values()
             if l.active and (tenant is None or l.tenant == tenant)
+            and (pool is None or l.pool == pool)
         ]
 
 
@@ -236,6 +245,7 @@ class ServingExecutor:
         self._tokens_billed: dict[int, int] = {}  # request_id -> tokens billed
         self._metered_steps = 0
         self._metered_positions = 0  # speculative verify positions billed
+        self._metered_prefill = 0    # prefill token-positions billed
 
     def warmup(self) -> dict | None:
         """Pre-compile the engine's data-plane programs (warm-start).
@@ -286,6 +296,21 @@ class ServingExecutor:
             art = None
         steps = self.engine.stats["decode_steps"] - self._metered_steps
         job_id = f"lease-{self.lease.lease_id}"
+        # prefill FLOPs on their own ledger line: a disaggregated fleet runs
+        # prefill and decode on DIFFERENT pools' leases, so the bill must
+        # show which pool's chips did which phase's work. Billed per padded
+        # prefill token-position at the decode artifact's per-position cost
+        # (one prefill position runs the same layer stack as one decode
+        # step), with its own modeled wall — the flush-window wall_s stays
+        # on the decode/verify line, so phases never double-bill one window.
+        ptoks = self.engine.stats.get("prefill_tokens", 0) - self._metered_prefill
+        if ptoks > 0:
+            self.service.meter.record(
+                tenant=self.lease.tenant, kind="serve_prefill", steps=ptoks,
+                chips=self.lease.chips,
+                wall_s=(model_step_time(art) * ptoks if art is not None else 0.0),
+                artifact=art, job_id=job_id)
+            self._metered_prefill += ptoks
         speculating = getattr(self.engine, "spec", None) is not None
         if speculating:
             # bill decode-equivalent verified POSITIONS, not program steps:

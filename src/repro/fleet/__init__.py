@@ -5,8 +5,11 @@ invocation, and engine layers (docs/fleet.md).
   * :mod:`repro.fleet.router`     — load + affinity admission routing
   * :mod:`repro.fleet.autoscaler` — SLO-driven scale-up / scale-to-min policy
   * :mod:`repro.fleet.traffic`    — deterministic seeded workload traces
+  * :mod:`repro.fleet.disagg`     — prefill/decode pool split + KV handoff
 """
 from repro.fleet.autoscaler import SLO, Autoscaler
+from repro.fleet.disagg import (DisaggConfig, DisaggFleetManager, HandoffTicket,
+                                KVHandoff)
 from repro.fleet.manager import (BatchWorkload, FleetConfig, FleetManager,
                                  FleetReport, Replica, ReplicaState)
 from repro.fleet.router import FleetRequest, Router
@@ -14,8 +17,9 @@ from repro.fleet.traffic import (TraceRequest, bursty_trace, diurnal_trace,
                                  materialize, steady_trace)
 
 __all__ = [
-    "SLO", "Autoscaler", "BatchWorkload", "FleetConfig", "FleetManager",
-    "FleetReport", "FleetRequest", "Replica", "ReplicaState", "Router",
+    "SLO", "Autoscaler", "BatchWorkload", "DisaggConfig", "DisaggFleetManager",
+    "FleetConfig", "FleetManager", "FleetReport", "FleetRequest",
+    "HandoffTicket", "KVHandoff", "Replica", "ReplicaState", "Router",
     "TraceRequest", "bursty_trace", "diurnal_trace", "materialize",
     "steady_trace",
 ]

@@ -16,6 +16,13 @@ fraction under ``low_util`` — for ``idle_drain_s`` before one replica is
 drained, and consecutive scale-downs are spaced by ``down_cooldown_s``.
 Scale-ups only need ``up_cooldown_s`` (roughly one boot time) between them
 so a burst can ramp the fleet to max in a few windows.
+
+All mutable state — latency windows, cooldown clocks, idle timers — is
+keyed by **pool** so a disaggregated fleet can size its prefill and decode
+pools independently: a scale-up in one pool must never consume the other
+pool's cooldown budget, and a TTFT sample must never pollute the TPOT
+window. Single-pool fleets use the implicit ``"default"`` pool and see no
+behavior change.
 """
 from __future__ import annotations
 
@@ -48,7 +55,15 @@ class SLO:
 
 
 class Autoscaler:
-    """Decides "up" / "down" / None from fleet metrics snapshots."""
+    """Decides "up" / "down" / None from fleet metrics snapshots.
+
+    One instance serves any number of pools: pass ``pool=`` to
+    :meth:`record_completion` / :meth:`decide` and each pool gets its own
+    latency window, cooldown clocks, and idle timer. Per-call ``slo`` /
+    ``min_replicas`` / ``max_replicas`` overrides let pools run different
+    targets (e.g. prefill vs TTFT, decode vs TPOT) without separate
+    instances.
+    """
 
     def __init__(self, slo: SLO | None = None, min_replicas: int = 1,
                  max_replicas: int = 4):
@@ -56,73 +71,90 @@ class Autoscaler:
         self.slo = slo or SLO()
         self.min_replicas = min_replicas
         self.max_replicas = max_replicas
-        self._window: deque[tuple[float, float]] = deque()  # (done_t, latency)
-        self._last_up = -float("inf")
-        self._last_down = -float("inf")
-        self._idle_since: float | None = None
+        # per-pool state, lazily created on first touch
+        self._window: dict[str, deque[tuple[float, float]]] = {}
+        self._last_up: dict[str, float] = {}
+        self._last_down: dict[str, float] = {}
+        self._idle_since: dict[str, float | None] = {}
         self.decisions: list[tuple[float, str, str]] = []  # (t, action, reason)
 
+    def _w(self, pool: str) -> deque[tuple[float, float]]:
+        return self._window.setdefault(pool, deque())
+
     # ------------------------------------------------------------------
-    def record_completion(self, now: float, latency_s: float) -> None:
-        self._window.append((now, latency_s))
+    def record_completion(self, now: float, latency_s: float, *,
+                          pool: str = "default") -> None:
+        self._w(pool).append((now, latency_s))
 
-    def p95(self, now: float) -> float | None:
-        self._purge(now)
-        if len(self._window) < self.slo.min_window_samples:
+    def p95(self, now: float, *, pool: str = "default",
+            slo: SLO | None = None) -> float | None:
+        slo = slo or self.slo
+        self._purge(now, pool, slo)
+        w = self._w(pool)
+        if len(w) < slo.min_window_samples:
             return None
-        return float(np.percentile([l for _, l in self._window], 95))
+        return float(np.percentile([l for _, l in w], 95))
 
-    def _purge(self, now: float) -> None:
-        w = self._window
-        while w and w[0][0] < now - self.slo.window_s:
+    def _purge(self, now: float, pool: str, slo: SLO) -> None:
+        w = self._w(pool)
+        while w and w[0][0] < now - slo.window_s:
             w.popleft()
 
     # ------------------------------------------------------------------
     def decide(self, now: float, *, serving: int, booting: int,
                queued: int, busy_slots: int, total_slots: int,
-               boot_cost_s: float = 0.0) -> str | None:
+               boot_cost_s: float = 0.0, pool: str = "default",
+               slo: SLO | None = None, min_replicas: int | None = None,
+               max_replicas: int | None = None) -> str | None:
         """One scaling decision per call. ``serving``/``booting`` are replica
-        counts; ``queued`` is fleet-wide queued requests; ``busy_slots`` /
+        counts; ``queued`` is pool-wide queued requests; ``busy_slots`` /
         ``total_slots`` are over SERVING replicas only. ``boot_cost_s`` is
         the expected boot latency of the NEXT replica (the manager derives
         it from the engines' boot-ladder preview): the longer a replica
         takes to come up, the earlier the queue trigger fires so it lands
-        before the backlog blows the SLO."""
-        slo = self.slo
-        p95 = self.p95(now)
+        before the backlog blows the SLO. All counts must already be scoped
+        to ``pool`` by the caller."""
+        slo = slo or self.slo
+        lo = self.min_replicas if min_replicas is None else min_replicas
+        hi = self.max_replicas if max_replicas is None else max_replicas
+        p95 = self.p95(now, pool=pool, slo=slo)
         active = serving + booting
+        last_up = self._last_up.get(pool, -float("inf"))
+        last_down = self._last_down.get(pool, -float("inf"))
+        tag = "" if pool == "default" else f"{pool}: "
         queue_high = slo.queue_high_per_slot * total_slots
         if boot_cost_s > 0 and slo.boot_norm_s > 0:
             queue_high /= 1.0 + boot_cost_s / slo.boot_norm_s
 
-        if active < self.max_replicas and now - self._last_up >= slo.up_cooldown_s:
+        if active < hi and now - last_up >= slo.up_cooldown_s:
             reason = None
             if queued > queue_high:
-                reason = (f"queue {queued} > {queue_high:.1f} "
+                reason = (f"{tag}queue {queued} > {queue_high:.1f} "
                           f"({slo.queue_high_per_slot:g}/slot x {total_slots}"
                           f", boot {boot_cost_s:g}s)")
             elif p95 is not None and p95 > slo.p95_target_s:
-                reason = f"p95 {p95:.2f}s > target {slo.p95_target_s:g}s"
+                reason = f"{tag}p95 {p95:.2f}s > target {slo.p95_target_s:g}s"
             if reason is not None:
-                self._last_up = now
-                self._idle_since = None
+                self._last_up[pool] = now
+                self._idle_since[pool] = None
                 self.decisions.append((now, "up", reason))
                 return "up"
 
         idle = queued == 0 and busy_slots <= slo.low_util * total_slots
         if idle:
-            if self._idle_since is None:
-                self._idle_since = now
+            if self._idle_since.get(pool) is None:
+                self._idle_since[pool] = now
         else:
-            self._idle_since = None
-        if (serving > self.min_replicas and booting == 0
-                and self._idle_since is not None
-                and now - self._idle_since >= slo.idle_drain_s
-                and now - self._last_down >= slo.down_cooldown_s):
-            self._last_down = now
+            self._idle_since[pool] = None
+        idle_since = self._idle_since.get(pool)
+        if (serving > lo and booting == 0
+                and idle_since is not None
+                and now - idle_since >= slo.idle_drain_s
+                and now - last_down >= slo.down_cooldown_s):
+            self._last_down[pool] = now
             self.decisions.append(
                 (now, "down",
-                 f"idle {now - self._idle_since:.1f}s "
+                 f"{tag}idle {now - idle_since:.1f}s "
                  f"(busy {busy_slots}/{total_slots}, queue 0)"))
             return "down"
         return None

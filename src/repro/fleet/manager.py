@@ -100,10 +100,12 @@ class Replica:
     """One serving engine behind its own SERVICE lease."""
 
     def __init__(self, replica_id: int, executor: ServingExecutor, *,
-                 boot_until_s: float, started_s: float, boot: str):
+                 boot_until_s: float, started_s: float, boot: str,
+                 pool: str = "serve"):
         self.replica_id = replica_id
         self.executor = executor
         self.engine = executor.engine
+        self.pool = pool          # "serve" | "prefill" | "decode"
         self.state = ReplicaState.BOOTING
         self.boot = boot          # predicted rung: "warm" | "ir" | "cold"
         self.boot_path: str | None = None   # rung warmup() actually took
@@ -125,8 +127,14 @@ class Replica:
 
     def outstanding_tokens(self) -> int:
         """Queued + remaining in-flight decode tokens — the router's load
-        signal."""
+        signal. Prefill-only replicas never decode, so their load is the
+        prompt tokens still to be prefilled instead."""
         eng = self.engine
+        if getattr(eng, "role", "both") == "prefill":
+            queued = sum(int(np.asarray(r.prompt).shape[-1]) for r in eng.queue)
+            admitting = sum(st["plen"] - st["pos"]
+                            for st in eng._admitting.values())
+            return queued + admitting
         queued = sum(r.max_new_tokens for r in eng.queue)
         inflight = sum(
             max(r.max_new_tokens - len(eng.generated[i]), 0)
@@ -300,6 +308,14 @@ class FleetReport:
     replicas: list[dict]
     batch: dict
     decisions: list[tuple[float, str, str]]
+    # virtual-time TTFT (arrival -> first token tick): includes queueing
+    # delay, which the wall-clock ttft_s above cannot see — the disagg
+    # benchmark's headline metric
+    ttft_virtual_p50_s: float = 0.0
+    ttft_virtual_p95_s: float = 0.0
+    ttft_virtual_p99_s: float = 0.0
+    phase_metering: dict = dataclasses.field(default_factory=dict)
+    disagg: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -330,6 +346,11 @@ class FleetManager:
         self._arrival: dict[int, float] = {}
         self._completion: dict[int, float] = {}
         self._req_tokens: dict[int, int] = {}
+        # virtual-time TTFT: first tick at which a request had >= 1 token,
+        # minus arrival. Complements the wall-clock ttft_s telemetry (which
+        # measures host compute, not queueing) — queueing delay under load is
+        # exactly what disaggregation improves, so benchmarks gate on this.
+        self._ttft_virtual: dict[int, float] = {}
         self.counters = {"scale_ups": 0, "scale_downs": 0, "lease_releases": 0,
                          "preempts_triggered": 0, "scale_up_failures": 0}
         self.timeline: list[tuple[float, str]] = []
@@ -346,7 +367,15 @@ class FleetManager:
     # ------------------------------------------------------------------
     # elasticity actions
     # ------------------------------------------------------------------
-    def scale_up(self, now: float, *, initial: bool = False) -> Replica | None:
+    def _container_for(self, pool: str | None):
+        """Container a new replica in ``pool`` deploys. The monolithic fleet
+        has one container; disaggregated subclasses map pool -> role-
+        specialized container (distinct names, so warm-deployment caching
+        never aliases a prefill bundle into a decode replica)."""
+        return self.container
+
+    def scale_up(self, now: float, *, initial: bool = False,
+                 pool: str | None = None) -> Replica | None:
         """Acquire one more SERVICE lease and boot a replica behind it. When
         the cluster is full, RUNNING BATCH jobs are preempted (youngest
         first: least progress to requeue) until the lease's job starts; if
@@ -357,8 +386,8 @@ class FleetManager:
         benchmark/CI would be vacuously true)."""
         warm_before = self.service.stats["warm_acquires"]
         ex = self.service.acquire_serving(
-            self.cfg.tenant, self.container, self.profile,
-            tenant_of=self._tenant_of)
+            self.cfg.tenant, self._container_for(pool), self.profile,
+            tenant_of=self._tenant_of, pool=pool or "serve")
         job = ex.lease.job
         if job.state != scheduler.JobState.RUNNING:
             victims = sorted(
@@ -378,26 +407,32 @@ class FleetManager:
             self.counters["scale_up_failures"] += 1
             self.timeline.append((now, "scale-up failed: no preemptible capacity"))
             return None
-        # predicted boot rung: the engine previews its own boot ladder
-        # (warm in-process bundle > persisted IR > cold trace+compile);
-        # the deployment-cache signal is the fallback for engines without
-        # a preview (it cannot see the IR rung)
-        preview = getattr(ex.engine, "boot_path_preview", None)
-        if preview is not None:
-            boot = preview()
+        # predicted boot rung, from MODELED state only: "warm" when THIS
+        # fleet's deployment cache hit (a previous replica already deployed
+        # the same container), else the engine's persisted-IR-vs-cold
+        # preview. The engine's warm rung is deliberately not consulted —
+        # the in-process program bundle can be hot for reasons outside this
+        # fleet's virtual history (another fleet run earlier in the same
+        # process), and virtual boot cost must stay hermetic per manager.
+        # warmup() still takes the cheapest REAL rung; r.boot_path records
+        # it separately.
+        if self.service.stats["warm_acquires"] > warm_before:
+            boot = "warm"
         else:
-            boot = ("warm" if self.service.stats["warm_acquires"] > warm_before
-                    else "cold")
+            preview = getattr(ex.engine, "boot_path_preview", None)
+            boot = (preview(assume_fresh_process=True)
+                    if preview is not None else "cold")
         boot_s = self._boot_cost_s(boot)
         replica = Replica(next(self._rid), ex, boot_until_s=now + boot_s,
-                          started_s=now, boot=boot)
+                          started_s=now, boot=boot, pool=pool or "serve")
         replica.boot_cost_s = boot_s
         self.replicas.append(replica)
         if not initial:
             self.counters["scale_ups"] += 1
+        ptag = f" [{pool}]" if pool else ""
         self.timeline.append(
             (now, f"{'boot' if initial else 'scale-up'}: replica "
-                  f"{replica.replica_id} ({boot} boot, "
+                  f"{replica.replica_id}{ptag} ({boot} boot, "
                   f"lease {ex.lease.lease_id})"))
         return replica
 
@@ -412,6 +447,15 @@ class FleetManager:
         for r in self._by_state(ReplicaState.DRAINING):
             if r.has_work():
                 continue
+            # scale-to-min is the moment this replica's compiled corpus is
+            # most complete (live traffic exercised shapes warmup's sweep
+            # missed, e.g. spec_step_for(k) for k seen only under load) —
+            # persist so the NEXT boot is a full IR hit
+            if getattr(r.engine, "artifact_store", None) is not None:
+                persisted = r.engine.persist_programs()
+                self.timeline.append(
+                    (now, f"persist: replica {r.replica_id} "
+                          f"{persisted.get('persisted', 0)} executables"))
             r.executor.meter_flush(max(now - r.last_flush_s, 0.0))
             r.executor.release()  # asserts chips returned to the free pool
             r.state = ReplicaState.RELEASED
@@ -452,16 +496,18 @@ class FleetManager:
         return {"warm": self.cfg.warm_boot_s,
                 "ir": self.cfg.ir_boot_s}.get(path, self.cfg.cold_boot_s)
 
-    def _expected_boot_s(self) -> float:
-        """Virtual boot cost the NEXT scale-up would pay. Program bundles
-        are process-wide, so any live engine's boot-ladder preview answers
-        for the replica that doesn't exist yet; with no replicas at all the
-        artifact store decides between IR and cold."""
+    def _expected_boot_s(self, pool: str | None = None) -> float:
+        """Virtual boot cost the NEXT scale-up would pay, from modeled
+        fleet state: any live replica means this fleet's deployment cache
+        is hot (warm boot); with none, a stocked artifact store IR-boots;
+        otherwise cold. With ``pool`` given, only same-pool replicas
+        answer (pool bundles are role-keyed, so a decode replica cannot
+        vouch for a prefill boot)."""
         for r in self._by_state(ReplicaState.SERVING, ReplicaState.BOOTING,
                                 ReplicaState.DRAINING):
-            preview = getattr(r.engine, "boot_path_preview", None)
-            if preview is not None:
-                return self._boot_cost_s(preview())
+            if pool is not None and r.pool != pool:
+                continue
+            return self.cfg.warm_boot_s
         store = self.cfg.artifact_store
         if store is not None and store.keys():
             return self.cfg.ir_boot_s
@@ -483,9 +529,34 @@ class FleetManager:
             for rid, res in itertools.islice(results.items(), r.harvested, None):
                 self._completion[rid] = done_t
                 self._req_tokens[rid] = len(res.tokens)
-                self.autoscaler.record_completion(
-                    done_t, done_t - self._arrival[rid])
+                # single-tick requests retire before _stamp_ttft sees them
+                self._ttft_virtual.setdefault(rid, done_t - self._arrival[rid])
+                self._record_completion(done_t, rid, res)
             r.harvested = len(results)
+
+    def _record_completion(self, done_t: float, rid: int, res) -> None:
+        """Feed one completion into the autoscaler. The monolithic fleet
+        records end-to-end latency into the default pool; disaggregated
+        subclasses split the sample into per-pool SLO signals."""
+        self.autoscaler.record_completion(done_t, done_t - self._arrival[rid])
+
+    def _stamp_ttft(self, now: float) -> None:
+        """Record virtual TTFT for any in-flight request whose first token
+        landed this tick (the tick's results become visible at now+tick_s,
+        matching ``_harvest``'s completion stamps)."""
+        t = now + self.cfg.tick_s
+        for r in self._by_state(ReplicaState.SERVING, ReplicaState.DRAINING):
+            eng = r.engine
+            for i, req in enumerate(eng.active):
+                if req is None or not eng.generated[i]:
+                    continue
+                rid = req.request_id
+                if rid not in self._ttft_virtual and rid in self._arrival:
+                    self._ttft_virtual[rid] = t - self._arrival[rid]
+
+    def _post_step(self, now: float) -> None:
+        """Hook between replica stepping and harvest — the disaggregated
+        fleet pumps KV handoffs (export -> transfer -> install) here."""
 
     def _autoscale(self, now: float) -> None:
         serving = self._by_state(ReplicaState.SERVING)
@@ -518,6 +589,17 @@ class FleetManager:
             r.executor.meter_flush(max(now - r.last_flush_s, 0.0))
             r.last_flush_s = now
 
+    def _boot_initial(self) -> None:
+        """Boot the fleet's minimum footprint at t=0 (not counted as elastic
+        scale-ups). Disaggregated subclasses boot each pool to its own
+        minimum."""
+        while len(self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING)) \
+                < self.autoscaler.min_replicas:
+            if self.scale_up(0.0, initial=True) is None:
+                raise RuntimeError(
+                    "fleet: cannot boot min_replicas — cluster too small even "
+                    "with BATCH preemption")
+
     # ------------------------------------------------------------------
     def run_trace(self, requests: Sequence[FleetRequest], *,
                   until_s: float | None = None) -> FleetReport:
@@ -532,12 +614,7 @@ class FleetManager:
         explicit_horizon = until_s is not None
         horizon = until_s if explicit_horizon else (
             (reqs[-1].arrival_s if reqs else 0.0) + self.cfg.settle_s)
-        while len(self._by_state(ReplicaState.BOOTING, ReplicaState.SERVING)) \
-                < self.autoscaler.min_replicas:
-            if self.scale_up(0.0, initial=True) is None:
-                raise RuntimeError(
-                    "fleet: cannot boot min_replicas — cluster too small even "
-                    "with BATCH preemption")
+        self._boot_initial()
         i, t = 0, 0.0
         while True:
             while i < len(reqs) and reqs[i].arrival_s <= t:
@@ -545,6 +622,8 @@ class FleetManager:
                 i += 1
             self._promote_boots(t)
             self._step_replicas(t)
+            self._post_step(t)
+            self._stamp_ttft(t)
             self._harvest(t)
             self._autoscale(t)
             if self.batch is not None:
@@ -656,6 +735,8 @@ class FleetManager:
                 ttfts.append(res.ttft_s)
                 if len(res.tokens) > 1:
                     tpots.append(res.tpot_s)
+        tvs = [self._ttft_virtual[rid] for rid in self._completion
+               if rid in self._ttft_virtual]
         rpct = (lambda xs, q: float(np.percentile(xs, q)) if xs else 0.0)
         agg = [p for p in per_replica_prefix.values() if p]
         hits = sum(p["hits"] for p in agg)
@@ -728,7 +809,30 @@ class FleetManager:
             } for r in self.replicas],
             batch=self.batch.summary() if self.batch else {},
             decisions=list(self.autoscaler.decisions),
+            ttft_virtual_p50_s=rpct(tvs, 50),
+            ttft_virtual_p95_s=rpct(tvs, 95),
+            ttft_virtual_p99_s=rpct(tvs, 99),
+            phase_metering={
+                "prefill_tokens": self.service.meter.total_steps("serve_prefill"),
+                "decode_steps": self.service.meter.total_steps("serve_decode"),
+                "spec_positions": self.service.meter.total_steps(
+                    "serve_spec_verify"),
+            },
+            disagg=self._disagg_summary(),
         )
+
+    def _disagg_summary(self) -> dict:
+        """Handoff/pool telemetry — empty for the monolithic fleet."""
+        return {}
+
+    def token_streams(self) -> dict[int, list[int]]:
+        """Completed token stream per request id across every replica — the
+        byte-parity surface benchmarks compare between fleet topologies."""
+        out: dict[int, list[int]] = {}
+        for r in self.replicas:
+            for rid, res in r.engine.results.items():
+                out[rid] = list(res.tokens)
+        return out
 
     # ------------------------------------------------------------------
     @classmethod

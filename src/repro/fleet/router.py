@@ -82,7 +82,9 @@ class Router:
         self._sessions: OrderedDict[str, int] = OrderedDict()  # LRU pin map
         self.stats = {"routed": 0, "session_hits": 0, "prefix_hits": 0,
                       "bucket_hits": 0, "least_loaded": 0,
-                      "sessions_evicted": 0}
+                      "sessions_evicted": 0, "handoff_routes": 0,
+                      "handoff_session_hits": 0, "handoff_prefix_hits": 0,
+                      "handoff_free_pages": 0}
 
     def route(self, req: FleetRequest, replicas: Sequence[Any]):
         """Pick the replica for ``req``; records the session pin (only when
@@ -130,6 +132,55 @@ class Router:
         if self.session_affinity:
             self._sessions[req.session] = chosen.replica_id
             self._sessions.move_to_end(req.session)
+            while len(self._sessions) > self.max_sessions:
+                self._sessions.popitem(last=False)
+                self.stats["sessions_evicted"] += 1
+        return chosen
+
+    def route_handoff(self, session: str, prompt, replicas: Sequence[Any]):
+        """Place a handoff-ready request (KV already computed on a prefill
+        replica) onto a decode replica. Ordering differs from admission
+        routing: the decode side never re-runs prefill, so bucket affinity
+        is irrelevant — what matters is (1) the session's previous decode
+        replica, (2) the longest cached prefix (a shared-prefix install can
+        alias pages on a future request), then (3) the most free KV pages
+        (an install needs headroom NOW, not least decode load). Returns
+        ``None`` when no replica is accepting — the caller falls back to
+        monolithic colocation."""
+        accepting = [r for r in replicas if r.accepting]
+        if not accepting:
+            return None
+        self.stats["handoff_routes"] += 1
+        chosen = None
+        if self.session_affinity:
+            rid = self._sessions.get(session)
+            if rid is not None:
+                chosen = next((r for r in accepting if r.replica_id == rid),
+                              None)
+                if chosen is not None:
+                    self.stats["handoff_session_hits"] += 1
+        if chosen is None and self.prefix_affinity:
+            cands = []
+            for r in accepting:
+                fn = getattr(r, "cached_prefix_len", None)
+                plen = int(fn(prompt)) if fn is not None else 0
+                if plen > 0:
+                    cands.append((plen, r))
+            if cands:
+                best = max(p for p, _ in cands)
+                chosen = min((r for p, r in cands if p == best),
+                             key=lambda r: r.replica_id)
+                self.stats["handoff_prefix_hits"] += 1
+        if chosen is None:
+            def free_pages(r) -> int:
+                bm = getattr(getattr(r, "engine", None), "block_manager", None)
+                return bm.free_pages if bm is not None else 0
+            chosen = max(accepting,
+                         key=lambda r: (free_pages(r), -r.replica_id))
+            self.stats["handoff_free_pages"] += 1
+        if self.session_affinity:
+            self._sessions[session] = chosen.replica_id
+            self._sessions.move_to_end(session)
             while len(self._sessions) > self.max_sessions:
                 self._sessions.popitem(last=False)
                 self.stats["sessions_evicted"] += 1

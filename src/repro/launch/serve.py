@@ -16,6 +16,8 @@ Usage:
       --requests 16 --max-new 32
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --fleet [--trace bursty|diurnal|steady] [--max-replicas 4]
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
+      --fleet --disagg [--prefill-pool 1 2] [--decode-pool 1 2]
 """
 from __future__ import annotations
 
@@ -163,7 +165,10 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               spec_k: int = 0, spec_proposer: str = "ngram",
               draft_arch: str | None = None, page_size: int | None = None,
               kv_pages: int | None = None,
-              artifact_store_dir: str | None = None) -> dict:
+              artifact_store_dir: str | None = None,
+              disagg: bool = False, prefill_min: int = 1,
+              prefill_max: int = 2, decode_min: int = 1,
+              decode_max: int = 2) -> dict:
     """Drive the elastic fleet live: same control plane the benchmark
     simulates (repro.fleet), printed as an operator would see it."""
     from repro import fleet as fl
@@ -186,6 +191,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                          if cfg.frontend == "audio" else 0),
                           shared_prefix_len=shared_prefix_len,
                           multi_turn=multi_turn, max_prompt_len=max_len // 2)
+    if disagg and page_size is None:
+        page_size = 8  # disaggregation rides the paged-KV handoff plane
     fleet_cfg = fl.FleetConfig(min_replicas=min_replicas,
                                max_replicas=max_replicas, slots=slots,
                                max_len=max_len, prompt_buckets=(8, 16, 32),
@@ -195,9 +202,18 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                spec_draft_arch=draft_arch,
                                page_size=page_size, kv_pages=kv_pages,
                                artifact_store=store)
-    fm = fl.FleetManager.build(
-        cfg, params, chips=chips, fleet=fleet_cfg,
-        batch_jobs=[(1, batch_steps)] * batch_jobs)
+    if disagg:
+        fm = fl.DisaggFleetManager.build(
+            cfg, params, chips=chips, fleet=fleet_cfg,
+            disagg=fl.DisaggConfig(prefill_min=prefill_min,
+                                   prefill_max=prefill_max,
+                                   decode_min=decode_min,
+                                   decode_max=decode_max),
+            batch_jobs=[(1, batch_steps)] * batch_jobs)
+    else:
+        fm = fl.FleetManager.build(
+            cfg, params, chips=chips, fleet=fleet_cfg,
+            batch_jobs=[(1, batch_steps)] * batch_jobs)
     t0 = time.perf_counter()
     report = fm.run_trace(reqs)
     wall = time.perf_counter() - t0
@@ -235,6 +251,19 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               + " ".join(f"{k}={v:.2f}s"
                          for k, v in sorted(bt["wall_s_by_path"].items()))
               + f" | next boot est {bt['expected_next_boot_s']:.2f} virtual s")
+    dg = report.disagg
+    if dg.get("enabled"):
+        ho = dg["handoff"]
+        pools = dg["pools"]
+        print(f"disagg: {ho['installed']}/{ho['submitted']} KV handoffs "
+              f"installed ({ho['bytes'] / 1e6:.2f} MB, "
+              f"{ho['sha_rejected']} sha-rejects, "
+              f"{dg['fallback_submits']} fallback colocations) | pools "
+              + " ".join(f"{p}={v['live']}/{v['peak']}peak"
+                         f"(+{v['scale_ups']}up)"
+                         for p, v in sorted(pools.items())))
+        print(f"virtual ttft: p50 {report.ttft_virtual_p50_s:.2f}s "
+              f"p99 {report.ttft_virtual_p99_s:.2f}s (arrival -> first token)")
     print(f"engine latency: ttft p95 {report.ttft_p95_s * 1e3:.1f}ms | "
           f"tpot p95 {report.tpot_p95_s * 1e3:.1f}ms (real wall clock)")
     for t, what in fm.timeline:
@@ -298,6 +327,15 @@ def main() -> None:
                     help="persistent AOT artifact store directory: first run "
                          "cold-boots and persists serialized executables, "
                          "later runs IR-boot from them (docs/ir-containers.md)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="with --fleet: split into prefill/decode pools with "
+                         "KV page handoff (docs/disaggregation.md)")
+    ap.add_argument("--prefill-pool", type=int, nargs=2, default=(1, 2),
+                    metavar=("MIN", "MAX"),
+                    help="disagg prefill pool size bounds")
+    ap.add_argument("--decode-pool", type=int, nargs=2, default=(1, 2),
+                    metavar=("MIN", "MAX"),
+                    help="disagg decode pool size bounds")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.fleet:
@@ -312,7 +350,12 @@ def main() -> None:
                   spec_proposer=args.spec_proposer,
                   draft_arch=args.draft_arch, page_size=args.page_size,
                   kv_pages=args.kv_pages,
-                  artifact_store_dir=args.artifact_store)
+                  artifact_store_dir=args.artifact_store,
+                  disagg=args.disagg,
+                  prefill_min=args.prefill_pool[0],
+                  prefill_max=args.prefill_pool[1],
+                  decode_min=args.decode_pool[0],
+                  decode_max=args.decode_pool[1])
         return
     out = run(args.arch, requests=args.requests, max_new=args.max_new,
               slots=args.slots, max_len=args.max_len,

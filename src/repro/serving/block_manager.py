@@ -80,7 +80,8 @@ class BlockManager:
         pool = self.num_pages - 1
         self.watermark_pages = min(pool - 1, max(0, int(round(pool * watermark))))
         self.stats = {"allocs": 0, "frees": 0, "cow_copies": 0,
-                      "peak_in_use": 0, "alloc_failures": 0}
+                      "peak_in_use": 0, "alloc_failures": 0,
+                      "exports": 0, "installs": 0}
 
     # ------------------------------------------------------------------
     @property
@@ -128,6 +129,25 @@ class BlockManager:
             if self.ref[p] == 0:
                 self._free.append(p)
                 self.stats["frees"] += 1
+
+    def export_pages(self, pages) -> None:
+        """Pin ``pages`` for a cross-replica handoff: the transfer ticket
+        takes its OWN reference per page (incref), so the source slot can
+        retire — and even be preempted or reused — while the pages stay
+        resident until the handoff plane releases them (install confirmed
+        on the destination, or the ticket is dropped). Mirrors
+        :meth:`PagedPrefixCache.insert`'s donate-by-alias discipline."""
+        self.incref(pages)
+        self.stats["exports"] += len(list(pages))
+
+    def install_pages(self, n: int) -> list[int]:
+        """Allocate ``n`` fresh pages to receive handed-off KV content from
+        another replica's pool. Pure alloc with its own stat — the device
+        scatter that fills them is the engine's job. Callers gate on
+        :meth:`can_alloc` exactly like admission-time allocation."""
+        out = self.alloc(n)
+        self.stats["installs"] += n
+        return out
 
     def cow(self, page: int) -> int:
         """Copy-on-write bookkeeping: allocate a private copy target for

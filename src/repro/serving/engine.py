@@ -38,6 +38,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import functools
+import hashlib
 import logging
 import time
 from collections import deque
@@ -57,7 +58,7 @@ from repro.serving.prefix_cache import (PrefixCache, StateOps,
 from repro.serving.sampling import (SamplingConfig, SamplingParams,
                                     accept_speculative, sample, sample_batched)
 
-__all__ = ["Request", "RequestResult", "ServingEngine",
+__all__ = ["Request", "RequestResult", "HandoffPacket", "ServingEngine",
            "clear_program_caches"]
 
 logger = logging.getLogger(__name__)
@@ -93,6 +94,48 @@ class RequestResult:
         """Time per output token after the first (0 for 1-token results)."""
         n = len(self.tokens)
         return self.decode_s / (n - 1) if n > 1 else 0.0
+
+
+@dataclasses.dataclass
+class HandoffPacket:
+    """A finished prefill staged for transfer to a decode replica — the
+    unit of the disaggregated fleet's KV handoff plane.
+
+    ``pages`` are the SOURCE replica's physical page ids; the packet holds
+    one ticket reference per page (``BlockManager.export_pages``) so they
+    stay resident after the source slot is freed, until the handoff plane
+    confirms the install (or drops the packet) and decrefs them. ``payload``
+    is the device->host staged copy: one ``(max_blocks, ...)`` array per
+    state leaf in deterministic tree order, of which the first
+    ``pages_for(length, page_size)`` rows are real. ``shas`` hash each real
+    page's content across every leaf — the destination re-hashes before
+    scattering, so a corrupted transfer is rejected (and the request falls
+    back to a full local prefill) instead of silently decoding garbage.
+    """
+
+    request: Request
+    prompt: np.ndarray        # (S,) int32 full prompt (affinity + fallback)
+    length: int               # prompt tokens resident in the pages
+    first_token: int          # sampled from the prefill logits at the source
+    ttft_s: float             # source-side wall TTFT (virtual time is the
+                              # fleet's job)
+    pages: list[int]          # source physical page ids (ticket-referenced)
+    payload: list[np.ndarray]
+    shas: list[str]
+    nbytes: int               # real-page bytes (the transfer cost model input)
+
+
+def _page_shas(payload: list[np.ndarray], npages: int) -> list[str]:
+    """Per-page content hash over every state leaf's row j (leaves in
+    deterministic tree order) — the handoff plane's end-to-end integrity
+    check between a source gather and a destination scatter."""
+    out = []
+    for j in range(npages):
+        h = hashlib.sha256()
+        for leaf in payload:
+            h.update(np.ascontiguousarray(leaf[j]).tobytes())
+        out.append(h.hexdigest())
+    return out
 
 
 def _bucket(n: int, buckets: tuple[int, ...]) -> int:
@@ -467,6 +510,31 @@ class _PagedPrograms:
 
         self.copy_page = self.aot.wrap("copy_page", copy_page)
 
+        @jax.jit
+        def gather_pages(states, idx):
+            """Stage pages OUT for a cross-replica handoff: pull the rows
+            named by ``idx`` ((max_blocks,) int32, padded with the null
+            page) out of every layer's pools onto a leading page axis. The
+            host slices off the real rows and ships them."""
+            def f(ax, leaf):
+                return jnp.moveaxis(jnp.take(leaf, idx, axis=ax), ax, 0)
+            return jax.tree.map(f, page_axes, states)
+
+        self.gather_pages = self.aot.wrap("gather_pages", gather_pages)
+
+        @jax.jit
+        def scatter_pages(states, payload, idx):
+            """Install handed-off pages: write payload row j into physical
+            page ``idx[j]`` of every pool. Pad rows target the reserved
+            null page 0, which no armed slot's length-masked attention ever
+            reads."""
+            def f(ax, leaf, rows):
+                moved = jnp.moveaxis(leaf, ax, 0)
+                return jnp.moveaxis(moved.at[idx].set(rows), 0, ax)
+            return jax.tree.map(f, page_axes, states, payload)
+
+        self.scatter_pages = self.aot.wrap("scatter_pages", scatter_pages)
+
         self.sample_first = self.aot.wrap("sample_first",
                                           jax.jit(sample_batched))
 
@@ -538,9 +606,14 @@ _PAGED_PROGRAMS: dict[tuple, _PagedPrograms] = {}
 
 def _paged_programs_for(cfg, slots: int, max_len: int, page_size: int,
                         num_pages: int,
-                        binding: hooks.Binding | None) -> _PagedPrograms:
+                        binding: hooks.Binding | None,
+                        role: str = "both") -> _PagedPrograms:
     tiers = None if binding is None else binding.tier_fingerprint()
-    key = (cfg, slots, max_len, page_size, num_pages, tiers)
+    # role is in the key even though the programs are role-agnostic: a
+    # phase-specialized pool's bundle must contain exactly ITS programs
+    # (a decode replica's persisted artifact never carries — or recompiles —
+    # the prefill pool's wide chunk programs)
+    key = (cfg, slots, max_len, page_size, num_pages, tiers, role)
     prog = _PAGED_PROGRAMS.get(key)
     if prog is None:
         prog = _PAGED_PROGRAMS[key] = _PagedPrograms(
@@ -600,6 +673,7 @@ class ServingEngine:
         kv_pages: int | None = None,
         kv_watermark: float = 0.05,
         prefill_chunk_tokens: int | None = None,
+        role: str = "both",
         artifact_store=None,
     ):
         self.cfg = cfg
@@ -646,6 +720,27 @@ class ServingEngine:
                     self.sync_every)
                 self.sync_every = 1
             self.proposer = proposer or speculative.make_proposer(spec, cfg)
+
+        # ---- phase specialization (disaggregated fleets): a "prefill"
+        # engine runs chunked prefill ONLY — finished prompts leave as
+        # HandoffPackets on `handoff_out` instead of arming a decode slot.
+        # A "decode" engine is a full engine that ADDITIONALLY admits
+        # requests by installing already-computed KV pages
+        # (install_handoff), which is what lets the disagg fleet fall back
+        # to monolithic colocation on a decode replica when the prefill
+        # pool is empty or the handoff plane backlogs. ----
+        if role not in ("both", "prefill", "decode"):
+            raise ValueError(f"unknown engine role {role!r}")
+        if role != "both" and page_size is None:
+            raise ValueError(
+                "phase-specialized engine roles require paged KV "
+                "(the handoff plane moves pages, not slot strips)")
+        if role == "prefill" and spec is not None:
+            raise ValueError(
+                "a prefill-only engine never decodes; speculative decoding "
+                "belongs to the decode pool")
+        self.role = role
+        self.handoff_out: deque[HandoffPacket] = deque()
 
         # ---- paged KV (vLLM-style): a shared page pool + per-slot block
         # tables instead of per-slot contiguous max_len cache strips, so a
@@ -733,6 +828,10 @@ class ServingEngine:
             "preemptions": 0,          # requests evicted to recompute
             "admit_skips": 0,          # watermark skips that let later
                                        # requests admit out of order
+            # ---- disaggregation telemetry (role != "both") ----
+            "handoffs_out": 0,         # finished prefills exported as packets
+            "handoffs_in": 0,          # packets installed into decode slots
+            "handoff_sha_rejects": 0,  # packets refused on page-sha mismatch
             # ---- latency telemetry (real wall-clock; per-request values
             # live in RequestResult.ttft_s / decode_s) ----
             "ttft_sum_s": 0.0,
@@ -743,13 +842,16 @@ class ServingEngine:
         # replica boots after the first are warm (see _Programs) ----
         if self.paged:
             pprogs = _paged_programs_for(
-                cfg, slots, max_len, page_size, self.kv_pages, binding)
+                cfg, slots, max_len, page_size, self.kv_pages, binding,
+                role=self.role)
             self._paged_progs = pprogs
             self._fused_step_paged = pprogs.fused_step
             self._prefill_chunk_paged = pprogs.prefill_chunk
             self._arm = pprogs.arm
             self._release_ctrl = pprogs.release
             self._copy_page = pprogs.copy_page
+            self._gather_pages = pprogs.gather_pages
+            self._scatter_pages = pprogs.scatter_pages
             self._sample_first = pprogs.sample_first
             self._spec_step = (pprogs.spec_step_for(spec.k)
                                if spec is not None else None)
@@ -823,6 +925,7 @@ class ServingEngine:
                 "kv_pages": self.kv_pages,
                 "watermark_pages": self.block_manager.watermark_pages,
                 "page_bytes": self.page_bytes,
+                "role": self.role,
             })
 
         # latency bookkeeping (satellite telemetry: TTFT / decode wall)
@@ -837,6 +940,7 @@ class ServingEngine:
         self._aot_fields = {
             "family": f"serving:{cfg.name}",
             "kind": "paged" if self.paged else "slots",
+            "role": self.role,
             "cfg": cfg,
             "slots": slots,
             "max_len": max_len,
@@ -865,11 +969,19 @@ class ServingEngine:
     def _aot_registry(self) -> aot.AotRegistry:
         return (self._paged_progs if self.paged else self._progs).aot
 
-    def boot_path_preview(self) -> str:
+    def boot_path_preview(self, *, assume_fresh_process: bool = False) -> str:
         """Which rung of the boot ladder warmup() WOULD take right now,
         without compiling anything — what the fleet's boot-cost-aware
-        autoscaler consults before paying for a scale-up."""
-        if self._aot_registry().compiled_count() > 0:
+        autoscaler consults before paying for a scale-up.
+
+        ``assume_fresh_process`` skips the warm rung: the answer is then
+        "ir" or "cold" as if no program in this process had ever compiled —
+        what a virtual-time fleet uses to cost a boot whose warm/cold state
+        it models itself (the in-process bundle may be hot for reasons
+        outside the fleet's own history, e.g. another fleet in the same
+        benchmark process)."""
+        if (not assume_fresh_process
+                and self._aot_registry().compiled_count() > 0):
             return "warm"
         if (self.artifact_store is not None
                 and aot.AOT_AVAILABLE
@@ -1055,6 +1167,18 @@ class ServingEngine:
                   jnp.int32(-1))
         self._release_ctrl(self.ctrl, jnp.int32(0))
         self._copy_page(self.states, jnp.int32(0), jnp.int32(0))
+        if self.role == "prefill":
+            # handoff staging: the prefill pool's only extra program.
+            # Monolithic engines skip both handoff programs — a colocation
+            # fallback never runs them either (it prefills locally), so
+            # their bundles stay exactly as before this feature existed.
+            self._gather_pages(self.states,
+                               jnp.zeros((self.max_blocks,), jnp.int32))
+        elif self.role == "decode":
+            # install scatter only: a decode replica must never compile (or
+            # persist) the prefill pool's staging program
+            self._scatter_pages(self.states, self._payload_zeros(),
+                                jnp.zeros((self.max_blocks,), jnp.int32))
         jax.block_until_ready(self.states)
 
     # ------------------------------------------------------------------
@@ -1403,6 +1527,14 @@ class ServingEngine:
                 self._pages[s] = []
                 self.active[s] = None
                 continue
+            if self.role == "prefill":
+                # phase boundary: this engine's job ends at the first
+                # token. The request leaves as a handoff packet (pages
+                # ticket-referenced, slot freed) instead of arming a
+                # decode slot it does not have.
+                self.handoff_out.append(
+                    self._export_handoff(s, st, tok, ttft))
+                continue
             self.ctrl = self._arm(
                 self.ctrl, jnp.int32(s), jnp.int32(plen), jnp.int32(tok),
                 jnp.float32(req.sampling.temperature),
@@ -1420,6 +1552,137 @@ class ServingEngine:
             if self.spec is not None:
                 self._hist[s] = np.concatenate([st["prompt"], [np.int32(tok)]])
                 self.proposer.admit(s, st["prompt"])
+
+    # ------------------------------------------------------------------
+    # KV page handoff (disaggregated fleets): prefill engines stage
+    # finished prompts out; decode engines admit by installing the pages
+    # ------------------------------------------------------------------
+    def _payload_zeros(self):
+        """A zero handoff payload pytree ((max_blocks, ...) per state leaf)
+        — the scatter program's warmup argument."""
+        def z(ax, leaf):
+            shape = list(leaf.shape)
+            shape.pop(ax)
+            return jnp.zeros((self.max_blocks, *shape), leaf.dtype)
+        return jax.tree.map(z, self._paged_progs.page_axes, self.states)
+
+    def _export_handoff(self, slot: int, st: dict, tok: int,
+                        ttft: float) -> HandoffPacket:
+        """Stage slot ``slot``'s finished prefill for transfer: take a
+        ticket reference per page (the pages survive the slot being freed),
+        gather them device->host, hash each page, and free the slot. The
+        returned packet owns the request from here — the handoff plane
+        decrefs the ticket references after the destination installs (or
+        the packet is dropped)."""
+        req = self.active[slot]
+        plen = st["plen"]
+        pages = self._pages[slot][: pages_for(plen, self.page_size)]
+        self.block_manager.export_pages(pages)  # the ticket's own refs
+        idx = np.zeros((self.max_blocks,), np.int32)
+        idx[: len(pages)] = pages
+        gathered = self._gather_pages(self.states, jnp.asarray(idx))
+        payload = [np.asarray(jax.device_get(l))
+                   for l in jax.tree.leaves(gathered)]
+        self.stats["host_syncs_admit"] += 1
+        packet = HandoffPacket(
+            request=req, prompt=st["prompt"], length=plen,
+            first_token=tok, ttft_s=ttft, pages=list(pages),
+            payload=payload, shas=_page_shas(payload, len(pages)),
+            nbytes=len(pages) * self.page_bytes)
+        # the slot's own references drop now; only the ticket's remain
+        self.block_manager.decref(self._pages[slot])
+        self._pages[slot] = []
+        self.active[slot] = None
+        self.generated[slot] = []
+        self.stats["handoffs_out"] += 1
+        return packet
+
+    def release_handoff(self, packet: HandoffPacket) -> None:
+        """Drop the ticket references a packet holds on THIS engine's pages
+        — called by the handoff plane once the destination confirmed the
+        install, or when the packet is abandoned. This is the cross-replica
+        half of the refcount invariant: every export_pages incref is undone
+        by exactly one release."""
+        self.block_manager.decref(packet.pages)
+
+    def can_install(self, packet: HandoffPacket) -> bool:
+        """Whether a handoff could install right now: a free slot that is
+        not mid-prefill, plus pool room for the packet's pages under the
+        same watermark discipline as fresh admission (prefix-cache pages
+        are reclaimable; an idle engine ignores the watermark)."""
+        if self.role == "prefill" or not self.paged:
+            return False
+        if not self._free_slots():
+            return False
+        need = len(packet.pages)
+        bm = self.block_manager
+        if bm.can_alloc(need, respect_watermark=True):
+            return True
+        if self.prefix_cache is not None:
+            self.prefix_cache.reclaim(need + bm.watermark_pages)
+        idle = not self.queue and all(r is None for r in self.active)
+        return bm.can_alloc(need, respect_watermark=not idle)
+
+    def install_handoff(self, packet: HandoffPacket) -> bool:
+        """Admit a request by INSTALLING its already-computed KV pages: the
+        decode-pool admission path. Verifies the per-page shas against the
+        staged payload, allocates fresh physical pages
+        (``BlockManager.install_pages``), scatters the payload into them,
+        and arms the slot exactly as a local prefill completion would —
+        same first token, same absolute positions, so the greedy stream is
+        byte-identical to the monolithic engine's. Returns False (with no
+        state touched beyond best-effort cache reclaim) when verification
+        fails or there is no room; the caller re-queues or falls back."""
+        if _page_shas(packet.payload, len(packet.pages)) != packet.shas:
+            self.stats["handoff_sha_rejects"] += 1
+            return False
+        if not self.can_install(packet):
+            return False
+        req = packet.request
+        plen = packet.length
+        tok = int(packet.first_token)
+        npg = len(packet.pages)
+        slot = self._free_slots()[0]
+        ids = self.block_manager.install_pages(npg)
+        idx = np.zeros((self.max_blocks,), np.int32)
+        idx[:npg] = ids
+        payload = jax.tree.unflatten(
+            jax.tree.structure(self._paged_progs.page_axes),
+            [jnp.asarray(a) for a in packet.payload])
+        self.states = self._scatter_pages(self.states, payload,
+                                          jnp.asarray(idx))
+        self._pages[slot] = list(ids)
+        self.active[slot] = req
+        self._seen_ids.add(req.request_id)
+        self._seq += 1
+        self._admit_seq[slot] = self._seq
+        now = time.perf_counter()
+        self._slot_submit[slot] = now
+        self.ctrl = self._arm(
+            self.ctrl, jnp.int32(slot), jnp.int32(plen), jnp.int32(tok),
+            jnp.float32(req.sampling.temperature),
+            jnp.int32(req.sampling.top_k),
+            jnp.int32(req.max_new_tokens),
+            jnp.int32(-1 if req.eos_id is None else req.eos_id))
+        self.generated[slot] = [tok]
+        self._slot_ttft[slot] = packet.ttft_s
+        self._admit_s[slot] = now
+        self._len_host[slot] = plen
+        self._last_host[slot] = tok
+        self._bt_host[slot, :] = 0
+        self._bt_host[slot, :npg] = ids
+        self._bt_dirty = True
+        if self.prefix_cache is not None:
+            # the handed-off prompt seeds THIS replica's radix tree, so
+            # session followers and shared-prefix siblings routed here by
+            # affinity hit locally instead of re-prefilling
+            self.prefix_cache.insert(packet.prompt, ids)
+        if self.spec is not None:
+            self._hist[slot] = np.concatenate(
+                [packet.prompt, [np.int32(tok)]])
+            self.proposer.admit(slot, packet.prompt)
+        self.stats["handoffs_in"] += 1
+        return True
 
     # ------------------------------------------------------------------
     def _bt_device(self) -> jax.Array:
@@ -1648,6 +1911,11 @@ class ServingEngine:
             # one chunk of every mid-prefill prompt, INTERLEAVED with the
             # decode step below — chunked prefill never stalls decodes
             self._prefill_step_paged()
+            if self.role == "prefill":
+                # prefill-only engines never decode: finished prompts left
+                # as handoff packets above, mid-prefill rows continue next
+                # step
+                return sum(r is not None for r in self.active)
         if self.spec is not None:
             self._step_spec()
         elif self.paged:

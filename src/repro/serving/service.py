@@ -38,6 +38,7 @@ def serving_container(
     kv_pages: int | None = None,
     kv_watermark: float = 0.05,
     prefill_chunk_tokens: int | None = None,
+    role: str = "both",
     name: str | None = None,
     artifact_store=None,
 ) -> xcontainer.XContainer:
@@ -86,6 +87,7 @@ def serving_container(
             page_size=page_size, kv_pages=kv_pages,
             kv_watermark=kv_watermark,
             prefill_chunk_tokens=prefill_chunk_tokens,
+            role=role,
             artifact_store=artifact_store,
             binding=deployment.binding, manifest=deployment.manifest())
 
@@ -94,8 +96,9 @@ def serving_container(
     # geometry (incl. paged vs contiguous KV) must never alias each other's
     # compiled decode artifact
     paged_tag = f"-p{page_size}x{kv_pages or 0}" if page_size else ""
+    role_tag = f"-{role}" if role != "both" else ""
     return xcontainer.XContainer(
-        name=name or f"serve-{cfg.name}-b{slots}x{max_len}{paged_tag}",
+        name=name or f"serve-{cfg.name}-b{slots}x{max_len}{paged_tag}{role_tag}",
         entrypoints={"decode": (decode_fn, make_args)},
         meta={
             "engine_factory": engine_factory,

@@ -1,0 +1,96 @@
+"""ArtifactStore.sync_from: cross-host distribution of the compiled-program
+corpus (manifest-diff, sha-verified, skip-corrupt, atomic per key)."""
+import glob
+import os
+
+from repro.checkpoint.store import ArtifactStore
+
+
+def _seed(store, key, payload=b"x" * 64, meta=None):
+    store.put(key, {"prog.bin": payload, "aux.bin": payload[::-1]},
+              meta=meta or {"programs": ["prog"]})
+
+
+def test_sync_copies_everything_into_empty_store(tmp_path):
+    src = ArtifactStore(str(tmp_path / "src"))
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    _seed(src, "bundle-a", b"alpha" * 10)
+    _seed(src, "bundle-b", b"beta" * 10, meta={"programs": ["p", "q"]})
+    out = dst.sync_from(src)
+    assert out["copied"] == 2 and out["skipped"] == 0 and out["corrupt"] == 0
+    assert sorted(out["keys"]) == sorted(dst.keys()) == sorted(src.keys())
+    got = dst.get("bundle-b")
+    assert got is not None
+    blobs, meta = got
+    assert blobs["prog.bin"] == b"beta" * 10
+    assert meta == {"programs": ["p", "q"]}
+
+
+def test_sync_accepts_a_bare_directory_path(tmp_path):
+    src = ArtifactStore(str(tmp_path / "src"))
+    _seed(src, "bundle-a")
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    out = dst.sync_from(str(tmp_path / "src"))
+    assert out["copied"] == 1
+    assert dst.contains("bundle-a")
+
+
+def test_sync_skips_existing_keys_unless_overwrite(tmp_path):
+    src = ArtifactStore(str(tmp_path / "src"))
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    _seed(src, "bundle-a", b"new-version")
+    _seed(src, "bundle-b", b"fresh")
+    _seed(dst, "bundle-a", b"local-version")
+    out = dst.sync_from(src)
+    assert out["copied"] == 1 and out["skipped"] == 1
+    assert out["keys"] == ["bundle-b"]
+    # the local artifact was NOT clobbered
+    assert dst.get("bundle-a")[0]["prog.bin"] == b"local-version"
+    out2 = dst.sync_from(src, overwrite=True)
+    assert out2["copied"] == 2 and out2["skipped"] == 0
+    assert dst.get("bundle-a")[0]["prog.bin"] == b"new-version"
+
+
+def test_sync_skips_corrupt_source_artifacts(tmp_path):
+    src = ArtifactStore(str(tmp_path / "src"))
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    _seed(src, "bundle-good", b"fine")
+    _seed(src, "bundle-bad", b"doomed")
+    # tamper one blob of the bad bundle on disk: sha check must catch it
+    (victim,) = [p for p in glob.glob(str(tmp_path / "src" / "*" / "blobs" /
+                                          "prog*.bin"))
+                 if "bad" in p]
+    with open(victim, "wb") as f:
+        f.write(b"garbage")
+    misses_before = src.stats["corrupt"]
+    out = dst.sync_from(src)
+    assert out["copied"] == 1 and out["corrupt"] == 1
+    assert out["keys"] == ["bundle-good"]
+    assert dst.contains("bundle-good") and not dst.contains("bundle-bad")
+    # the rejection was recorded on the SOURCE store, get-style
+    assert src.stats["corrupt"] == misses_before + 1
+
+
+def test_sync_truncated_blob_is_corrupt_not_fatal(tmp_path):
+    src = ArtifactStore(str(tmp_path / "src"))
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    _seed(src, "bundle-a", b"z" * 128)
+    (blob,) = glob.glob(str(tmp_path / "src" / "*" / "blobs" / "prog*.bin"))
+    with open(blob, "rb") as f:
+        data = f.read()
+    with open(blob, "wb") as f:
+        f.write(data[: len(data) // 2])
+    out = dst.sync_from(src)
+    assert out == {"copied": 0, "skipped": 0, "corrupt": 1, "keys": []}
+    assert dst.keys() == []
+
+
+def test_sync_lands_atomically_committed(tmp_path):
+    """Synced artifacts go through put(): COMMIT present, no temp debris."""
+    src = ArtifactStore(str(tmp_path / "src"))
+    dst = ArtifactStore(str(tmp_path / "dst"))
+    _seed(src, "bundle-a")
+    dst.sync_from(src)
+    (d,) = [p for p in os.listdir(dst.root) if not p.startswith(".")]
+    assert os.path.exists(os.path.join(dst.root, d, "COMMIT"))
+    assert not [p for p in os.listdir(dst.root) if p.startswith(".tmp_")]

@@ -194,3 +194,107 @@ def test_cache_hold_accounting(ops):
     cache.reclaim(POOL - 1)
     assert bm.in_use == 0
     assert (bm.ref == 0).all()
+
+
+# ----------------------------------------------------------------------
+# cross-replica KV handoff (disaggregated fleet): export pins on the
+# source pool, install allocs on the destination pool, release decrefs —
+# the two pools must balance independently under any interleaving.
+# ----------------------------------------------------------------------
+
+@st.composite
+def _handoff_trace(draw):
+    """Random interleaving of the disagg handoff lifecycle across TWO block
+    managers: admit (src prefill alloc), export (ticket pin + src slot
+    retire), install (dst alloc + ticket release), drop (sha-reject: ticket
+    release, nothing installed), retire (dst decode slot retire)."""
+    n_events = draw(st.integers(5, 50))
+    events = [draw(st.sampled_from(["admit", "export", "install", "drop",
+                                    "retire"])) for _ in range(n_events)]
+    lengths = draw(st.lists(st.integers(1, 24), min_size=n_events,
+                            max_size=n_events))
+    picks = draw(st.lists(st.integers(0, 10 ** 6), min_size=n_events,
+                          max_size=n_events))
+    return list(zip(events, lengths, picks))
+
+
+def _run_handoff_trace(trace):
+    """Replay the protocol the engines + KVHandoff plane implement:
+
+      src.alloc -> src.export_pages (pin) -> src slot decref (retire)
+        -> [in flight] -> dst.install_pages (fresh alloc)
+        -> src.decref(ticket pages)   # release on install OR drop
+
+    Returns (src, dst, in_flight, src_live, dst_live)."""
+    src, dst = BlockManager(POOL, PAGE), BlockManager(POOL, PAGE)
+    src_live: dict[int, list[int]] = {}   # prefill slots on the source
+    dst_live: dict[int, list[int]] = {}   # decode slots on the destination
+    in_flight: list[list[int]] = []       # ticket-pinned source page lists
+    next_id = 0
+    for op, length, pick in trace:
+        if op == "admit":
+            need = pages_for(length, PAGE)
+            if not src.can_alloc(need):
+                continue
+            src_live[next_id] = src.alloc(need)
+            next_id += 1
+        elif op == "export" and src_live:
+            rid = sorted(src_live)[pick % len(src_live)]
+            pages = src_live.pop(rid)
+            src.export_pages(pages)   # the ticket's own reference
+            src.decref(pages)         # the slot's reference: prefill is done
+            in_flight.append(pages)
+        elif op == "install" and in_flight:
+            pages = in_flight[pick % len(in_flight)]
+            if not dst.can_alloc(len(pages)):
+                continue              # KVHandoff requeues; pin stays live
+            in_flight.remove(pages)
+            dst_live[next_id] = dst.install_pages(len(pages))
+            next_id += 1
+            src.decref(pages)         # install confirmed: release the ticket
+        elif op == "drop" and in_flight:
+            pages = in_flight.pop(pick % len(in_flight))
+            src.decref(pages)         # sha reject: release, install nothing
+        elif op == "retire" and dst_live:
+            rid = sorted(dst_live)[pick % len(dst_live)]
+            dst.decref(dst_live.pop(rid))
+    return src, dst, in_flight, src_live, dst_live
+
+
+@settings(max_examples=200, deadline=None)
+@given(_handoff_trace())
+def test_handoff_pools_balance_at_retire(trace):
+    """Drain tickets and retire everything: BOTH pools return to whole —
+    no page leaked by an export whose install never happened, no double
+    free from release-after-install."""
+    src, dst, in_flight, src_live, dst_live = _run_handoff_trace(trace)
+    for pages in in_flight:
+        src.decref(pages)
+    for rid in sorted(src_live):
+        src.decref(src_live.pop(rid))
+    for rid in sorted(dst_live):
+        dst.decref(dst_live.pop(rid))
+    for bm in (src, dst):
+        assert bm.in_use == 0
+        assert bm.free_pages == POOL - 1
+        assert (bm.ref == 0).all()
+        assert bm.stats["allocs"] == bm.stats["frees"]
+    assert src.stats["exports"] >= dst.stats["installs"]
+
+
+@settings(max_examples=200, deadline=None)
+@given(_handoff_trace())
+def test_handoff_ticket_pins_keep_pages_resident(trace):
+    """At any stop point every in-flight ticket's pages are still referenced
+    on the source (the pin outlives the retired prefill slot), and the
+    destination's refcounts exactly mirror its live decode slots."""
+    src, dst, in_flight, src_live, dst_live = _run_handoff_trace(trace)
+    for pages in in_flight:
+        for p in pages:
+            assert src.ref[p] > 0, "ticket pin lost before release"
+    expect = np.zeros(POOL, np.int32)
+    for pages in dst_live.values():
+        for p in pages:
+            expect[p] += 1
+    assert (dst.ref == expect).all()
+    assert dst.in_use + dst.free_pages == POOL - 1

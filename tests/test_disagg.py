@@ -1,0 +1,312 @@
+"""Disaggregated prefill/decode fleet: KV handoff plane, phase-aware
+routing, per-pool autoscaler state isolation, sha-reject recompute, and the
+headline byte-parity suite (monolithic vs disagg vs disagg-with-fallback)
+across plain / speculative / prefix-cache-hit serving."""
+import functools
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.fleet import (SLO, Autoscaler, DisaggConfig, DisaggFleetManager,
+                         FleetConfig, FleetManager, Router, bursty_trace,
+                         materialize)
+from repro.models import transformer
+
+
+@functools.lru_cache(maxsize=1)
+def _model():
+    cfg = configs.get_config("qwen2-0.5b-smoke")
+    params = transformer.init_model(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _requests(seed=0, shared_prefix=0, n_target=12):
+    cfg, _ = _model()
+    trace = bursty_trace(
+        seed=seed, duration_s=10.0, base_rate=0.4, burst_rate=3.0,
+        bursts=((2.0, 6.0),), prompt_median=8, prompt_lo=4, prompt_hi=24,
+        max_new_lo=3, max_new_hi=7, burst_prompt_median=16)[:n_target]
+    return materialize(trace, vocab_size=cfg.vocab_size, seed=seed + 1,
+                       shared_prefix_len=shared_prefix, max_prompt_len=32)
+
+
+def _fleet_cfg(spec_k=0, min_replicas=2, max_replicas=2):
+    return FleetConfig(
+        min_replicas=min_replicas, max_replicas=max_replicas, slots=2,
+        max_len=48, prompt_buckets=(8, 16, 32), tick_s=0.05, page_size=8,
+        prefix_cache_mb=1.0, spec_k=spec_k)
+
+
+def _run_mono(reqs, spec_k=0):
+    cfg, params = _model()
+    fm = FleetManager.build(cfg, params, chips=8, fleet=_fleet_cfg(spec_k))
+    rep = fm.run_trace(reqs)
+    return fm, rep
+
+
+def _run_disagg(reqs, spec_k=0, disagg=None):
+    cfg, params = _model()
+    fm = DisaggFleetManager.build(
+        cfg, params, chips=8, fleet=_fleet_cfg(spec_k),
+        disagg=disagg or DisaggConfig(prefill_min=1, prefill_max=1,
+                                      decode_min=1, decode_max=1))
+    rep = fm.run_trace(reqs)
+    return fm, rep
+
+
+# ----------------------------------------------------------------------
+# KVHandoff link model (pure virtual time, no engines)
+# ----------------------------------------------------------------------
+
+class _Pkt:
+    def __init__(self, nbytes):
+        self.nbytes = nbytes
+
+
+def test_handoff_link_serializes_transfers():
+    from repro.fleet.disagg import KVHandoff
+    h = KVHandoff(bandwidth_bytes_per_s=1000.0, latency_s=0.5)
+    t1 = h.submit(0.0, _Pkt(1000), src=None)   # 1s xfer + 0.5 latency
+    t2 = h.submit(0.0, _Pkt(2000), src=None)   # queues behind t1
+    assert t1.ready_s == pytest.approx(1.5)
+    assert t2.ready_s == pytest.approx(1.5 + 2.5)
+    assert h.backlog == 2
+    assert h.take_ready(1.0) == []
+    assert h.take_ready(2.0) == [t1]
+    assert h.backlog == 1
+    assert h.take_ready(10.0) == [t2]
+    assert h.backlog == 0
+    # an uninstallable ticket requeues and comes back next take
+    h.requeue([t2])
+    assert h.backlog == 1 and h.stats["retries"] == 1
+    assert h.take_ready(10.0) == [t2]
+    assert h.stats["submitted"] == 2 and h.stats["bytes"] == 3000
+
+
+# ----------------------------------------------------------------------
+# per-pool autoscaler state (satellite bugfix regression)
+# ----------------------------------------------------------------------
+
+def test_autoscaler_cooldowns_are_per_pool():
+    """A scale-up in one pool must NOT consume the other pool's up-cooldown
+    (the global-state bug this PR fixes)."""
+    a = Autoscaler(SLO(queue_high_per_slot=1.0, up_cooldown_s=5.0), 1, 8)
+    kw = dict(serving=1, booting=0, queued=9, busy_slots=2, total_slots=2)
+    assert a.decide(0.0, pool="prefill", **kw) == "up"
+    # same instant, other pool under the same pressure: must still fire
+    assert a.decide(0.0, pool="decode", **kw) == "up"
+    # each pool's OWN cooldown still suppresses its next scale-up
+    assert a.decide(1.0, pool="prefill", **kw) is None
+    assert a.decide(1.0, pool="decode", **kw) is None
+    assert a.decide(6.0, pool="prefill", **kw) == "up"
+
+
+def test_autoscaler_latency_windows_are_per_pool():
+    """TTFT samples recorded into the prefill pool must not trip the decode
+    pool's p95 trigger (and vice versa)."""
+    slo = SLO(p95_target_s=1.0, queue_high_per_slot=100.0,
+              min_window_samples=2, window_s=60.0)
+    a = Autoscaler(slo, 1, 8)
+    for t in (0.1, 0.2, 0.3, 0.4):
+        a.record_completion(t, 5.0, pool="prefill")  # badly violating
+        a.record_completion(t, 0.01, pool="decode")  # comfortably inside
+    kw = dict(serving=1, booting=0, queued=0, busy_slots=2, total_slots=2)
+    assert a.decide(1.0, pool="prefill", slo=slo, **kw) == "up"
+    assert a.decide(1.0, pool="decode", slo=slo, **kw) is None
+    assert a.p95(1.0, pool="decode", slo=slo) == pytest.approx(0.01)
+
+
+def test_autoscaler_default_pool_unchanged():
+    """Single-pool callers (no pool kwarg) keep the exact legacy behavior."""
+    a = Autoscaler(SLO(queue_high_per_slot=1.0, up_cooldown_s=1.0), 1, 4)
+    assert a.decide(0.0, serving=1, booting=0, queued=5, busy_slots=2,
+                    total_slots=2) == "up"
+    assert a.decide(0.5, serving=1, booting=1, queued=9, busy_slots=2,
+                    total_slots=4) is None  # cooldown
+    assert a.decide(1.5, serving=1, booting=1, queued=9, busy_slots=2,
+                    total_slots=4) == "up"
+
+
+def test_autoscaler_per_pool_min_max_overrides():
+    a = Autoscaler(SLO(queue_high_per_slot=1.0), 1, 10)
+    # pool capped at max_replicas=2: no up even under pressure
+    assert a.decide(0.0, serving=2, booting=0, queued=50, busy_slots=4,
+                    total_slots=4, pool="prefill", max_replicas=2) is None
+    # pool floor min_replicas=2: no down at the floor
+    slo = SLO(idle_drain_s=0.0, down_cooldown_s=0.0)
+    assert a.decide(1.0, serving=2, booting=0, queued=0, busy_slots=0,
+                    total_slots=4, pool="decode", slo=slo,
+                    min_replicas=2) is None
+    assert a.decide(2.0, serving=3, booting=0, queued=0, busy_slots=0,
+                    total_slots=6, pool="decode", slo=slo,
+                    min_replicas=2) == "down"
+
+
+# ----------------------------------------------------------------------
+# handoff routing layer
+# ----------------------------------------------------------------------
+
+class _FakeBM:
+    def __init__(self, free):
+        self.free_pages = free
+
+
+class _FakeEngine:
+    def __init__(self, free):
+        self.block_manager = _FakeBM(free)
+
+
+class _FakeDecodeReplica:
+    def __init__(self, rid, free=10, accepting=True, cached=0):
+        self.replica_id = rid
+        self.engine = _FakeEngine(free)
+        self.accepting = accepting
+        self._cached = cached
+
+    def cached_prefix_len(self, prompt):
+        return self._cached
+
+
+def test_route_handoff_prefers_session_then_prefix_then_free_pages():
+    r = Router()
+    prompt = np.zeros(8, np.int32)
+    reps = [_FakeDecodeReplica(0, free=2), _FakeDecodeReplica(1, free=9)]
+    # no pin, no prefix: most free pages wins
+    first = r.route_handoff("s1", prompt, reps)
+    assert first.replica_id == 1
+    assert r.stats["handoff_free_pages"] == 1
+    # the install pinned the session: same session comes back
+    again = r.route_handoff("s1", prompt, reps)
+    assert again.replica_id == 1 and r.stats["handoff_session_hits"] == 1
+    # a fresh session with a prefix-advertising replica prefers it
+    reps[0]._cached = 6
+    assert r.route_handoff("s2", prompt, reps).replica_id == 0
+    assert r.stats["handoff_prefix_hits"] == 1
+    # nothing accepting -> None (caller colocates)
+    assert r.route_handoff("s3", prompt,
+                           [_FakeDecodeReplica(0, accepting=False)]) is None
+
+
+# ----------------------------------------------------------------------
+# byte-parity suite: (mono, disagg, disagg-with-fallback) x
+#                    (plain, spec, prefix-hit)
+# ----------------------------------------------------------------------
+
+def _assert_parity(mono_fm, d_fm, reqs):
+    sm, sd = mono_fm.token_streams(), d_fm.token_streams()
+    assert set(sm) == set(sd) == {r.request_id for r in reqs}
+    for rid in sm:
+        assert sm[rid] == sd[rid], f"request {rid} diverged"
+
+
+@pytest.mark.parametrize("spec_k,shared_prefix",
+                         [(0, 0), (2, 0), (0, 12)],
+                         ids=["plain", "spec", "prefix-hit"])
+def test_disagg_byte_parity(spec_k, shared_prefix):
+    reqs = _requests(seed=3, shared_prefix=shared_prefix)
+    mono_fm, mono_rep = _run_mono(reqs, spec_k=spec_k)
+    d_fm, d_rep = _run_disagg(reqs, spec_k=spec_k)
+    assert mono_rep.served == d_rep.served == len(reqs)
+    assert d_rep.disagg["handoff"]["installed"] >= 1
+    assert d_rep.disagg["handoff"]["sha_rejected"] == 0
+    assert d_rep.reconciled and mono_rep.reconciled
+    _assert_parity(mono_fm, d_fm, reqs)
+    # data-plane balance: every export was installed (or rejected) and no
+    # packet is still staged on a prefill engine
+    exported = sum(r.engine.stats["handoffs_out"] for r in d_fm.replicas)
+    h = d_rep.disagg["handoff"]
+    assert exported == h["installed"] + h["sha_rejected"]
+    for r in d_fm.replicas:
+        assert not r.engine.handoff_out, \
+            f"replica {r.replica_id} still holds staged packets"
+    # phase metering split: prefill FLOPs landed on prefill-pool leases too
+    assert d_rep.phase_metering["prefill_tokens"] > 0
+    if spec_k:
+        assert d_rep.phase_metering["spec_positions"] > 0
+    else:
+        assert d_rep.phase_metering["decode_steps"] > 0
+
+
+@pytest.mark.parametrize("spec_k,shared_prefix",
+                         [(0, 0), (2, 0), (0, 12)],
+                         ids=["plain", "spec", "prefix-hit"])
+def test_disagg_backlog_fallback_byte_parity(spec_k, shared_prefix):
+    """A starved handoff link (tiny bandwidth, watermark 0) forces submit-
+    time colocation on the decode pool — streams must still be identical."""
+    reqs = _requests(seed=5, shared_prefix=shared_prefix)
+    mono_fm, mono_rep = _run_mono(reqs, spec_k=spec_k)
+    d_fm, d_rep = _run_disagg(
+        reqs, spec_k=spec_k,
+        disagg=DisaggConfig(prefill_min=1, prefill_max=1, decode_min=1,
+                            decode_max=1, handoff_backlog_watermark=0,
+                            handoff_bandwidth_bytes_per_s=2e5,
+                            handoff_latency_s=0.1))
+    assert mono_rep.served == d_rep.served == len(reqs)
+    assert d_rep.disagg["fallback_submits"] >= 1, \
+        "starved link never triggered colocation fallback"
+    _assert_parity(mono_fm, d_fm, reqs)
+
+
+def test_disagg_sha_reject_recomputes_monolithically():
+    """A corrupted transfer is detected destination-side (page shas), the
+    ticket dropped, the source pin released, and the request recomputed on
+    the decode pool — still byte-identical to the monolithic fleet."""
+    reqs = _requests(seed=7)
+    cfg, params = _model()
+    d_fm = DisaggFleetManager.build(
+        cfg, params, chips=8, fleet=_fleet_cfg(),
+        disagg=DisaggConfig(prefill_min=1, prefill_max=1,
+                            decode_min=1, decode_max=1))
+    orig, hit = d_fm.handoff.submit, []
+
+    def corrupting_submit(now, pkt, src):
+        if not hit:
+            hit.append(True)
+            leaf = np.array(pkt.payload[0])        # device_get is read-only
+            leaf.view(np.uint8).reshape(-1)[0] ^= 0xFF  # flip a bit in page 0
+            pkt.payload[0] = leaf
+        return orig(now, pkt, src)
+
+    d_fm.handoff.submit = corrupting_submit
+    d_rep = d_fm.run_trace(reqs)
+    assert d_rep.served == len(reqs)
+    assert d_rep.disagg["handoff"]["sha_rejected"] == 1
+    assert d_rep.disagg["handoff"]["recomputed"] == 1
+    mono_fm, _ = _run_mono(reqs)
+    _assert_parity(mono_fm, d_fm, reqs)
+    for r in d_fm.replicas:
+        assert not r.engine.handoff_out
+
+
+# ----------------------------------------------------------------------
+# persist-on-scale-to-min (satellite: IR-boot follow-on)
+# ----------------------------------------------------------------------
+
+def test_fleet_persists_programs_on_drain(tmp_path):
+    from repro.checkpoint.store import ArtifactStore
+    from repro.core import aot
+    if not aot.AOT_AVAILABLE:
+        pytest.skip("jax AOT serialization unavailable")
+    cfg, params = _model()
+    store = ArtifactStore(str(tmp_path / "artifacts"))
+    fleet = FleetConfig(
+        min_replicas=1, max_replicas=2, slots=2, max_len=48,
+        prompt_buckets=(8, 16, 32), tick_s=0.05, page_size=8,
+        prefix_cache_mb=1.0, artifact_store=store,
+        settle_s=30.0)
+    fm = FleetManager.build(cfg, params, chips=8, fleet=fleet,
+                            slo=SLO(queue_high_per_slot=0.5,
+                                    up_cooldown_s=0.2, down_cooldown_s=0.5,
+                                    idle_drain_s=0.5))
+    reqs = _requests(seed=11)
+    rep = fm.run_trace(reqs)
+    assert rep.served == len(reqs)
+    assert rep.scale_downs >= 1, "fleet never scaled back to min"
+    persists = [m for _, m in fm.timeline if m.startswith("persist:")]
+    assert persists, "scale-to-min drain did not persist programs"
+    assert store.keys(), "persist wrote nothing to the artifact store"
+    key = store.keys()[0]
+    meta = store.meta(key)
+    assert meta and meta.get("programs"), "persisted bundle lists no programs"

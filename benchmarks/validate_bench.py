@@ -29,6 +29,7 @@ Two modes (both pure stdlib — no jsonschema dependency in the image):
         * cold/IR boot seconds      — advisory (wall clock, as above)
         * disagg TTFT p99 ratio     — virtual-time ratio (deterministic), 20%
         * disagg chip-seconds ratio — virtual-time ratio (deterministic), 20%
+        * sharded per-chip ratio    — billed-FLOPs ratio (deterministic), 20%
 
     PYTHONPATH=src python benchmarks/validate_bench.py [--candidate DIR]
 """
@@ -132,6 +133,23 @@ _SCHEMAS = {
         ("scenarios.disagg.reconciled", bool, "ledger reconciles",
          lambda v: v is True),
     ],
+    "BENCH_sharding.json": [
+        ("benchmark", str, "== sharded_serving",
+         lambda v: v == "sharded_serving"),
+        ("capacity.fits_1chip", bool,
+         "False (replica exceeds one chip's modeled HBM)",
+         lambda v: v is False),
+        ("capacity.fits_tp2", bool, "TP=2 per-chip footprint fits",
+         lambda v: v is True),
+        ("capacity.replica_chips", int, "== 2 (multi-chip lease)",
+         lambda v: v == 2),
+        ("capacity.fleet_served", int, "> 0", lambda v: v > 0),
+        ("token_parity", bool, "greedy streams byte-identical",
+         lambda v: v is True),
+        ("throughput.per_chip_throughput_ratio", (int, float),
+         ">= 0.8 (<= 20% per-chip overhead at TP=2)", lambda v: v >= 0.8),
+        ("throughput.modes", list, ">= 2 modes", lambda v: len(v) >= 2),
+    ],
     "BENCH_boot.json": [
         ("benchmark", str, "== boot_latency", lambda v: v == "boot_latency"),
         ("arch", str, "non-empty", bool),
@@ -179,6 +197,8 @@ _HEADLINES = [
      "headline.ttft_p99_ratio", "higher", 0.20),
     ("disagg chip-seconds ratio", "BENCH_disagg.json",
      "headline.chip_seconds_ratio", "lower", 0.20),
+    ("sharded per-chip throughput ratio", "BENCH_sharding.json",
+     "throughput.per_chip_throughput_ratio", "higher", 0.20),
 ]
 
 

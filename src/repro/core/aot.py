@@ -117,9 +117,17 @@ def explain_mismatch(store, fields: Mapping[str, Any]) -> list[str]:
             continue
         if have.get("family") != want.get("family"):
             continue
+        # geometry/environment fields first: with >4 drifted fields the
+        # truncation below must never hide "this executable was compiled
+        # for a different mesh" behind cosmetic knob diffs — a wrong-mesh
+        # install is the one the operator has to see
+        front = ("mesh", "tiers", "jax", "jaxlib", "platform")
+        keys = sorted(set(have) | set(want),
+                      key=lambda k: (front.index(k) if k in front
+                                     else len(front), k))
         diffs = [
             f"{k}: stored {have.get(k)} != current {want.get(k)}"
-            for k in sorted(set(have) | set(want))
+            for k in keys
             if have.get(k) != want.get(k)
         ]
         if diffs:

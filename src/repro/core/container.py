@@ -68,6 +68,16 @@ class Deployment:
             "container": self.container.name,
             "profile": self.profile.name,
             "chip": self.profile.chip,
+            "chips": self.profile.chips,
+            # resolved mesh geometry + sharding rule set, next to the kernel
+            # tiers: the specialization record answers "what grid does this
+            # deployment span and how do logical axes land on it" the same
+            # way it answers "which tier serves each API"
+            "mesh": {
+                "shape": tuple(int(s) for s in self.mesh.devices.shape),
+                "axes": tuple(self.mesh.axis_names),
+            },
+            "sharding_rules": shd.rule_summary(self.rules),
             "apis": m["apis"],
             "entrypoint_boot": {
                 ep: {"boot": art.boot, "cache_hit": art.cache_hit,

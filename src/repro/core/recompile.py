@@ -27,6 +27,7 @@ This module packages that split as the XaaS deployment pipeline:
 from __future__ import annotations
 
 import dataclasses
+import functools
 import hashlib
 import logging
 import time
@@ -154,6 +155,50 @@ CPU_INTERPRET = SystemProfile(
     mesh_axes=("data",),
     providers=("pallas-interpret", "xla-blocked"),
 )
+
+
+@functools.lru_cache(maxsize=None)
+def host_mesh_profile(
+    mesh_shape: tuple[int, ...],
+    mesh_axes: tuple[str, ...] | None = None,
+    *,
+    hbm_bytes: int = 8 * 2**30,
+) -> SystemProfile:
+    """A multi-chip host-platform (CPU) profile: N forced host devices
+    standing in for an N-chip accelerator slice, so sharded serving replicas
+    can be leased, deployed, metered, and parity-checked without TPUs
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set
+    before jax initializes for ``build_mesh`` to find the devices).
+
+    Leases acquired against this profile request ``chips = prod(mesh_shape)``
+    — the replica-width unit the fleet's width-vs-count policy trades in.
+    Per-chip roofline terms (peak_flops, hbm_bytes, hbm_bw) match
+    PORTABLE_CPU so modeled step times stay comparable across widths. The
+    lru_cache keeps the instance (and thus ``fingerprint()`` identity used
+    by warm-deployment caches) stable for a given geometry."""
+    if mesh_axes is None:
+        mesh_axes = ("data", "model")[-len(mesh_shape):] if len(
+            mesh_shape) <= 2 else ("pod", "data", "model")[-len(mesh_shape):]
+    if len(mesh_axes) != len(mesh_shape):
+        raise ValueError(
+            f"mesh_axes {mesh_axes} does not match mesh_shape {mesh_shape}")
+    chips = 1
+    for d in mesh_shape:
+        chips *= int(d)
+    geom = "x".join(str(int(d)) for d in mesh_shape)
+    return SystemProfile(
+        name=f"cpu-mesh-{geom}",
+        chip="cpu",
+        chips=chips,
+        peak_flops=1e11,
+        hbm_bytes=hbm_bytes,
+        hbm_bw=50e9,
+        ici_bw=1e9,
+        ici_links=1,
+        mesh_shape=tuple(int(d) for d in mesh_shape),
+        mesh_axes=tuple(mesh_axes),
+        providers=(),
+    )
 
 
 # ---------------------------------------------------------------------------

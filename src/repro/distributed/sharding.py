@@ -85,6 +85,34 @@ def current_mesh() -> jax.sharding.Mesh | None:
     return _STATE.mesh
 
 
+def mesh_geometry(
+    mesh: jax.sharding.Mesh | None,
+) -> tuple[tuple[int, ...], tuple[str, ...]] | None:
+    """(device-grid shape, axis names) of a mesh — the geometry fingerprint
+    that keys serving program bundles and persisted AOT artifacts. None is
+    the unsharded single-device floor, so adding a mesh (or changing its
+    shape) re-keys every compiled program while the floor keys stay put."""
+    if mesh is None:
+        return None
+    return (tuple(int(s) for s in mesh.devices.shape),
+            tuple(str(a) for a in mesh.axis_names))
+
+
+def rule_summary(rules: Rules | None) -> dict[str, str | None]:
+    """JSON-able view of a rule set (tuples joined with '+') for manifests
+    and the launch CLI — logical axis -> mesh axis, sorted by logical name."""
+    if rules is None:
+        return {}
+    out: dict[str, str | None] = {}
+    for name in sorted(rules):
+        entry = rules[name]
+        if isinstance(entry, tuple):
+            out[name] = "+".join(entry)
+        else:
+            out[name] = entry
+    return out
+
+
 def _axis_size(mesh, entry) -> int:
     names = entry if isinstance(entry, tuple) else (entry,)
     n = 1

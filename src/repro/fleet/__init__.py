@@ -7,11 +7,12 @@ invocation, and engine layers (docs/fleet.md).
   * :mod:`repro.fleet.traffic`    — deterministic seeded workload traces
   * :mod:`repro.fleet.disagg`     — prefill/decode pool split + KV handoff
 """
-from repro.fleet.autoscaler import SLO, Autoscaler
+from repro.fleet.autoscaler import SLO, Autoscaler, choose_replica_width
 from repro.fleet.disagg import (DisaggConfig, DisaggFleetManager, HandoffTicket,
                                 KVHandoff)
 from repro.fleet.manager import (BatchWorkload, FleetConfig, FleetManager,
-                                 FleetReport, Replica, ReplicaState)
+                                 FleetReport, Replica, ReplicaState,
+                                 replica_bytes_per_chip)
 from repro.fleet.router import FleetRequest, Router
 from repro.fleet.traffic import (TraceRequest, bursty_trace, diurnal_trace,
                                  materialize, steady_trace)
@@ -20,6 +21,6 @@ __all__ = [
     "SLO", "Autoscaler", "BatchWorkload", "DisaggConfig", "DisaggFleetManager",
     "FleetConfig", "FleetManager", "FleetReport", "FleetRequest",
     "HandoffTicket", "KVHandoff", "Replica", "ReplicaState", "Router",
-    "TraceRequest", "bursty_trace", "diurnal_trace", "materialize",
-    "steady_trace",
+    "TraceRequest", "bursty_trace", "choose_replica_width", "diurnal_trace",
+    "materialize", "replica_bytes_per_chip", "steady_trace",
 ]

@@ -28,10 +28,68 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
+from typing import Sequence
 
 import numpy as np
 
-__all__ = ["SLO", "Autoscaler"]
+__all__ = ["SLO", "Autoscaler", "choose_replica_width"]
+
+
+def choose_replica_width(
+    *,
+    options: Sequence[tuple[int, ...]],
+    chip_budget: int,
+    bytes_per_chip: dict[tuple[int, ...], int],
+    hbm_bytes: int,
+    min_replicas: int = 1,
+) -> tuple[tuple[int, ...], str]:
+    """Trade replica count against shard width under a fixed chip budget.
+
+    Pure policy (unit-testable, like :class:`Autoscaler`): given candidate
+    per-replica mesh shapes, the modeled per-chip bytes of one replica at
+    each width (params + KV pool divided across its shards), and the
+    profile's per-chip HBM, pick the mesh every replica of this fleet will
+    use and say why. The rule is deliberately simple and explicit:
+
+      1. a width whose per-chip footprint exceeds HBM cannot serve at all —
+         drop it (this is what FORCES widening for big configs);
+      2. among the widths that fit, prefer the narrowest: under a fixed
+         chip budget, N narrow replicas beat N/w wide ones on aggregate
+         throughput (each wide replica pays collective overhead for the
+         same chips) and on elasticity granularity;
+      3. the chosen point must leave room for ``min_replicas`` replicas
+         inside the budget — if the only memory-fitting width cannot, it
+         is still chosen (the fleet will fail loudly at boot), but the
+         reason records the conflict.
+
+    Returns (mesh_shape, reason). The manager logs the reason in the
+    timeline so a fleet run shows WHERE on the width-vs-count curve it sat.
+    """
+    if not options:
+        raise ValueError("choose_replica_width: no width options")
+    opts = sorted(options, key=lambda s: int(np.prod(s)))
+    sized = [(o, int(np.prod(o)), bytes_per_chip[tuple(o)]) for o in opts]
+    fitting = [(o, c, b) for o, c, b in sized if b <= hbm_bytes]
+    gib = 1 / (1 << 30)
+    if not fitting:
+        o, c, b = sized[-1]  # least-oversubscribed width
+        return tuple(o), (
+            f"width {'x'.join(map(str, o))} ({c} chips/replica): no option "
+            f"fits per-chip HBM ({b * gib:.2f} GiB > {hbm_bytes * gib:.2f} "
+            f"GiB even at max width)")
+    o, c, b = fitting[0]
+    max_reps = chip_budget // c
+    dropped = [f"{'x'.join(map(str, eo))} needs {eb * gib:.2f} GiB/chip"
+               for eo, ec, eb in sized if eb > hbm_bytes and ec < c]
+    why_wide = ("; widened past " + ", ".join(dropped)) if dropped else ""
+    budget_note = ("" if max_reps >= min_replicas else
+                   f"; WARNING: only {max_reps} replicas fit the "
+                   f"{chip_budget}-chip budget (< min {min_replicas})")
+    return tuple(o), (
+        f"width {'x'.join(map(str, o))} ({c} chips/replica): per-chip "
+        f"{b * gib:.2f} GiB fits {hbm_bytes * gib:.2f} GiB HBM, up to "
+        f"{max_reps} replicas under the {chip_budget}-chip budget"
+        f"{why_wide}{budget_note}")
 
 
 @dataclasses.dataclass(frozen=True)

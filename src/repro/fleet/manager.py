@@ -38,7 +38,8 @@ import numpy as np
 
 from repro.core import recompile, scheduler
 from repro.core.invocation import InvocationService, ServingExecutor
-from repro.fleet.autoscaler import SLO, Autoscaler
+from repro.distributed import sharding as shd
+from repro.fleet.autoscaler import SLO, Autoscaler, choose_replica_width
 from repro.fleet.router import FleetRequest, Router
 from repro.ft.manager import FTManager
 from repro.serving.engine import Request, _bucket
@@ -82,6 +83,16 @@ class FleetConfig:
     kv_pages: int | None = None
     kv_watermark: float = 0.05
     prefill_chunk_tokens: int | None = None
+    # per-replica mesh geometry (None = single-chip replicas, the floor).
+    # A (1, 2) mesh makes every replica a 2-chip tensor/expert-parallel
+    # engine behind a 2-chip SERVICE lease: params + KV pools sharded by
+    # the logical-axis rules, and the lease metered across ALL its chips.
+    mesh_shape: tuple[int, ...] | None = None
+    # candidate widths for the width-vs-count policy: when set, build()
+    # calls autoscaler.choose_replica_width over these options under the
+    # cluster's chip budget and records the chosen point in the timeline
+    # (docs/sharding.md#replica-width-vs-replica-count)
+    mesh_options: tuple[tuple[int, ...], ...] | None = None
     # virtual-time knobs
     tick_s: float = 0.05          # one fused decode round per replica per tick
     warm_boot_s: float = 0.5      # in-process program bundle already compiled
@@ -94,6 +105,62 @@ class FleetConfig:
     # through the IR-boot ladder and cold compiles persist for the next
     # process (docs/ir-containers.md)
     artifact_store: Any = None
+
+
+def replica_bytes_per_chip(cfg, fleet: "FleetConfig",
+                           mesh_shape: tuple[int, ...]) -> int:
+    """Modeled per-chip device bytes of ONE replica at the given width:
+    params + the full KV pool (paged or contiguous, at this fleet's
+    geometry), each leaf divided by the product of the mesh axes its
+    logical-axis spec actually lands on. Pure shape arithmetic — abstract
+    mesh, ``eval_shape`` trees, nothing materialized — so the width policy
+    can be consulted before any engine exists (and for widths the local
+    host cannot even build)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import transformer
+
+    dt = jnp.dtype(cfg.activ_dtype)
+    params = jax.eval_shape(
+        lambda: transformer.init_model(jax.random.key(0), cfg))
+    if fleet.page_size:
+        kv_pages = fleet.kv_pages or (
+            fleet.slots * (fleet.max_len // fleet.page_size) + 1)
+        states = jax.eval_shape(lambda: transformer.init_paged_states(
+            cfg, kv_pages, fleet.page_size, dt))
+    else:
+        states = jax.eval_shape(lambda: transformer.init_states(
+            cfg, fleet.slots, fleet.max_len, dt))
+    axes = (("data", "model")[-len(mesh_shape):] if len(mesh_shape) <= 2
+            else ("pod", "data", "model")[-len(mesh_shape):])
+    # abstract mesh: guarded_spec only reads mesh.shape, so one repeated
+    # real device stands in for the whole grid
+    devs = np.array(
+        jax.devices() * int(np.prod(mesh_shape)))[: int(np.prod(mesh_shape))]
+    mesh = jax.sharding.Mesh(devs.reshape(mesh_shape), axes)
+    with shd.use_rules(dict(shd.RULES_2D), mesh):
+        pspecs = shd.param_pspecs(params)
+        sspecs = shd.state_pspecs(states)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+
+    def per_chip(leaf, spec) -> int:
+        denom = 1
+        for entry in tuple(spec):
+            if entry is None:
+                continue
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                denom *= sizes[a]
+        nbytes = int(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        return nbytes // max(denom, 1)
+
+    is_spec = lambda x: isinstance(x, jax.sharding.PartitionSpec)
+    total = 0
+    for tree, specs in ((params, pspecs), (states, sspecs)):
+        leaves = jax.tree.leaves(tree)
+        specl = jax.tree.leaves(specs, is_leaf=is_spec)
+        total += sum(per_chip(l, s) for l, s in zip(leaves, specl))
+    return total
 
 
 class Replica:
@@ -115,6 +182,10 @@ class Replica:
         self.started_s = started_s
         self.released_s: float | None = None
         self.chips = executor.lease.job.granted_chips
+        # the engine's actual mesh geometry (None for single-device): what
+        # report() surfaces per replica next to chips, so "2 chips" is
+        # visibly a (1,2) tensor-parallel grid and not two engines
+        self.mesh = shd.mesh_geometry(getattr(executor.engine, "mesh", None))
         self.hot_buckets: set[int] = set()
         self.manifest: dict | None = None
         self.last_flush_s = started_s
@@ -316,6 +387,10 @@ class FleetReport:
     ttft_virtual_p99_s: float = 0.0
     phase_metering: dict = dataclasses.field(default_factory=dict)
     disagg: dict = dataclasses.field(default_factory=dict)
+    # the chosen point on the replica-width vs replica-count curve (empty
+    # when the fleet runs fixed single-chip replicas): mesh shape, chips
+    # per replica, and the policy's reason string
+    width_decision: dict = dataclasses.field(default_factory=dict)
 
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
@@ -330,12 +405,14 @@ class FleetManager:
                  *, config: FleetConfig | None = None,
                  autoscaler: Autoscaler | None = None,
                  router: Router | None = None,
-                 batch: BatchWorkload | None = None):
+                 batch: BatchWorkload | None = None,
+                 width_decision: dict | None = None):
         self.service = service
         self.cluster = service.cluster
         self.container = container
         self.profile = profile
         self.cfg = config or FleetConfig()
+        self.width_decision = width_decision or {}
         self.autoscaler = autoscaler or Autoscaler(
             SLO(), self.cfg.min_replicas, self.cfg.max_replicas)
         self.router = router or Router()
@@ -354,6 +431,9 @@ class FleetManager:
         self.counters = {"scale_ups": 0, "scale_downs": 0, "lease_releases": 0,
                          "preempts_triggered": 0, "scale_up_failures": 0}
         self.timeline: list[tuple[float, str]] = []
+        if self.width_decision:
+            self.timeline.append(
+                (0.0, f"width decision: {self.width_decision['reason']}"))
         self.now = 0.0
         self._last_meter = 0.0
 
@@ -430,10 +510,20 @@ class FleetManager:
         if not initial:
             self.counters["scale_ups"] += 1
         ptag = f" [{pool}]" if pool else ""
+        # the width half of every elasticity step is explicit in the
+        # timeline: "added a replica (1 chip)" vs "added a widened replica
+        # (mesh 1x2, 2 chips)" — a widened scale-up spends the chip budget
+        # chips-per-replica at a time, the tradeoff the t=0 width decision
+        # picked
+        if replica.mesh is not None and replica.chips > 1:
+            geom = "x".join(str(d) for d in replica.mesh[0])
+            wtag = f" widened replica (mesh {geom}, {replica.chips} chips):"
+        else:
+            wtag = " replica (1 chip):" if not initial else ": replica"
+        verb = "boot" if initial else "scale-up: added"
         self.timeline.append(
-            (now, f"{'boot' if initial else 'scale-up'}: replica "
-                  f"{replica.replica_id}{ptag} ({boot} boot, "
-                  f"lease {ex.lease.lease_id})"))
+            (now, f"{verb}{wtag} {replica.replica_id}{ptag} "
+                  f"({boot} boot, lease {ex.lease.lease_id})"))
         return replica
 
     def drain(self, replica: Replica, now: float) -> None:
@@ -792,6 +882,10 @@ class FleetManager:
             boot=boot_summary,
             replicas=[{
                 "id": r.replica_id,
+                "chips": r.chips,
+                "mesh": (None if r.mesh is None
+                         else {"shape": list(r.mesh[0]),
+                               "axes": list(r.mesh[1])}),
                 "boot": r.boot,
                 "boot_path": r.boot_path,
                 "boot_s": round(r.boot_cost_s, 3),
@@ -819,6 +913,7 @@ class FleetManager:
                     "serve_spec_verify"),
             },
             disagg=self._disagg_summary(),
+            width_decision=dict(self.width_decision),
         )
 
     def _disagg_summary(self) -> dict:
@@ -848,7 +943,36 @@ class FleetManager:
         from repro.serving.service import serving_container
 
         fleet = fleet or FleetConfig()
-        profile = profile or recompile.PORTABLE_CPU
+        # ---- replica width: fixed by mesh_shape, or chosen over
+        # mesh_options by the width-vs-count policy under this cluster's
+        # chip budget (the chosen point lands in the timeline + report) ----
+        mesh_shape = fleet.mesh_shape
+        width_decision: dict = {}
+        if fleet.mesh_options:
+            base = profile or recompile.PORTABLE_CPU
+            per_chip = {tuple(o): replica_bytes_per_chip(cfg, fleet, tuple(o))
+                        for o in fleet.mesh_options}
+            mesh_shape, reason = choose_replica_width(
+                options=[tuple(o) for o in fleet.mesh_options],
+                chip_budget=chips, bytes_per_chip=per_chip,
+                hbm_bytes=base.hbm_bytes, min_replicas=fleet.min_replicas)
+            if int(np.prod(mesh_shape)) == 1:
+                mesh_shape = None  # narrowest point: plain 1-chip replicas
+            width_decision = {
+                "mesh_shape": list(mesh_shape) if mesh_shape else [1],
+                "chips_per_replica": (int(np.prod(mesh_shape))
+                                      if mesh_shape else 1),
+                "reason": reason,
+                "options": [list(o) for o in fleet.mesh_options],
+                "bytes_per_chip": {
+                    "x".join(map(str, k)): v for k, v in per_chip.items()},
+            }
+            fleet = dataclasses.replace(fleet, mesh_shape=mesh_shape)
+        if mesh_shape is not None:
+            if profile is None or profile.chips != int(np.prod(mesh_shape)):
+                profile = recompile.host_mesh_profile(tuple(mesh_shape))
+        else:
+            profile = profile or recompile.PORTABLE_CPU
         service = InvocationService(scheduler.Cluster(chips=chips))
         spec = None
         if fleet.spec_k > 0:
@@ -862,6 +986,7 @@ class FleetManager:
             spec=spec, page_size=fleet.page_size, kv_pages=fleet.kv_pages,
             kv_watermark=fleet.kv_watermark,
             prefill_chunk_tokens=fleet.prefill_chunk_tokens,
+            mesh_shape=mesh_shape,
             artifact_store=fleet.artifact_store)
         batch = None
         if batch_jobs:
@@ -874,4 +999,4 @@ class FleetManager:
         return cls(service, cont, profile, config=fleet,
                    autoscaler=Autoscaler(slo or SLO(), fleet.min_replicas,
                                          fleet.max_replicas),
-                   batch=batch)
+                   batch=batch, width_decision=width_decision)

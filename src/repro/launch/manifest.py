@@ -16,6 +16,7 @@ import json
 import sys
 
 from repro.core import hooks, recompile
+from repro.distributed import sharding as shd
 from repro.kernels import ops  # noqa: F401 — registers the tiers
 
 PROFILES = {
@@ -23,6 +24,7 @@ PROFILES = {
     for p in (
         recompile.PORTABLE_CPU,
         recompile.CPU_INTERPRET,
+        recompile.host_mesh_profile((1, 2)),
         recompile.TPU_V5E,
         recompile.TPU_V5E_POD,
     )
@@ -34,7 +36,18 @@ def collect(names: list[str] | None = None) -> dict:
     for name in names or list(PROFILES):
         profile = PROFILES[name]
         binding = hooks.bind(profile, probe=True)
-        out[name] = binding.manifest()
+        man = binding.manifest()
+        # resolved mesh geometry + the logical-axis rule set a container
+        # would install on this profile (XContainer.rules_for): the
+        # specialization record pairs "which tier serves each API" with
+        # "how logical axes land on the chip grid"
+        rules = (shd.RULES_3D if "pod" in profile.mesh_axes
+                 else shd.RULES_2D)
+        man["mesh"] = {"shape": list(profile.mesh_shape),
+                       "axes": list(profile.mesh_axes),
+                       "chips": profile.chips}
+        man["sharding_rules"] = shd.rule_summary(rules)
+        out[name] = man
     return out
 
 
@@ -54,6 +67,14 @@ def main(argv: list[str] | None = None) -> int:
     for pname, man in manifests.items():
         chip = PROFILES[pname].chip
         print(f"\n== {pname} ({chip}) ==")
+        mesh = man["mesh"]
+        geom = "x".join(str(d) for d in mesh["shape"])
+        axes = ",".join(mesh["axes"])
+        print(f"  mesh {geom} ({axes}) — {mesh['chips']} chip(s)")
+        srules = {k: v for k, v in man["sharding_rules"].items() if v}
+        print("  rules " + (" ".join(f"{k}->{v}"
+                                     for k, v in sorted(srules.items()))
+                            if srules else "(none)"))
         width = max(len(a) for a in man["apis"]) + 2
         for api, choice in sorted(man["apis"].items()):
             line = f"  {api:<{width}} {choice['provider']}"

@@ -18,6 +18,9 @@ Usage:
       --fleet [--trace bursty|diurnal|steady] [--max-replicas 4]
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --smoke \
       --fleet --disagg [--prefill-pool 1 2] [--decode-pool 1 2]
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 PYTHONPATH=src \
+      python -m repro.launch.serve --arch deepseek-v3-671b --smoke \
+      --mesh 1x2   # tensor/expert-parallel sharded replica
 """
 from __future__ import annotations
 
@@ -48,7 +51,8 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         page_size: int | None = None, kv_pages: int | None = None,
         kv_watermark: float = 0.05,
         prefill_chunk_tokens: int | None = None,
-        artifact_store_dir: str | None = None) -> dict:
+        artifact_store_dir: str | None = None,
+        mesh: tuple[int, ...] | None = None) -> dict:
     arch = arch_id + ("-smoke" if smoke and not arch_id.endswith("-smoke") else "")
     cfg = configs.get_config(arch)
     rng = np.random.default_rng(seed)
@@ -67,6 +71,14 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
 
     # control plane: schedule chips, deploy the container, boot the engine
     profile = recompile.PORTABLE_CPU
+    if mesh is not None and int(np.prod(mesh)) > 1:
+        need = int(np.prod(mesh))
+        if jax.device_count() < need:
+            raise SystemExit(
+                f"--mesh {'x'.join(map(str, mesh))} needs {need} devices but "
+                f"only {jax.device_count()} visible; on CPU set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={need}")
+        profile = recompile.host_mesh_profile(tuple(mesh))
     cont = serving_container(cfg, params, slots=slots, max_len=max_len,
                              prompt_buckets=(32, 64, 128), fused=fused,
                              sync_every=sync_every,
@@ -74,7 +86,9 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
                              or None, spec=spec, page_size=page_size,
                              kv_pages=kv_pages, kv_watermark=kv_watermark,
                              prefill_chunk_tokens=prefill_chunk_tokens,
-                             artifact_store=store)
+                             artifact_store=store,
+                             mesh_shape=(tuple(mesh) if mesh is not None
+                                         and int(np.prod(mesh)) > 1 else None))
     cluster = scheduler.Cluster(chips=profile.chips)
     service = InvocationService(cluster)
     # the executor is a context manager: the SERVICE lease is released on
@@ -91,6 +105,11 @@ def run(arch_id: str, *, requests: int = 8, max_new: int = 16,
         if boot.get("fallthrough"):
             for why in boot["fallthrough"]:
                 print(f"  boot fallthrough: {why}")
+        mman = (man or {}).get("mesh")
+        if mman and int(np.prod(mman["shape"])) > 1:
+            print(f"mesh {'x'.join(str(d) for d in mman['shape'])} "
+                  f"({','.join(mman['axes'])}) — sharded replica on "
+                  f"{executor.lease.chips} leased chips")
 
         lead = (cfg.num_codebooks,) if cfg.frontend == "audio" else ()
         sys_prompt = rng.integers(0, cfg.vocab_size,
@@ -166,6 +185,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
               draft_arch: str | None = None, page_size: int | None = None,
               kv_pages: int | None = None,
               artifact_store_dir: str | None = None,
+              mesh: tuple[int, ...] | None = None,
+              mesh_options: tuple[tuple[int, ...], ...] | None = None,
               disagg: bool = False, prefill_min: int = 1,
               prefill_max: int = 2, decode_min: int = 1,
               decode_max: int = 2) -> dict:
@@ -201,7 +222,9 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
                                spec_k=spec_k, spec_proposer=spec_proposer,
                                spec_draft_arch=draft_arch,
                                page_size=page_size, kv_pages=kv_pages,
-                               artifact_store=store)
+                               artifact_store=store,
+                               mesh_shape=(tuple(mesh) if mesh else None),
+                               mesh_options=mesh_options)
     if disagg:
         fm = fl.DisaggFleetManager.build(
             cfg, params, chips=chips, fleet=fleet_cfg,
@@ -227,6 +250,8 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
           f"scale-downs, {report.lease_releases} lease releases, "
           f"{report.preemptions} batch preemptions "
           f"({report.batch.get('resumes', 0)} checkpoint-resumes)")
+    if report.width_decision:
+        print(f"replica width: {report.width_decision['reason']}")
     pc = report.prefix_cache
     if pc.get("enabled"):
         print(f"prefix cache: {pc['hits']}/{pc['hits'] + pc['misses']} hits "
@@ -276,6 +301,16 @@ def run_fleet(arch_id: str, *, trace_kind: str = "bursty", smoke: bool = True,
     return {"report": report, "manager": fm}
 
 
+def _parse_mesh(text: str) -> tuple[int, ...]:
+    try:
+        shape = tuple(int(d) for d in text.lower().split("x"))
+        assert shape and all(d >= 1 for d in shape)
+        return shape
+    except (ValueError, AssertionError):
+        raise argparse.ArgumentTypeError(
+            f"mesh {text!r} is not DxM (e.g. 1x2)") from None
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
@@ -323,6 +358,18 @@ def main() -> None:
                     choices=["ngram", "draft"])
     ap.add_argument("--draft-arch", default=None,
                     help="draft model config id (with --spec-proposer draft)")
+    ap.add_argument("--mesh", type=_parse_mesh, default=None, metavar="DxM",
+                    help="per-replica mesh geometry, e.g. 1x2: shards the "
+                         "data plane tensor/expert-parallel across that many "
+                         "chips (on CPU set XLA_FLAGS=--xla_force_host_"
+                         "platform_device_count=N first). In --fleet mode "
+                         "fixes every replica's width; unset keeps the "
+                         "single-device portability floor")
+    ap.add_argument("--mesh-options", default=None, metavar="DxM,DxM,...",
+                    help="with --fleet: candidate replica widths; the "
+                         "manager picks the narrowest whose per-chip "
+                         "footprint fits HBM and logs the width-vs-count "
+                         "decision in the timeline")
     ap.add_argument("--artifact-store", default=None, metavar="DIR",
                     help="persistent AOT artifact store directory: first run "
                          "cold-boots and persists serialized executables, "
@@ -351,6 +398,10 @@ def main() -> None:
                   draft_arch=args.draft_arch, page_size=args.page_size,
                   kv_pages=args.kv_pages,
                   artifact_store_dir=args.artifact_store,
+                  mesh=args.mesh,
+                  mesh_options=(tuple(_parse_mesh(m) for m in
+                                      args.mesh_options.split(","))
+                                if args.mesh_options else None),
                   disagg=args.disagg,
                   prefill_min=args.prefill_pool[0],
                   prefill_max=args.prefill_pool[1],
@@ -368,7 +419,8 @@ def main() -> None:
               page_size=args.page_size, kv_pages=args.kv_pages,
               kv_watermark=args.kv_watermark,
               prefill_chunk_tokens=args.prefill_chunk,
-              artifact_store_dir=args.artifact_store)
+              artifact_store_dir=args.artifact_store,
+              mesh=args.mesh)
     assert len(out["results"]) == args.requests
     assert out["ledger_tokens"] == out["tokens"]
 

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import aot, hooks
+from repro.distributed import sharding as shd
 from repro.models import transformer
 from repro.serving import speculative
 from repro.serving.block_manager import (BlockManager, PagedPrefixCache,
@@ -376,9 +377,14 @@ _PROGRAMS: dict[tuple, _Programs] = {}
 
 
 def _programs_for(cfg, slots: int, max_len: int,
-                  binding: hooks.Binding | None) -> _Programs:
+                  binding: hooks.Binding | None,
+                  mesh_key=None) -> _Programs:
     tiers = None if binding is None else binding.tier_fingerprint()
-    key = (cfg, slots, max_len, tiers)
+    # mesh geometry is part of program identity: the same arch x slot
+    # geometry traced under a (1,2) mesh compiles different (SPMD) programs
+    # than the single-device floor, and an engine must never serve through a
+    # bundle traced for another mesh
+    key = (cfg, slots, max_len, tiers, mesh_key)
     prog = _PROGRAMS.get(key)
     if prog is None:
         prog = _PROGRAMS[key] = _Programs(cfg, slots, max_len)
@@ -607,13 +613,14 @@ _PAGED_PROGRAMS: dict[tuple, _PagedPrograms] = {}
 def _paged_programs_for(cfg, slots: int, max_len: int, page_size: int,
                         num_pages: int,
                         binding: hooks.Binding | None,
-                        role: str = "both") -> _PagedPrograms:
+                        role: str = "both",
+                        mesh_key=None) -> _PagedPrograms:
     tiers = None if binding is None else binding.tier_fingerprint()
     # role is in the key even though the programs are role-agnostic: a
     # phase-specialized pool's bundle must contain exactly ITS programs
     # (a decode replica's persisted artifact never carries — or recompiles —
-    # the prefill pool's wide chunk programs)
-    key = (cfg, slots, max_len, page_size, num_pages, tiers, role)
+    # the prefill pool's wide chunk programs). mesh_key: see _programs_for.
+    key = (cfg, slots, max_len, page_size, num_pages, tiers, role, mesh_key)
     prog = _PAGED_PROGRAMS.get(key)
     if prog is None:
         prog = _PAGED_PROGRAMS[key] = _PagedPrograms(
@@ -675,11 +682,31 @@ class ServingEngine:
         prefill_chunk_tokens: int | None = None,
         role: str = "both",
         artifact_store=None,
+        mesh: jax.sharding.Mesh | None = None,
+        rules: shd.Rules | None = None,
     ):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.max_len = max_len
+        # ---- per-deployment mesh + sharding rules: every data-plane
+        # program (fused decode/sample, chunked prefill, spec verify, paged
+        # KV ops) traces under `use_rules(rules, mesh)` so the model code's
+        # logical-axis constraint() annotations resolve to real mesh axes.
+        # mesh=None is the untouched portability floor: constraints no-op,
+        # programs trace single-device, bundle keys unchanged. ----
+        if mesh is not None and rules is None:
+            rules = dict(shd.RULES_2D)
+        if mesh is not None and int(mesh.shape.get("data", 1)) > 1:
+            # a serving replica shards model/expert-parallel only; data
+            # parallelism is MORE replicas (the fleet's width-vs-count
+            # tradeoff), not a batch axis inside one engine
+            raise ValueError(
+                f"serving mesh {dict(mesh.shape)} has data axis > 1; use a "
+                f"(1, M) mesh and scale replica COUNT for data parallelism")
+        self.mesh = mesh
+        self.rules = rules if mesh is not None else None
+        self._mesh_key = shd.mesh_geometry(mesh)
         # persistent AOT artifact store (checkpoint.store.ArtifactStore or
         # None): enables the IR-boot rung of warmup()'s boot ladder —
         # compiled executables serialized by a previous process deserialize
@@ -794,6 +821,21 @@ class ServingEngine:
             "eos": jnp.full((slots,), -1, jnp.int32),
             "last": self._zero_tokens(slots),
         }
+        if self.mesh is not None:
+            # NamedSharding placement from the logical-axis rule trees:
+            # params via PARAM_RULES (MoE expert weights land expert-parallel
+            # on the model axis), KV pools / recurrent states via STATE_RULES
+            # (kv_heads on model; slot/page axis on data). The small (B,)
+            # control block replicates — it is host-mirrored every step.
+            with shd.use_rules(self.rules, self.mesh):
+                self.params = jax.device_put(
+                    self.params, shd.param_shardings(self.params, self.mesh))
+                self.states = jax.device_put(
+                    self.states, shd.state_shardings(self.states, self.mesh))
+            rep = jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec())
+            self.ctrl = {k: jax.device_put(v, rep)
+                         for k, v in self.ctrl.items()}
         # host-side slot table (control plane only)
         self.active: list[Request | None] = [None] * slots
         self.generated: list[list] = [[] for _ in range(slots)]
@@ -843,7 +885,7 @@ class ServingEngine:
         if self.paged:
             pprogs = _paged_programs_for(
                 cfg, slots, max_len, page_size, self.kv_pages, binding,
-                role=self.role)
+                role=self.role, mesh_key=self._mesh_key)
             self._paged_progs = pprogs
             self._fused_step_paged = pprogs.fused_step
             self._prefill_chunk_paged = pprogs.prefill_chunk
@@ -868,7 +910,8 @@ class ServingEngine:
                                  page_bytes=self.page_bytes)
                 if prefix_cache_bytes else None)
         else:
-            progs = _programs_for(cfg, slots, max_len, binding)
+            progs = _programs_for(cfg, slots, max_len, binding,
+                                  mesh_key=self._mesh_key)
             self._progs = progs
             self._fused_step = progs.fused_step
             self._prefill_chunk = progs.prefill_chunk
@@ -954,17 +997,30 @@ class ServingEngine:
             "kv_pages": getattr(self, "kv_pages", None),
             "chunk_widths": self._chunk_widths if self.paged else None,
             "prefix_cache": self.prefix_cache is not None,
+            # mesh geometry fingerprint: IR-boot must never install an
+            # executable traced for a different device grid — a (1,2)
+            # bundle deserialized onto a single-device replica (or vice
+            # versa) would crash or silently misplace every array
+            "mesh": self._mesh_key,
         }
         self._bundle_key = aot.bundle_key(self._aot_fields)
 
     # ------------------------------------------------------------------
     def _bound(self):
-        """Hook-binding scope for data-plane tracing: jit programs trace on
-        first call, and the trace must happen under the deployment's binding
-        for the probed tiers to actually serve traffic."""
-        if self.binding is None:
-            return contextlib.nullcontext()
-        return hooks.use(self.binding)
+        """Tracing/execution scope for the data plane: jit programs trace on
+        first call, and the trace must happen under (a) the deployment's
+        hook binding so the probed tiers actually serve traffic, and (b) the
+        deployment's mesh + sharding rules so the model's logical-axis
+        constraints resolve to mesh axes and every program lowers SPMD.
+        Unsharded engines with no binding get a plain nullcontext — the
+        portability floor stays byte-identical."""
+        stack = contextlib.ExitStack()
+        if self.mesh is not None:
+            stack.enter_context(self.mesh)
+            stack.enter_context(shd.use_rules(self.rules, self.mesh))
+        if self.binding is not None:
+            stack.enter_context(hooks.use(self.binding))
+        return stack
 
     def _aot_registry(self) -> aot.AotRegistry:
         return (self._paged_progs if self.paged else self._progs).aot

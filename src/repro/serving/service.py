@@ -41,6 +41,8 @@ def serving_container(
     role: str = "both",
     name: str | None = None,
     artifact_store=None,
+    mesh_shape: tuple[int, ...] | None = None,
+    rules=None,
 ) -> xcontainer.XContainer:
     """Build a deployable serving container for one model.
 
@@ -55,6 +57,17 @@ def serving_container(
     engine's whole data-plane bundle persist as serialized executables, so
     a later PROCESS boots from cached IR instead of re-tracing (the
     IR-boot rung — docs/ir-containers.md).
+
+    ``mesh_shape`` makes every engine booted from this container a
+    *sharded* replica: its data plane traces under ``use_rules`` on a mesh
+    of that geometry (the deployment's own mesh when it matches, else one
+    built from the local devices), params and KV pools get NamedShardings
+    from the logical-axis rule trees, and the SERVICE lease must be
+    acquired against a profile whose ``chips`` equals the mesh size so
+    metering bills every chip the replica spans. ``rules`` overrides the
+    deployment's logical-axis rule set (default: the deployment's own —
+    RULES_2D/RULES_3D by profile). ``mesh_shape=None`` keeps today's
+    single-device engine untouched (the portability floor).
     """
     dt = jnp.dtype(cfg.activ_dtype)
 
@@ -79,6 +92,20 @@ def serving_container(
         if spec is not None and draft_params is not None:
             from repro.serving.speculative import make_proposer
             proposer = make_proposer(spec, cfg, draft_params=draft_params)
+        mesh = None
+        eng_rules = None
+        if mesh_shape is not None:
+            # prefer the deployment's own mesh (built from the lease's
+            # profile) so the engine shards exactly the devices the lease
+            # granted; build one only when the profile is single-device
+            # (e.g. a sharded container deployed for offline tracing)
+            dep_geom = tuple(int(s) for s in deployment.mesh.devices.shape)
+            if dep_geom == tuple(mesh_shape):
+                mesh = deployment.mesh
+            else:
+                axes = ("data", "model")[-len(mesh_shape):]
+                mesh = jax.make_mesh(tuple(mesh_shape), axes)
+            eng_rules = rules if rules is not None else deployment.rules
         return ServingEngine(
             cfg, params, slots=slots, max_len=max_len,
             prompt_buckets=prompt_buckets, fused=fused, sync_every=sync_every,
@@ -89,6 +116,7 @@ def serving_container(
             prefill_chunk_tokens=prefill_chunk_tokens,
             role=role,
             artifact_store=artifact_store,
+            mesh=mesh, rules=eng_rules,
             binding=deployment.binding, manifest=deployment.manifest())
 
     # geometry in the name: the warm-deployment cache keys on (name, profile),
@@ -97,8 +125,11 @@ def serving_container(
     # compiled decode artifact
     paged_tag = f"-p{page_size}x{kv_pages or 0}" if page_size else ""
     role_tag = f"-{role}" if role != "both" else ""
+    mesh_tag = ("-m" + "x".join(str(int(d)) for d in mesh_shape)
+                if mesh_shape else "")
     return xcontainer.XContainer(
-        name=name or f"serve-{cfg.name}-b{slots}x{max_len}{paged_tag}{role_tag}",
+        name=name or (f"serve-{cfg.name}-b{slots}x{max_len}"
+                      f"{paged_tag}{role_tag}{mesh_tag}"),
         entrypoints={"decode": (decode_fn, make_args)},
         meta={
             "engine_factory": engine_factory,

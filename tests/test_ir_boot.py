@@ -141,6 +141,29 @@ def test_stale_tier_binding_falls_through_to_cold(tmp_path):
     assert "stale artifact" in reasons and "tiers" in reasons
 
 
+@pytest.mark.skipif(jax.device_count() < 2,
+                    reason="needs >=2 devices (XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8)")
+def test_stale_mesh_falls_through_to_cold(tmp_path):
+    """Executables persisted by a single-device engine must never IR-boot a
+    sharded replica: the mesh geometry is in the bundle key, and the boot
+    manifest explains the miss with the mesh diff first."""
+    cfg, params = _model()
+    store = ArtifactStore(tmp_path / "store")
+    clear_program_caches()
+    ServingEngine(cfg, params, artifact_store=store, **GEOM).warmup()
+    assert store.keys()
+
+    clear_program_caches()
+    mesh = jax.make_mesh((1, 2), ("data", "model"))
+    e = ServingEngine(cfg, params, artifact_store=store, mesh=mesh, **GEOM)
+    assert e.boot_path_preview() == "cold"
+    m = e.warmup()
+    assert m["boot"]["path"] == "cold"
+    reasons = " ".join(m["boot"]["fallthrough"])
+    assert "stale artifact" in reasons and "mesh" in reasons
+
+
 def test_corrupt_artifact_falls_through_without_raising(tmp_path):
     cfg, params = _model()
     store = ArtifactStore(tmp_path / "store")

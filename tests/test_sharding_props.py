@@ -1,0 +1,48 @@
+"""Hypothesis property tests for guarded_spec.
+
+Split from test_sharding.py so the deterministic sharding tests (rule
+totality, sharded-vs-unsharded stream parity) still collect in environments
+without hypothesis — conftest auto-ignores *_props.py modules there.
+"""
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.distributed import sharding as shd
+
+
+def _mesh(shape=(2, 4), axes=("data", "model")):
+    # multiple *logical* devices are not needed: guarded_spec only reads
+    # mesh.shape, so a 1-device abstract mesh works
+    devs = np.array(jax.devices() * int(np.prod(shape)))[: int(np.prod(shape))]
+    return jax.sharding.Mesh(devs.reshape(shape), axes)
+
+
+MESH = _mesh()
+
+
+@given(
+    dims=st.lists(st.integers(1, 64), min_size=1, max_size=4),
+    names=st.lists(
+        st.sampled_from(["batch", "heads", "ff", "embed", None]),
+        min_size=1, max_size=4),
+)
+@settings(max_examples=200, deadline=None)
+def test_guarded_spec_properties(dims, names):
+    """Invariants: never uses a mesh axis twice; every kept axis divides its
+    dim; length <= ndim."""
+    n = min(len(dims), len(names))
+    dims, names = tuple(dims[:n]), tuple(names[:n])
+    with shd.use_rules(dict(shd.RULES_2D), MESH):
+        spec = shd.guarded_spec(dims, names)
+    used = []
+    sizes = dict(zip(MESH.axis_names, MESH.devices.shape))
+    for dim, entry in zip(dims, tuple(spec)):
+        if entry is None:
+            continue
+        es = entry if isinstance(entry, tuple) else (entry,)
+        for a in es:
+            assert a not in used, f"axis {a} used twice in {spec}"
+            used.append(a)
+        total = int(np.prod([sizes[a] for a in es]))
+        assert dim % total == 0, f"{dim} % {total} != 0 in {spec}"
